@@ -1,0 +1,42 @@
+"""Benchmark helpers: timing, metrics, CSV rows."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, **derived) -> None:
+    d = "|".join(f"{k}={v}" for k, v in derived.items())
+    ROWS.append((name, us_per_call, d))
+    print(f"{name},{us_per_call:.2f},{d}", flush=True)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.monotonic()
+    out = fn(*args, **kw)
+    return out, (time.monotonic() - t0)
+
+
+def ndcg_at_k(ranked_ids, relevance: dict, k: int = 10) -> float:
+    """relevance: id -> gain."""
+    gains = [relevance.get(i, 0.0) for i in ranked_ids[:k]]
+    dcg = sum(g / np.log2(r + 2) for r, g in enumerate(gains))
+    ideal = sorted(relevance.values(), reverse=True)[:k]
+    idcg = sum(g / np.log2(r + 2) for r, g in enumerate(ideal))
+    return float(dcg / idcg) if idcg > 0 else 0.0
+
+
+def rank_precision_at_k(ranked_ids, truth: set, k: int) -> float:
+    """RP@k (BioDEX metric): fraction of top-k that are true labels."""
+    top = ranked_ids[:k]
+    return len([i for i in top if i in truth]) / min(k, max(len(truth), 1))
+
+
+def set_metrics(got: set, want: set) -> tuple[float, float]:
+    inter = len(got & want)
+    recall = inter / max(len(want), 1)
+    precision = inter / max(len(got), 1)
+    return recall, precision

@@ -1,0 +1,31 @@
+"""Serving-engine microbenchmarks on a tiny real model (CPU): continuous
+batching throughput + single-token predicate scoring latency."""
+import time
+
+import numpy as np
+
+from benchmarks._util import emit
+from repro.configs import get_smoke
+from repro.data.tokenizer import TOKENIZER
+from repro.engine.engine import InferenceEngine
+
+
+def run() -> None:
+    cfg = get_smoke("llama3.2-3b").with_(vocab_size=TOKENIZER.vocab_size)
+    eng = InferenceEngine(cfg, max_slots=4, max_seq=160)
+    prompts = [f"benchmark request {i} with some padding text" for i in range(8)]
+    eng.generate(prompts[:2], max_new_tokens=4)  # warmup/compile
+
+    t0 = time.monotonic()
+    outs = eng.generate(prompts, max_new_tokens=16)
+    dt = time.monotonic() - t0
+    toks = sum(len(TOKENIZER.encode(o, bos=False)) for o in outs)
+    emit("engine/continuous_batching", 1e6 * dt / max(toks, 1),
+         tok_per_s=round(toks / dt, 1), requests=len(prompts))
+
+    eng.predicate(prompts[:2])  # warmup
+    t0 = time.monotonic()
+    eng.predicate(prompts * 4)
+    dt = time.monotonic() - t0
+    emit("engine/predicate_scoring", 1e6 * dt / (len(prompts) * 4),
+         calls=len(prompts) * 4)

@@ -1,0 +1,31 @@
+"""Fig 6 analogue: accuracy/cost trade-off of the filter cascade as targets
+vary, against proxy-only and oracle-only endpoints."""
+import numpy as np
+
+from benchmarks._util import emit, set_metrics
+from repro.core.backends import synth
+from repro.core.frame import Session
+from repro.core.operators.filter import sem_filter_cascade, sem_filter_gold
+
+N = 600
+
+
+def run() -> None:
+    records, world, oracle, proxy, _ = synth.make_filter_world(N, proxy_alpha=1.8, seed=5)
+    sess = Session(oracle=oracle, proxy=proxy)
+    gold, _ = sem_filter_gold(records, "{claim} holds", sess.oracle)
+    gold_ids = set(np.flatnonzero(gold).tolist())
+
+    passed, _ = sess.proxy.predicate([f"does it hold? {t['claim']}" for t in records])
+    r, p = set_metrics(set(np.flatnonzero(passed).tolist()), gold_ids)
+    emit("fig6/proxy_only", float("nan"), recall=round(r, 3), precision=round(p, 3),
+         oracle_calls=0)
+    emit("fig6/oracle_only", float("nan"), recall=1.0, precision=1.0, oracle_calls=N)
+
+    for tgt in (0.7, 0.8, 0.9, 0.95):
+        mask, st = sem_filter_cascade(records, "{claim} holds", sess.oracle, sess.proxy,
+                                      recall_target=tgt, precision_target=tgt,
+                                      delta=0.2, sample_size=100, seed=6)
+        r, p = set_metrics(set(np.flatnonzero(mask).tolist()), gold_ids)
+        emit(f"fig6/cascade_t{tgt}", float("nan"), recall=round(r, 3),
+             precision=round(p, 3), oracle_calls=st["oracle_calls"])

@@ -1,0 +1,26 @@
+"""Fig 8 analogue: sem_group_by classification accuracy vs oracle cost."""
+import numpy as np
+
+from benchmarks._util import emit
+from repro.core.backends import synth
+from repro.core.frame import Session
+from repro.core.operators.groupby import sem_group_by_cascade, sem_group_by_gold
+
+N, C = 400, 5
+
+
+def run() -> None:
+    records, world, model, emb = synth.make_topic_world(N, C, seed=7)
+    sess = Session(oracle=model, embedder=emb)
+    gold = sem_group_by_gold(records, "topic of {paper}", C, sess.oracle,
+                             sess.embedder, seed=0)
+    emit("fig8/oracle_only", float("nan"), accuracy=1.0, oracle_calls=N)
+
+    for tgt in (0.75, 0.85, 0.95):
+        opt = sem_group_by_cascade(records, "topic of {paper}", C, sess.oracle,
+                                   sess.embedder, accuracy_target=tgt, delta=0.2,
+                                   sample_size=150, seed=0)
+        acc = float(np.mean(gold.assignment == opt.assignment))
+        emit(f"fig8/cascade_t{tgt}", float("nan"), accuracy=round(acc, 3),
+             oracle_calls=opt.stats["oracle_classified"],
+             proxy_assigned=opt.stats["proxy_classified"])

@@ -1,0 +1,30 @@
+"""Fig 9 analogue: observed failure probability vs configured delta."""
+import numpy as np
+
+from benchmarks._util import emit, set_metrics
+from repro.core.backends import synth
+from repro.core.frame import Session
+from repro.core.operators.filter import sem_filter_cascade, sem_filter_gold
+
+TRIALS = 25  # binomial noise ~ +/-0.08; see tests/test_guarantees.py
+
+
+def run() -> None:
+    for delta in (0.1, 0.2, 0.4):
+        fails, ocalls = 0, []
+        for t in range(TRIALS):
+            records, world, oracle, proxy, _ = synth.make_filter_world(
+                400, proxy_alpha=1.5, seed=800 + t)
+            sess = Session(oracle=oracle, proxy=proxy)
+            gold, _ = sem_filter_gold(records, "{claim} holds", sess.oracle)
+            mask, st = sem_filter_cascade(records, "{claim} holds", sess.oracle,
+                                          sess.proxy, recall_target=0.9,
+                                          precision_target=0.9, delta=delta,
+                                          sample_size=100, seed=t)
+            r, p = set_metrics(set(np.flatnonzero(mask).tolist()),
+                               set(np.flatnonzero(gold).tolist()))
+            fails += (r < 0.9) or (p < 0.9)
+            ocalls.append(st["oracle_calls"])
+        emit(f"fig9/delta{delta}", float("nan"),
+             observed_failure=round(fails / TRIALS, 3), configured=delta,
+             mean_oracle_calls=round(float(np.mean(ocalls)), 1))

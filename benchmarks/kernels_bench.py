@@ -1,0 +1,33 @@
+"""Kernel-path microbenchmarks (jnp reference path on CPU; the Pallas
+kernels target TPU and are correctness-validated in interpret mode)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._util import emit
+from repro.kernels import ops
+
+
+def run() -> None:
+    q = np.random.default_rng(0).normal(size=(512, 256)).astype(np.float32)
+    c = np.random.default_rng(1).normal(size=(4096, 256)).astype(np.float32)
+    ops.similarity(q[:8], c[:8])  # warmup
+    t0 = time.monotonic()
+    for _ in range(5):
+        ops.similarity(q, c)
+    dt = (time.monotonic() - t0) / 5
+    emit("kernels/similarity_512x4096", 1e6 * dt, gflops=round(2 * 512 * 4096 * 256 / dt / 1e9, 1))
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    qq = jax.random.normal(ks[0], (2, 512, 8, 64), jnp.float32)
+    kk = jax.random.normal(ks[1], (2, 512, 2, 64), jnp.float32)
+    vv = jax.random.normal(ks[2], (2, 512, 2, 64), jnp.float32)
+    f = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, impl="ref"))
+    f(qq, kk, vv).block_until_ready()
+    t0 = time.monotonic()
+    for _ in range(5):
+        f(qq, kk, vv).block_until_ready()
+    dt = (time.monotonic() - t0) / 5
+    emit("kernels/attention_ref_2x512", 1e6 * dt)

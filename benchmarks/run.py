@@ -1,0 +1,45 @@
+"""Benchmark harness: one module per paper table/figure (see DESIGN.md §8).
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--only tableN]
+"""
+import argparse
+import sys
+import time
+
+from benchmarks import (engine_bench, fig6_filter_tradeoff, fig8_groupby,
+                        fig9_guarantees, kernels_bench, table2_factcheck,
+                        table3_biodex, table5_join_plans, table6_7_ranking)
+
+MODULES = {
+    "table2": table2_factcheck,
+    "table3": table3_biodex,
+    "table5": table5_join_plans,
+    "table6_7": table6_7_ranking,
+    "fig6": fig6_filter_tradeoff,
+    "fig8": fig8_groupby,
+    "fig9": fig9_guarantees,
+    "engine": engine_bench,
+    "kernels": kernels_bench,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated module keys")
+    args = ap.parse_args()
+    keys = args.only.split(",") if args.only else list(MODULES)
+    print("name,us_per_call,derived")
+    t0 = time.monotonic()
+    for k in keys:
+        try:
+            MODULES[k].run()
+        except Exception as e:  # pragma: no cover
+            print(f"{k}/ERROR,nan,{type(e).__name__}:{e}", flush=True)
+            raise
+    print(f"# total {time.monotonic()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

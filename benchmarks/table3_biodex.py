@@ -1,0 +1,94 @@
+"""Table 3/4 analogue: extreme multilabel classification via sem_join on a
+synthetic BioDEX (left articles x right reaction labels)."""
+import time
+
+import numpy as np
+
+from benchmarks._util import emit, rank_precision_at_k
+from repro.core.backends import synth
+from repro.core.frame import SemFrame, Session
+from repro.core.operators.search import sem_index, sem_sim_join
+
+N1, N2 = 150, 300  # 45k candidate pairs
+
+
+def run() -> None:
+    from repro.core.backends.simulated import SimConfig
+    left, right, world, oracle, proxy, emb = synth.make_join_world(
+        N1, N2, labels_per_left=1, sim_correlation=0.0, seed=1,
+        cfg=SimConfig(sim_correlation=0.0, label_noise=0.03))
+    sess = Session(oracle=oracle, proxy=proxy, embedder=emb, sample_size=1500)
+    truth = {l["id"]: {r for (a, r), v in world.join_truth.items() if v and a == l["id"]}
+             for l in left}
+
+    # search baseline: pure similarity join (no LM calls)
+    t0 = time.monotonic()
+    idx = sem_index([t["reaction"] for t in right], sess.embedder)
+    scores, top, _ = sem_sim_join([t["abstract"] for t in left], idx, sess.embedder, k=5)
+    t_search = time.monotonic() - t0
+    rp5 = np.mean([rank_precision_at_k([right[j]["id"] for j in top[i]],
+                                       truth[left[i]["id"]], 5) for i in range(N1)])
+    emit("table3/search", 1e6 * t_search / N1, rp5=round(float(rp5), 3), lm_calls=0)
+
+    # gold nested-loop join: the quadratic cost the optimizer avoids
+    emit("table3/gold_join_estimated", float("nan"), lm_calls=N1 * N2,
+         note="quadratic_oracle_pass")
+
+    # optimized LOTUS join
+    sf = SemFrame(left, sess)
+    t0 = time.monotonic()
+    joined = sf.sem_join(right, "the {abstract} reports the {reaction:right}",
+                         recall_target=0.85, precision_target=0.85, delta=0.2)
+    t_join = time.monotonic() - t0
+    st = sf.last_stats()
+    got = {}
+    for t in joined.records:
+        got.setdefault(t["id"], set()).add(t["right_id"])
+    rp5 = np.mean([rank_precision_at_k(sorted(got.get(l["id"], set())),
+                                       truth[l["id"]], 5) for l in left])
+    speedup = (N1 * N2) / max(st["lm_calls"], 1)
+    emit("table3/lotus_join", 1e6 * t_join / N1, rp5=round(float(rp5), 3),
+         lm_calls=st["lm_calls"], plan=st["plan"],
+         speedup_vs_gold=round(speedup, 1))
+
+    # XL row: the oracle-call saving is ~scale-independent with a good proxy,
+    # so the speedup grows with |T1 x T2| (the paper's 1,000x is at 250 x
+    # 24,000 labels; BioDEX-XL here is 200 x 2,500 = 500k pairs).
+    n1x, n2x = 200, 2500
+    from repro.core.backends.simulated import SimConfig as _SC
+    lx, rx, wx, ox, px, ex = synth.make_join_world(
+        n1x, n2x, labels_per_left=1, sim_correlation=0.0, seed=9,
+        cfg=_SC(sim_correlation=0.0, label_noise=0.03))
+    truth_x = {l["id"]: {r for (a, r), v in wx.join_truth.items() if v and a == l["id"]}
+               for l in lx}
+
+    def _run_xl(sample_size, tag):
+        sess_x = Session(oracle=ox, proxy=px, embedder=ex, sample_size=sample_size)
+        sfx = SemFrame(lx, sess_x)
+        t0 = time.monotonic()
+        joined_x = sfx.sem_join(rx, "the {abstract} reports the {reaction:right}",
+                                recall_target=0.85, precision_target=0.85, delta=0.2)
+        t_x = time.monotonic() - t0
+        st_x = sfx.last_stats()
+        got_x = {}
+        for t in joined_x.records:
+            got_x.setdefault(t["id"], set()).add(t["right_id"])
+        rp5_x = np.mean([rank_precision_at_k(sorted(got_x.get(l["id"], set())),
+                                             truth_x[l["id"]], 5) for l in lx])
+        emit(f"table3/lotus_join_xl_{tag}", 1e6 * t_x / n1x,
+             rp5=round(float(rp5_x), 3), lm_calls=st_x["lm_calls"],
+             plan=st_x["plan"], gold_calls=n1x * n2x, sample=sample_size,
+             speedup_vs_gold=round(n1x * n2x / max(st_x["lm_calls"], 1), 1))
+
+    # certifying recall at a 0.04% positive base rate needs enough observed
+    # positives (Wilson-corrected bounds; see core/optimizer/stats.py) —
+    # the sample is the price of the guarantee at extreme skew:
+    _run_xl(8000, "guaranteed")
+    # the paper's operating point (CLT-only bounds, small sample): far fewer
+    # calls; the guarantee is then only as strong as the CLT approximation
+    from repro.core.optimizer import stats as _stats
+    _stats.FINITE_SAMPLE_GUARD = False
+    try:
+        _run_xl(500, "paper_regime")
+    finally:
+        _stats.FINITE_SAMPLE_GUARD = True

@@ -1,0 +1,29 @@
+"""Table 5 analogue: candidate join plans vs the optimizer's choice, in the
+regime where raw similarity is uninformative (projection required)."""
+import numpy as np
+
+from benchmarks._util import emit, set_metrics
+from repro.core.backends import synth
+from repro.core.frame import SemFrame, Session
+from repro.core.operators.join import sem_join_cascade, sem_join_gold
+
+
+def run() -> None:
+    left, right, world, oracle, proxy, emb = synth.make_join_world(
+        60, 40, labels_per_left=1, sim_correlation=0.0, seed=2)
+    sess = Session(oracle=oracle, proxy=proxy, embedder=emb, sample_size=400)
+    langex = "the {abstract} reports the {reaction:right}"
+    gold, _ = sem_join_gold(left, right, langex, sess.oracle)
+    want = {(i, j) for i in range(60) for j in range(40) if gold[i, j]}
+
+    for plan in ("sim-filter", "project-sim-filter", None):
+        mask, st = sem_join_cascade(left, right, langex, sess.oracle, sess.embedder,
+                                    recall_target=0.85, precision_target=0.85,
+                                    delta=0.2, sample_size=400, seed=3,
+                                    force_plan=plan)
+        got = {(i, j) for i in range(60) for j in range(40) if mask[i, j]}
+        r, p = set_metrics(got, want)
+        emit(f"table5/{plan or 'optimizer_choice'}", float("nan"),
+             recall=round(r, 3), precision=round(p, 3),
+             lm_calls=st["lm_calls"], chosen=st["plan"],
+             plan_costs=str(st["plan_costs"]).replace(",", ";"))

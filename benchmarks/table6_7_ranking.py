@@ -1,0 +1,37 @@
+"""Tables 6/7 analogue: ranking quality + LM-call complexity across top-k
+algorithms, on a synthetic HellaSwag-bench (objective scalar ground truth)."""
+import time
+
+import numpy as np
+
+from benchmarks._util import emit, ndcg_at_k
+from repro.core.backends import synth
+from repro.core.backends.base import CountedModel
+from repro.core import accounting
+from repro.core.operators.topk import (sem_topk_heap, sem_topk_quadratic,
+                                       sem_topk_quickselect)
+
+N, K = 150, 10
+
+
+def run() -> None:
+    records, world, model, emb, piv = synth.make_rank_world(N, compare_noise=0.05, seed=4)
+    model = CountedModel(model, "oracle")
+    rel = {i: world.rank_value[records[i]["id"]] for i in range(N)}
+
+    # search baseline: embedding similarity only (0 LM calls)
+    order = list(np.argsort(-piv))
+    emit("table6/search", 0.0, ndcg10=round(ndcg_at_k(order, rel, K), 3), lm_calls=0)
+
+    for name, fn, kw in (
+        ("quadratic", sem_topk_quadratic, {}),
+        ("heap", sem_topk_heap, {}),
+        ("quickselect", sem_topk_quickselect, {"seed": 0}),
+        ("lotus_pivot_opt", sem_topk_quickselect, {"seed": 0, "pivot_scores": piv}),
+    ):
+        t0 = time.monotonic()
+        idx, st = fn(records, "{abstract} highest accuracy", K, model, **kw)
+        dt = time.monotonic() - t0
+        emit(f"table7/{name}", 1e6 * dt / max(st["compare_calls"], 1),
+             ndcg10=round(ndcg_at_k(list(idx), rel, K), 3),
+             lm_calls=st["compare_calls"], et_s=round(dt, 3))

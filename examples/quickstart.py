@@ -1,0 +1,31 @@
+"""Quickstart: semantic operators in ~30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core.backends import synth
+from repro.core.frame import SemFrame, Session
+
+# a synthetic corpus with known ground truth (no API keys / weights needed)
+records, world, oracle, proxy, embedder = synth.make_filter_world(
+    400, positive_rate=0.4, proxy_alpha=2.5, seed=0)
+sess = Session(oracle=oracle, proxy=proxy, embedder=embedder, sample_size=150)
+claims = SemFrame(records, sess)
+
+# gold algorithm: one oracle call per tuple
+supported = claims.sem_filter("the {claim} is supported")
+print(f"gold filter: {len(supported)}/{len(claims)} pass, "
+      f"{claims.last_stats()['oracle_calls']} oracle calls")
+
+# optimized: proxy cascade with accuracy guarantees (Algorithm 1)
+fast = claims.sem_filter("the {claim} is supported",
+                         recall_target=0.9, precision_target=0.9, delta=0.2)
+st = claims.last_stats()
+print(f"optimized:   {len(fast)}/{len(claims)} pass, "
+      f"{st['oracle_calls']} oracle calls "
+      f"(tau+={st['tau_plus']:.2f}, tau-={st['tau_minus']:.2f})")
+
+# row-wise projection + vector search
+queries = claims.sem_map("write a search query for {claim}", out_column="query")
+idx = claims.sem_index("claim")
+hits = claims.sem_search("claim", "claim text 42", k=3, index=idx)
+print("search:", [t["id"] for t in hits.records])

@@ -1,0 +1,24 @@
+"""Search & ranking (paper §5.3, Tables 6-7): sem_topk algorithms compared on
+an objective synthetic benchmark (HellaSwag-bench analogue).
+
+    PYTHONPATH=src python examples/ranking.py
+"""
+from repro.core.backends import synth
+from repro.core.backends.base import CountedModel
+from repro.core.operators.topk import (sem_topk_heap, sem_topk_quadratic,
+                                       sem_topk_quickselect)
+
+records, world, model, embedder, pivot_scores = synth.make_rank_world(
+    120, compare_noise=0.05, seed=4)
+model = CountedModel(model, "oracle")
+truth = sorted(range(120), key=lambda i: -world.rank_value[records[i]["id"]])[:10]
+
+for name, fn, kw in (
+    ("quadratic   ", sem_topk_quadratic, {}),
+    ("heap        ", sem_topk_heap, {}),
+    ("quickselect ", sem_topk_quickselect, {"seed": 0}),
+    ("pivot-opt   ", sem_topk_quickselect, {"seed": 0, "pivot_scores": pivot_scores}),
+):
+    idx, st = fn(records, "the {abstract} with the highest accuracy", 10, model, **kw)
+    hit = len(set(idx) & set(truth))
+    print(f"{name} overlap@10={hit}/10  comparisons={st['compare_calls']}")

@@ -1,0 +1,42 @@
+"""Train a small LM end-to-end on the training substrate: data pipeline,
+AdamW, checkpoint/resume, preemption-safe loop.  Defaults to a ~20M-param
+model sized for a CPU demo; --layers/--d-model scale it up (the same code
+path the dry-run lowers at 72B/400B scale).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+
+from repro.configs import get_smoke
+from repro.data.tokenizer import TOKENIZER
+from repro.train import optimizer as opt
+from repro.train.loop import LoopConfig, run
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_smoke("llama3.2-3b").with_(
+        vocab_size=TOKENIZER.vocab_size, num_layers=args.layers,
+        d_model=args.d_model, num_heads=max(args.d_model // 64, 1),
+        num_kv_heads=max(args.d_model // 128, 1), d_ff=args.d_model * 4)
+    print(f"model params: {cfg.param_count()/1e6:.1f}M")
+    loop = LoopConfig(steps=args.steps, batch=args.batch, seq_len=args.seq_len,
+                      ckpt_dir=args.ckpt_dir, ckpt_every=50, log_every=10,
+                      compress_grads=args.compress_grads)
+    ocfg = opt.OptimizerConfig(learning_rate=3e-4, warmup_steps=20,
+                               total_steps=args.steps)
+    metrics = run(cfg, ocfg, loop)
+    print("final:", metrics)
+
+
+if __name__ == "__main__":
+    main()

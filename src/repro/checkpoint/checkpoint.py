@@ -1,0 +1,157 @@
+"""Checkpointing: atomic, async, mesh-agnostic (elastic restart).
+
+Layout:  <dir>/step_<N>/arrays.npz + manifest.json, written to a tmp dir and
+renamed (atomic on POSIX).  Arrays are saved *logically* (unsharded host
+arrays keyed by pytree path) with their logical axis names in the manifest,
+so a restart may use a different mesh shape / pod count: ``restore_sharded``
+re-resolves shardings against the new mesh (elastic scaling).  On a real
+multi-host cluster each process would save only its addressable shards with
+the same manifest format; the single-controller path here saves full arrays.
+
+``AsyncCheckpointer`` snapshots to host memory synchronously (one device_get)
+and does the disk I/O on a background thread — the train loop continues while
+bytes hit disk; ``wait()`` surfaces any background error.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.common import flatten, unflatten
+
+_SEP = "|"
+
+# numpy can't round-trip ml_dtypes (bfloat16 etc.) through npz; store raw bits.
+_BIT_VIEW = {2: np.uint16, 1: np.uint8, 4: np.uint32}
+
+
+def _flat_np(tree) -> tuple[dict[str, np.ndarray], dict[str, str]]:
+    flat = flatten(tree)
+    arrays: dict[str, np.ndarray] = {}
+    dtypes: dict[str, str] = {}
+    for path, v in flat.items():
+        key = _SEP.join(path)
+        a = np.asarray(v)
+        dtypes[key] = a.dtype.name
+        if a.dtype.kind not in "biufc":  # ml_dtypes -> raw bit view
+            a = a.view(_BIT_VIEW[a.dtype.itemsize])
+        arrays[key] = a
+    return arrays, dtypes
+
+
+def _restore_dtype(a: np.ndarray, name: str) -> np.ndarray:
+    if a.dtype.name == name:
+        return a
+    import ml_dtypes
+    return a.view(np.dtype(getattr(ml_dtypes, name)))
+
+
+def save(ckpt_dir: str, step: int, trees: dict[str, Any], *, keep: int = 3,
+         extra_meta: dict | None = None) -> str:
+    """trees: {"params": ..., "opt_state": ..., ...} (each a pytree)."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    manifest: dict[str, Any] = {"step": step, "trees": {}, "dtypes": {}, "time": time.time(),
+                                "meta": extra_meta or {}}
+    for name, tree in trees.items():
+        arrays, dtypes = _flat_np(tree)
+        np.savez(os.path.join(tmp, f"{name}.npz"), **arrays)
+        manifest["trees"][name] = sorted(arrays.keys())
+        manifest["dtypes"][name] = dtypes
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _prune(ckpt_dir, keep)
+    return final
+
+
+def _prune(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(d for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, d))
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def load(ckpt_dir: str, step: int | None = None) -> tuple[int, dict[str, Any]]:
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    out: dict[str, Any] = {}
+    for name in manifest["trees"]:
+        dtypes = manifest.get("dtypes", {}).get(name, {})
+        with np.load(os.path.join(d, f"{name}.npz")) as z:
+            flat = {tuple(k.split(_SEP)): _restore_dtype(z[k], dtypes.get(k, z[k].dtype.name))
+                    for k in z.files}
+        out[name] = unflatten(flat)
+    return step, out
+
+
+def restore_sharded(ckpt_dir: str, shardings: dict[str, Any], step: int | None = None):
+    """Elastic restore: place saved arrays with *new-mesh* shardings.
+
+    ``shardings``: {"params": tree of NamedSharding, ...} resolved against the
+    current mesh (see repro.dist.sharding.spec_shardings) — the saved mesh
+    shape is irrelevant, which is what makes restart-on-a-different-topology
+    (scale up/down, lost pod) work.
+    """
+    step, trees = load(ckpt_dir, step)
+    out = {}
+    for name, tree in trees.items():
+        if name in shardings:
+            out[name] = jax.tree.map(jax.device_put, tree, shardings[name])
+        else:
+            out[name] = tree
+    return step, out
+
+
+class AsyncCheckpointer:
+    def __init__(self, ckpt_dir: str, *, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+
+    def save(self, step: int, trees: dict[str, Any], extra_meta: dict | None = None) -> None:
+        self.wait()
+        host_trees = {n: jax.tree.map(np.asarray, t) for n, t in trees.items()}  # snapshot
+
+        def work():
+            try:
+                save(self.ckpt_dir, step, host_trees, keep=self.keep, extra_meta=extra_meta)
+            except BaseException as e:  # noqa: BLE001 - surfaced via wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

@@ -1,0 +1,66 @@
+"""Per-operator cost accounting: oracle/proxy LM calls, embedding calls.
+
+Every backend call is routed through the active ``OpStats`` so benchmarks can
+report the paper's '# LM calls' columns exactly.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+import time
+
+_ctx = threading.local()
+
+
+@dataclasses.dataclass
+class OpStats:
+    operator: str = ""
+    oracle_calls: int = 0
+    proxy_calls: int = 0
+    embed_calls: int = 0
+    compare_calls: int = 0
+    generate_calls: int = 0
+    wall_s: float = 0.0
+    details: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, kind: str, n: int) -> None:
+        setattr(self, f"{kind}_calls", getattr(self, f"{kind}_calls") + n)
+
+    @property
+    def lm_calls(self) -> int:
+        return self.oracle_calls + self.proxy_calls + self.compare_calls + self.generate_calls
+
+    def as_dict(self) -> dict:
+        return {
+            "operator": self.operator, "oracle_calls": self.oracle_calls,
+            "proxy_calls": self.proxy_calls, "embed_calls": self.embed_calls,
+            "compare_calls": self.compare_calls, "generate_calls": self.generate_calls,
+            "lm_calls": self.lm_calls, "wall_s": round(self.wall_s, 4), **self.details,
+        }
+
+
+def current() -> OpStats | None:
+    return getattr(_ctx, "stats", None)
+
+
+def record(kind: str, n: int) -> None:
+    st = current()
+    if st is not None:
+        st.add(kind, n)
+
+
+@contextlib.contextmanager
+def track(operator: str):
+    prev = current()
+    st = OpStats(operator=operator)
+    _ctx.stats = st
+    t0 = time.monotonic()
+    try:
+        yield st
+    finally:
+        st.wall_s = time.monotonic() - t0
+        _ctx.stats = prev
+        if prev is not None:  # nested operators roll up into the parent
+            for kind in ("oracle", "proxy", "embed", "compare", "generate"):
+                prev.add(kind, getattr(st, f"{kind}_calls"))

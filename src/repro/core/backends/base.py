@@ -1,0 +1,75 @@
+"""Model-backend protocol consumed by the semantic operators.
+
+The paper's world model M (oracle), proxy A, and embedder are all expressed
+through this interface; `repro.engine.InferenceEngine` provides the real-model
+implementation and `simulated.SimulatedBackend` the ground-truth-plus-noise
+implementation used to validate the statistical machinery.
+"""
+from __future__ import annotations
+
+from typing import Protocol, Sequence
+
+import numpy as np
+
+from repro.core import accounting
+
+
+class PredicateModel(Protocol):
+    def predicate(self, prompts: Sequence[str]) -> tuple[np.ndarray, np.ndarray]:
+        """-> (bool [n], score [n] in [0,1]: P(True))."""
+
+
+class GenerativeModel(PredicateModel, Protocol):
+    def generate(self, prompts: Sequence[str]) -> list[str]: ...
+    def compare(self, prompts: Sequence[str]) -> np.ndarray:
+        """-> bool [n]: option A preferred."""
+    def choose(self, prompts: Sequence[str], n_options: int) -> np.ndarray:
+        """-> int [n] in [0, n_options)."""
+
+
+class EmbeddingModel(Protocol):
+    def embed(self, texts: Sequence[str]) -> np.ndarray:
+        """-> unit vectors [n, d]."""
+
+
+# ---------------------------------------------------------------------------
+# Accounting wrappers — every operator talks to models through these.
+# ---------------------------------------------------------------------------
+
+
+class CountedModel:
+    """Wraps a model, attributing calls to the active operator's OpStats."""
+
+    def __init__(self, model, role: str):
+        assert role in ("oracle", "proxy")
+        self._m = model
+        self.role = role
+
+    def predicate(self, prompts):
+        accounting.record(self.role, len(prompts))
+        return self._m.predicate(prompts)
+
+    def generate(self, prompts):
+        accounting.record("generate", len(prompts))
+        return self._m.generate(prompts)
+
+    def compare(self, prompts):
+        accounting.record("compare", len(prompts))
+        return self._m.compare(prompts)
+
+    def choose(self, prompts, n_options):
+        accounting.record(self.role, len(prompts))
+        return self._m.choose(prompts, n_options)
+
+
+class CountedEmbedder:
+    def __init__(self, embedder):
+        self._e = embedder
+
+    @property
+    def dim(self):
+        return self._e.dim
+
+    def embed(self, texts):
+        accounting.record("embed", len(texts))
+        return self._e.embed(texts)

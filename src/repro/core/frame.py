@@ -1,0 +1,243 @@
+"""SemFrame: the LOTUS DataFrame-style public API (§4).
+
+A SemFrame is a list of dict records plus a bound `Session` (oracle model,
+optional proxy model, embedder).  Operators take a langex and optional
+accuracy targets; passing targets engages the optimizer (cascades / proxy
+plans / learned thresholds), omitting them runs the gold algorithm —
+model-data independence in one switch.
+
+    sess = Session(oracle=..., proxy=..., embedder=...)
+    sf = SemFrame(records, sess)
+    hits = sf.sem_filter("the {claim} is supported",
+                         recall_target=0.9, precision_target=0.9, delta=0.2)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+from repro.core.backends.base import CountedEmbedder, CountedModel
+from repro.core.langex import as_langex
+from repro.core.operators import agg as _agg
+from repro.core.operators import filter as _filter
+from repro.core.operators import groupby as _groupby
+from repro.core.operators import join as _join
+from repro.core.operators import mapex as _mapex
+from repro.core.operators import search as _search
+from repro.core.operators import topk as _topk
+
+
+@dataclasses.dataclass
+class Session:
+    oracle: Any
+    proxy: Any | None = None
+    embedder: Any | None = None
+    default_delta: float = 0.2
+    sample_size: int = 100
+    seed: int = 0
+
+    def __post_init__(self):
+        self.oracle = CountedModel(self.oracle, "oracle")
+        if self.proxy is not None:
+            self.proxy = CountedModel(self.proxy, "proxy")
+        if self.embedder is not None:
+            self.embedder = CountedEmbedder(self.embedder)
+
+
+class SemFrame:
+    def __init__(self, records: Sequence[dict], session: Session,
+                 stats_log: list | None = None):
+        self.records = list(records)
+        self.session = session
+        self.stats_log = stats_log if stats_log is not None else []
+
+    # -- plumbing ---------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self.records)
+
+    def __getitem__(self, i):
+        return self.records[i]
+
+    @property
+    def columns(self) -> set:
+        return set(self.records[0].keys()) if self.records else set()
+
+    def _child(self, records) -> "SemFrame":
+        return SemFrame(records, self.session, self.stats_log)
+
+    def _log(self, stats: dict) -> dict:
+        self.stats_log.append(stats)
+        return stats
+
+    def last_stats(self) -> dict:
+        return self.stats_log[-1] if self.stats_log else {}
+
+    # -- sem_filter -------------------------------------------------------
+    def sem_filter(self, langex, *, recall_target: float | None = None,
+                   precision_target: float | None = None,
+                   delta: float | None = None) -> "SemFrame":
+        as_langex(langex).validate(self.columns)
+        s = self.session
+        if recall_target is None and precision_target is None:
+            mask, stats = _filter.sem_filter_gold(self.records, langex, s.oracle)
+        else:
+            if s.proxy is None:
+                raise ValueError("optimized sem_filter needs a proxy model in the Session")
+            mask, stats = _filter.sem_filter_cascade(
+                self.records, langex, s.oracle, s.proxy,
+                recall_target=recall_target or 0.9,
+                precision_target=precision_target or 0.9,
+                delta=delta if delta is not None else s.default_delta,
+                sample_size=s.sample_size, seed=s.seed)
+        self._log(stats)
+        return self._child([t for t, m in zip(self.records, mask) if m])
+
+    # -- sem_join ---------------------------------------------------------
+    def sem_join(self, other: "SemFrame | Sequence[dict]", langex, *,
+                 recall_target: float | None = None,
+                 precision_target: float | None = None,
+                 delta: float | None = None, project_fn: Callable | None = None,
+                 force_plan: str | None = None) -> "SemFrame":
+        right = other.records if isinstance(other, SemFrame) else list(other)
+        lx = as_langex(langex)
+        lx.validate(self.columns, set(right[0].keys()) if right else set())
+        s = self.session
+        if recall_target is None and precision_target is None:
+            mask, stats = _join.sem_join_gold(self.records, right, langex, s.oracle)
+        else:
+            if s.embedder is None:
+                raise ValueError("optimized sem_join needs an embedder in the Session")
+            mask, stats = _join.sem_join_cascade(
+                self.records, right, langex, s.oracle, s.embedder,
+                project_fn=project_fn,
+                recall_target=recall_target or 0.9,
+                precision_target=precision_target or 0.9,
+                delta=delta if delta is not None else s.default_delta,
+                sample_size=s.sample_size, seed=s.seed, force_plan=force_plan)
+        self._log(stats)
+        out = []
+        n1, n2 = mask.shape
+        for i in range(n1):
+            for j in range(n2):
+                if mask[i, j]:
+                    out.append({**self.records[i],
+                                **{f"right_{k}": v for k, v in right[j].items()}})
+        return self._child(out)
+
+    # -- sem_topk ---------------------------------------------------------
+    def sem_topk(self, langex, k: int, *, algorithm: str = "quickselect",
+                 pivot_query: str | None = None, group_by: str | None = None
+                 ) -> "SemFrame":
+        s = self.session
+        if group_by is not None:
+            groups: dict = {}
+            for t in self.records:
+                groups.setdefault(t[group_by], []).append(t)
+            out = []
+            for _, recs in sorted(groups.items(), key=lambda kv: str(kv[0])):
+                sub = self._child(recs).sem_topk(langex, k, algorithm=algorithm,
+                                                 pivot_query=pivot_query)
+                out.extend(sub.records)
+            return self._child(out)
+
+        pivot_scores = None
+        if pivot_query is not None and s.embedder is not None:
+            lx = as_langex(langex)
+            texts = [lx.render(t) for t in self.records]
+            emb = s.embedder.embed(texts)
+            qv = s.embedder.embed([pivot_query])[0]
+            pivot_scores = emb @ qv
+        fn = {"quickselect": _topk.sem_topk_quickselect,
+              "quadratic": _topk.sem_topk_quadratic,
+              "heap": _topk.sem_topk_heap}[algorithm]
+        if algorithm == "quickselect":
+            idx, stats = fn(self.records, langex, k, s.oracle,
+                            pivot_scores=pivot_scores, seed=s.seed)
+        else:
+            idx, stats = fn(self.records, langex, k, s.oracle)
+        self._log(stats)
+        return self._child([self.records[i] for i in idx])
+
+    # -- sem_agg ----------------------------------------------------------
+    def sem_agg(self, langex, *, fanout: int = 8, group_by: str | None = None,
+                partitioner=None):
+        s = self.session
+        if group_by is not None:
+            out = {}
+            for t in self.records:
+                out.setdefault(t[group_by], []).append(t)
+            return {g: self._child(recs).sem_agg(langex, fanout=fanout,
+                                                 partitioner=partitioner)
+                    for g, recs in out.items()}
+        answer, stats = _agg.sem_agg_hierarchical(self.records, langex, s.oracle,
+                                                  fanout=fanout, partitioner=partitioner)
+        self._log(stats)
+        return answer
+
+    # -- sem_group_by -----------------------------------------------------
+    def sem_group_by(self, langex, C: int, *, accuracy_target: float | None = None,
+                     delta: float | None = None) -> "SemFrame":
+        s = self.session
+        if s.embedder is None:
+            raise ValueError("sem_group_by needs an embedder in the Session")
+        if accuracy_target is None:
+            res = _groupby.sem_group_by_gold(self.records, langex, C,
+                                             s.oracle, s.embedder, seed=s.seed)
+        else:
+            res = _groupby.sem_group_by_cascade(
+                self.records, langex, C, s.oracle, s.embedder,
+                accuracy_target=accuracy_target,
+                delta=delta if delta is not None else s.default_delta,
+                sample_size=s.sample_size, seed=s.seed)
+        self._log(res.stats)
+        out = [{**t, "group": int(g), "group_label": res.labels[int(g)]}
+               for t, g in zip(self.records, res.assignment)]
+        return self._child(out)
+
+    # -- sem_map / sem_extract ---------------------------------------------
+    def sem_map(self, langex, *, out_column: str = "mapped") -> "SemFrame":
+        texts, stats = _mapex.sem_map(self.records, langex, self.session.oracle)
+        self._log(stats)
+        return self._child([{**t, out_column: x} for t, x in zip(self.records, texts)])
+
+    def sem_extract(self, langex, *, source_field: str,
+                    out_column: str = "extracted") -> "SemFrame":
+        texts, stats = _mapex.sem_extract(self.records, langex, self.session.oracle,
+                                          source_field=source_field)
+        self._log(stats)
+        return self._child([{**t, out_column: x} for t, x in zip(self.records, texts)])
+
+    # -- similarity family --------------------------------------------------
+    def sem_index(self, column: str, *, path: str | None = None):
+        return _search.sem_index([str(t[column]) for t in self.records],
+                                 self.session.embedder, path=path)
+
+    def sem_search(self, column: str, query: str, *, k: int = 10,
+                   n_rerank: int = 0, rerank_langex=None, index=None) -> "SemFrame":
+        s = self.session
+        index = index or self.sem_index(column)
+        hits, stats = _search.sem_search(
+            index, query, s.embedder, k=k, n_rerank=n_rerank,
+            rerank_model=s.oracle if n_rerank else None,
+            records=self.records, rerank_langex=rerank_langex)
+        self._log(stats)
+        return self._child([self.records[i] for i in hits])
+
+    def sem_sim_join(self, other: "SemFrame | Sequence[dict]", left_col: str,
+                     right_col: str, *, k: int = 1) -> "SemFrame":
+        right = other.records if isinstance(other, SemFrame) else list(other)
+        index = _search.sem_index([str(t[right_col]) for t in right],
+                                  self.session.embedder)
+        scores, idx, stats = _search.sem_sim_join(
+            [str(t[left_col]) for t in self.records], index,
+            self.session.embedder, k=k)
+        self._log(stats)
+        out = []
+        for i, t in enumerate(self.records):
+            for rank in range(idx.shape[1]):
+                j = int(idx[i, rank])
+                out.append({**t, **{f"right_{kk}": v for kk, v in right[j].items()},
+                            "sim_score": float(scores[i, rank])})
+        return self._child(out)

@@ -1,0 +1,48 @@
+"""sem_map & sem_extract (§2.3, §4.2): row-wise natural-language projection.
+
+sem_map generates an arbitrary text attribute; sem_extract restricts the
+output to substrings of the source text (entity extraction / verified quotes
+— generations that do not appear verbatim in the source are snapped to the
+closest matching source span or dropped).
+"""
+from __future__ import annotations
+
+import difflib
+
+from repro.core import accounting
+from repro.core.langex import as_langex
+
+MAP_INSTRUCTION = "Task: {task}\nInput: {item}\nAnswer concisely.\nAnswer:"
+EXTRACT_INSTRUCTION = ("Task: {task}\nSource text: {item}\n"
+                       "Answer ONLY with an exact snippet copied from the source text.\nAnswer:")
+
+
+def sem_map(records: list[dict], langex, model) -> tuple[list[str], dict]:
+    lx = as_langex(langex)
+    with accounting.track("sem_map") as st:
+        prompts = [MAP_INSTRUCTION.format(task=lx.template, item=lx.render(t))
+                   for t in records]
+        return model.generate(prompts), st.as_dict()
+
+
+def _snap_to_source(answer: str, source: str) -> str:
+    """Return the closest matching source substring (verified-quote contract)."""
+    if answer and answer in source:
+        return answer
+    sm = difflib.SequenceMatcher(a=source, b=answer)
+    m = sm.find_longest_match(0, len(source), 0, len(answer))
+    return source[m.a: m.a + m.size] if m.size > 0 else ""
+
+
+def sem_extract(records: list[dict], langex, model, *, source_field: str
+                ) -> tuple[list[str], dict]:
+    lx = as_langex(langex)
+    with accounting.track("sem_extract") as st:
+        prompts = [EXTRACT_INSTRUCTION.format(task=lx.template, item=lx.render(t))
+                   for t in records]
+        raw = model.generate(prompts)
+        snapped = [_snap_to_source(a.strip(), str(t[source_field]))
+                   for a, t in zip(raw, records)]
+        st.details.update(verbatim=sum(1 for a, t in zip(raw, records)
+                                       if a.strip() and a.strip() in str(t[source_field])))
+        return snapped, st.as_dict()

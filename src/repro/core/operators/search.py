@@ -1,0 +1,49 @@
+"""sem_search, sem_sim_join, sem_index (§4.2): similarity-specialized
+operators served by the vector index (the equi-join analogues that expose
+vector-search optimization opportunities to the engine)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import accounting
+from repro.core.langex import as_langex
+from repro.index.vector_index import VectorIndex
+
+
+def sem_index(texts: list[str], embedder, *, path: str | None = None) -> VectorIndex:
+    with accounting.track("sem_index"):
+        vectors = embedder.embed(texts)
+        index = VectorIndex(vectors)
+        if path:
+            index.save(path)
+        return index
+
+
+def sem_search(index: VectorIndex, query: str, embedder, *, k: int = 10,
+               n_rerank: int = 0, rerank_model=None, records=None,
+               rerank_langex=None) -> tuple[list[int], dict]:
+    """Top-k by embedding similarity; optional LLM re-ranking of the top-k
+    down to ``n_rerank`` results (the advanced search path of §4.2)."""
+    with accounting.track("sem_search") as st:
+        qv = embedder.embed([query])
+        _, idx = index.search(qv, k)
+        hits = [int(i) for i in idx[0]]
+        if n_rerank and rerank_model is not None and records is not None:
+            from repro.core.operators.topk import sem_topk_quickselect
+            sub = [records[i] for i in hits]
+            order, _ = sem_topk_quickselect(sub, rerank_langex or "most relevant: {text}",
+                                            n_rerank, rerank_model)
+            hits = [hits[i] for i in order]
+            st.details.update(reranked=n_rerank)
+        return hits, st.as_dict()
+
+
+def sem_sim_join(left_texts: list[str], right_index: VectorIndex, embedder,
+                 *, k: int = 1) -> tuple[np.ndarray, np.ndarray, dict]:
+    """Left join: K most-similar right rows per left row (§4.2 Figure 4).
+
+    Returns (scores [n1,k], indices [n1,k], stats)."""
+    with accounting.track("sem_sim_join") as st:
+        emb_l = embedder.embed(left_texts)
+        scores, idx = right_index.search(emb_l, k)
+        return scores, idx, st.as_dict()

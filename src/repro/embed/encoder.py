@@ -1,0 +1,89 @@
+"""E5-style text embedding encoder: bidirectional transformer + mean pooling
++ L2 normalization.  Used by the semantic-operator layer as the embedding
+proxy (sem_join sim-filter, sem_group_by, sem_search, sem_sim_join).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common import SpecTree, init_params, unflatten
+from repro.configs.base import ModelConfig
+from repro.data.tokenizer import TOKENIZER
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models.transformer import _stack
+
+E5_SMALL = ModelConfig(
+    name="e5-small-sim", family="dense",
+    num_layers=12, d_model=384, num_heads=12, num_kv_heads=12,
+    d_ff=1536, vocab_size=TOKENIZER.vocab_size, rope_theta=10_000.0,
+    dtype="float32",
+)
+
+
+def _enc_layer_specs(cfg: ModelConfig) -> dict:
+    specs = {("attn",) + p: s for p, s in attn.attention_spec(cfg).items()}
+    specs.update({("attn_norm",) + p: s for p, s in L.rmsnorm_spec(cfg.d_model).items()})
+    specs.update({("ffn_norm",) + p: s for p, s in L.rmsnorm_spec(cfg.d_model).items()})
+    specs.update({("ffn",) + p: s for p, s in L.swiglu_spec(cfg.d_model, cfg.d_ff).items()})
+    return specs
+
+
+def param_specs(cfg: ModelConfig = E5_SMALL) -> SpecTree:
+    specs: SpecTree = {}
+    specs.update({("embed",) + p: s for p, s in L.embed_spec(cfg.vocab_size, cfg.d_model).items()})
+    specs.update(_stack(_enc_layer_specs(cfg), cfg.num_layers, "layers"))
+    specs.update({("final_norm",) + p: s for p, s in L.rmsnorm_spec(cfg.d_model).items()})
+    return specs
+
+
+def encode_tokens(params, tokens, valid_mask, *, cfg: ModelConfig):
+    """tokens [B,T], valid_mask [B,T] -> unit vectors [B, d]."""
+    x = L.embed(params["embed"], tokens).astype(cfg.activation_dtype)
+
+    def layer(x, lp):
+        h = L.rmsnorm(lp["attn_norm"], x, cfg.norm_eps)
+        a, _ = attn.self_attention(lp["attn"], h, cfg=cfg, causal=False)
+        x = x + a
+        h = L.rmsnorm(lp["ffn_norm"], x, cfg.norm_eps)
+        return x + L.swiglu(lp["ffn"], h), None
+
+    x, _ = jax.lax.scan(layer, x, params["layers"])
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    m = valid_mask[..., None].astype(jnp.float32)
+    pooled = jnp.sum(x.astype(jnp.float32) * m, axis=1) / jnp.maximum(jnp.sum(m, axis=1), 1.0)
+    return pooled / jnp.maximum(jnp.linalg.norm(pooled, axis=-1, keepdims=True), 1e-6)
+
+
+class Embedder:
+    """Batched text -> unit-vector embeddings via the JAX encoder."""
+
+    def __init__(self, cfg: ModelConfig = E5_SMALL, params=None, *, seed: int = 0,
+                 max_len: int = 256):
+        self.cfg = cfg
+        self.max_len = max_len
+        self.params = params if params is not None else init_params(
+            param_specs(cfg), jax.random.PRNGKey(seed))
+        self._encode = jax.jit(functools.partial(encode_tokens, cfg=cfg))
+
+    @property
+    def dim(self) -> int:
+        return self.cfg.d_model
+
+    def embed(self, texts: list[str]) -> np.ndarray:
+        if not texts:
+            return np.zeros((0, self.cfg.d_model), np.float32)
+        seqs = [TOKENIZER.encode(t)[: self.max_len] for t in texts]
+        out = []
+        bs = 64
+        for i in range(0, len(seqs), bs):
+            batch = seqs[i:i + bs]
+            width = max(16, max(len(s) for s in batch))
+            toks = TOKENIZER.pad_batch(batch, width)
+            mask = (toks != TOKENIZER.pad_id).astype(np.float32)
+            out.append(np.asarray(self._encode(self.params, jnp.asarray(toks), jnp.asarray(mask))))
+        return np.concatenate(out, axis=0)

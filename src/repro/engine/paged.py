@@ -1,0 +1,105 @@
+"""Paged KV cache (vLLM's PagedAttention, TPU-adapted).
+
+GPU paged attention exists to fight fragmentation with warp-level gathers.
+On TPU we keep the *allocator* (page table, per-slot page lists — memory is
+still allocated in fixed pages, so no fragmentation across variable-length
+requests) but lay pages out as statically-shaped arrays [L, pages, page_size,
+kv_heads, head_dim]; the per-step gather of a slot's pages lowers to XLA
+dynamic-slices feeding the same dense attention einsums (MXU-friendly),
+rather than a scalar-indexed kernel.
+
+Implemented for the dense/moe ('self'-cache) transformer families — the
+scheduler demo + tests; contiguous caches remain the default elsewhere.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models.moe import moe_ffn
+from repro.models.transformer import layer_layout
+
+
+class PageAllocator:
+    """Host-side free-list page allocator + per-slot page tables."""
+
+    def __init__(self, num_pages: int, page_size: int, max_slots: int, max_pages_per_slot: int):
+        self.page_size = page_size
+        self.free = list(range(num_pages - 1, -1, -1))
+        self.table = np.zeros((max_slots, max_pages_per_slot), np.int32)
+        self.pages_used: list[list[int]] = [[] for _ in range(max_slots)]
+
+    def ensure(self, slot: int, n_tokens: int) -> None:
+        need = (n_tokens + self.page_size - 1) // self.page_size
+        while len(self.pages_used[slot]) < need:
+            if not self.free:
+                raise MemoryError("out of KV pages")
+            p = self.free.pop()
+            self.table[slot, len(self.pages_used[slot])] = p
+            self.pages_used[slot].append(p)
+
+    def release(self, slot: int) -> None:
+        self.free.extend(reversed(self.pages_used[slot]))
+        self.pages_used[slot] = []
+        self.table[slot] = 0
+
+
+def init_pages(cfg: ModelConfig, num_pages: int, page_size: int):
+    lay = layer_layout(cfg)
+    n = lay.get("dense") or lay.get("moe")
+    shape = (n, num_pages, page_size, cfg.num_kv_heads, cfg.hd)
+    z = jnp.zeros(shape, jnp.dtype(cfg.dtype))
+    return {"k": z, "v": z}
+
+
+def _gather_pages(pages_l, table):
+    """pages_l: [P, ps, hk, hd]; table: [B, maxp] -> [B, maxp*ps, hk, hd]."""
+    g = pages_l[table]  # [B, maxp, ps, hk, hd]
+    b, mp, ps = g.shape[0], g.shape[1], g.shape[2]
+    return g.reshape(b, mp * ps, g.shape[3], g.shape[4])
+
+
+def paged_decode_step(cfg: ModelConfig, params, tokens, pages, table, lens):
+    """One decode step with paged KV. tokens [B,1]; table [B,maxp]; lens [B].
+
+    Returns (logits [B,1,V], updated pages).
+    """
+    lay = layer_layout(cfg)
+    use_moe = lay["kind"] == "moe"
+    assert lay["kind"] in ("dense", "moe"), "paged decode: dense/moe families"
+    b = tokens.shape[0]
+    ps = pages["k"].shape[2]
+    x = L.embed(params["embed"], tokens).astype(cfg.activation_dtype)
+    bidx = jnp.arange(b)
+    page_of = table[bidx, lens // ps]   # physical page holding position `lens`
+    off = lens % ps
+
+    def body(x, inp):
+        lp, kp, vp = inp                 # page slices [P, ps, hk, hd]
+        h = L.rmsnorm(lp["attn_norm"], x, cfg.norm_eps)
+        q, k_new, v_new = attn.project_qkv(lp["attn"], h, cfg=cfg, positions=lens[:, None])
+        kp = kp.at[page_of, off].set(k_new[:, 0].astype(kp.dtype), mode="drop")
+        vp = vp.at[page_of, off].set(v_new[:, 0].astype(vp.dtype), mode="drop")
+        k = _gather_pages(kp, table)
+        v = _gather_pages(vp, table)
+        k_pos = jnp.arange(k.shape[1])
+        mask = (k_pos[None, :] <= lens[:, None])[:, None, None, :]
+        o = attn.gqa_attend(q, k, v, mask)
+        x = x + attn.out_proj(lp["attn"], o)
+        h = L.rmsnorm(lp["ffn_norm"], x, cfg.norm_eps)
+        if use_moe:
+            f, _ = moe_ffn(lp["moe"], h, cfg=cfg)
+            if cfg.moe_shared_expert:
+                f = f + L.swiglu(lp["shared"], h)
+        else:
+            f = L.swiglu(lp["ffn"], h)
+        return x + f, (kp, vp)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], pages["k"], pages["v"]))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed({**params.get("out", {}), **params["embed"]}, x, tied=cfg.tie_embeddings)
+    return logits, {"k": ks, "v": vs}

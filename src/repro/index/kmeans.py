@@ -1,0 +1,38 @@
+"""Spherical k-means over unit vectors (sem_group_by clustering stage)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def kmeans(vectors: np.ndarray, k: int, *, iters: int = 25, seed: int = 0
+           ) -> tuple[np.ndarray, np.ndarray]:
+    """-> (centers [k, d] unit vectors, assignment [n])."""
+    x = np.asarray(vectors, np.float32)
+    n = len(x)
+    k = min(k, n)
+    rng = np.random.default_rng(seed)
+
+    # k-means++ style init on cosine distance
+    centers = [x[rng.integers(n)]]
+    for _ in range(1, k):
+        d = 1.0 - np.max(np.stack([x @ c for c in centers], 1), axis=1)
+        d = np.clip(d, 1e-9, None) ** 2
+        centers.append(x[rng.choice(n, p=d / d.sum())])
+    c = np.stack(centers)
+
+    assign = np.zeros(n, np.int64)
+    for _ in range(iters):
+        sims = x @ c.T
+        new_assign = np.argmax(sims, axis=1)
+        if np.array_equal(new_assign, assign) and _ > 0:
+            break
+        assign = new_assign
+        for j in range(k):
+            m = assign == j
+            if m.any():
+                v = x[m].mean(axis=0)
+                c[j] = v / max(np.linalg.norm(v), 1e-9)
+            else:  # re-seed empty cluster at the worst-assigned point
+                worst = np.argmin(np.max(x @ c.T, axis=1))
+                c[j] = x[worst]
+    return c, assign

@@ -1,0 +1,53 @@
+"""Exact brute-force vector index (the FAISS analogue, §4: sem_index).
+
+Embeddings are unit vectors; scores are inner products computed with the
+Pallas similarity kernel on TPU (`repro.kernels.similarity`) and its jnp
+reference elsewhere.  Indices persist to disk (sem_index / load_sem_index).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+
+def _similarity(queries: np.ndarray, corpus: np.ndarray) -> np.ndarray:
+    from repro.kernels import ops as kops
+    return kops.similarity(queries, corpus)
+
+
+class VectorIndex:
+    def __init__(self, vectors: np.ndarray, ids: list | None = None):
+        self.vectors = np.asarray(vectors, np.float32)
+        self.ids = list(range(len(vectors))) if ids is None else list(ids)
+
+    def __len__(self) -> int:
+        return len(self.vectors)
+
+    def search(self, queries: np.ndarray, k: int) -> tuple[np.ndarray, np.ndarray]:
+        """-> (scores [nq, k], indices [nq, k]) by inner product."""
+        sims = _similarity(np.asarray(queries, np.float32), self.vectors)
+        k = min(k, sims.shape[1])
+        part = np.argpartition(-sims, k - 1, axis=1)[:, :k]
+        psims = np.take_along_axis(sims, part, axis=1)
+        order = np.argsort(-psims, axis=1)
+        idx = np.take_along_axis(part, order, axis=1)
+        return np.take_along_axis(sims, idx, axis=1), idx
+
+    def pairwise(self, queries: np.ndarray) -> np.ndarray:
+        return _similarity(np.asarray(queries, np.float32), self.vectors)
+
+    # -- persistence (sem_index / load_sem_index) -------------------------
+    def save(self, path: str) -> None:
+        os.makedirs(path, exist_ok=True)
+        np.save(os.path.join(path, "vectors.npy"), self.vectors)
+        with open(os.path.join(path, "meta.json"), "w") as f:
+            json.dump({"ids": self.ids, "dim": int(self.vectors.shape[1])}, f)
+
+    @classmethod
+    def load(cls, path: str) -> "VectorIndex":
+        vectors = np.load(os.path.join(path, "vectors.npy"))
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        return cls(vectors, meta["ids"])

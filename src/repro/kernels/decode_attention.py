@@ -1,0 +1,92 @@
+"""Pallas TPU flash-decoding: one query token against a long KV cache.
+
+Decode attention is memory-bandwidth-bound (the entire KV cache streams
+through once per step); the kernel tiles the cache's sequence dimension
+across grid steps (VMEM-resident [bk, hd] tiles), carries the online-softmax
+state in scratch, and masks by the per-sequence cache length (read from a
+[B] lengths vector).  Grid: (batch, q-heads, kv-blocks), kv innermost.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(lens_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, bk: int, n_kv: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0]                                  # [1, hd]
+    k = k_ref[0, 0]                                  # [bk, hd]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale  # [1, bk]
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+    valid = k_pos <= lens_ref[0]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0, 0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ik == n_kv - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, lens, *, block_k: int = 256, interpret: bool = False):
+    """q:[B,1,H,hd], k/v:[B,S,Hk,hd], lens:[B] -> [B,1,H,hd].
+
+    Attends to cache positions 0..lens[b] inclusive."""
+    b, _, h, hd = q.shape
+    sk, hk = k.shape[1], k.shape[2]
+    group = h // hk
+    bk = min(block_k, sk)
+    pk = (-sk) % bk
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    n_kv = (sk + pk) // bk
+
+    qT = q.transpose(0, 2, 1, 3)     # [B,H,1,hd]
+    kT = k.transpose(0, 2, 1, 3)     # [B,Hk,S,hd]
+    vT = v.transpose(0, 2, 1, 3)
+    lens = jnp.asarray(lens, jnp.int32)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=1.0 / (hd ** 0.5), bk=bk, n_kv=n_kv),
+        grid=(b, h, n_kv),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b_, h_, ik: (b_,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, 1, hd), lambda b_, h_, ik: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b_, h_, ik: (b_, h_ // group, ik, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b_, h_, ik: (b_, h_ // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, hd), lambda b_, h_, ik: (b_, h_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, 1, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lens, qT, kT, vT)
+    return out.transpose(0, 2, 1, 3)

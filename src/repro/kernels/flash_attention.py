@@ -1,0 +1,108 @@
+"""Pallas TPU flash attention (GQA-aware, causal / sliding-window).
+
+TPU blocking discipline: grid (batch, q-heads, q-blocks, kv-blocks) with the
+kv-block dimension innermost — TPU grids execute sequentially per core, so
+the online-softmax state (row-max m, row-sum l, output accumulator) lives in
+VMEM scratch across kv-block steps.  Block sizes default to 128 (MXU tile);
+GQA is expressed in the k/v BlockSpec index maps (q-head h reads kv-head
+h // group) so the repeated KV is never materialized.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: int, bq: int, bk: int,
+            n_kv: int, seq_kv: int):
+    ik = pl.program_id(3)
+    iq = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0]                                # [bq, hd]
+    k = k_ref[0, 0]                                # [bk, hd]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_pos < seq_kv
+    if causal:
+        mask &= q_pos >= k_pos
+    if window:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0, 0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ik == n_kv - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q:[B,Sq,H,hd], k/v:[B,Sk,Hk,hd] -> [B,Sq,H,hd]."""
+    b, sq, h, hd = q.shape
+    sk, hk = k.shape[1], k.shape[2]
+    group = h // hk
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    # pad seqs up to block multiples (masked out inside the kernel)
+    pq = (-sq) % bq
+    pk = (-sk) % bk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    sq_p, sk_p = sq + pq, sk + pk
+    n_q, n_kv = sq_p // bq, sk_p // bk
+
+    qT = q.transpose(0, 2, 1, 3)  # [B,H,Sq,hd]
+    kT = k.transpose(0, 2, 1, 3)  # [B,Hk,Sk,hd]
+    vT = v.transpose(0, 2, 1, 3)
+
+    grid = (b, h, n_q, n_kv)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=1.0 / (hd ** 0.5), causal=causal,
+                          window=window, bq=bq, bk=bk, n_kv=n_kv, seq_kv=sk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b_, h_, iq, ik: (b_, h_ // group, ik, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b_, h_, iq, ik: (b_, h_ // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq_p, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qT, kT, vT)
+    out = out.transpose(0, 2, 1, 3)
+    return out[:, :sq] if pq else out

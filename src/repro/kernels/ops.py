@@ -1,0 +1,74 @@
+"""Public jit'd wrappers for the Pallas kernels with implementation dispatch.
+
+    impl="auto"      Pallas on TPU, jnp reference elsewhere (CPU CI)
+    impl="pallas"    force compiled Pallas (TPU)
+    impl="interpret" Pallas kernel body interpreted on CPU (tests)
+    impl="ref"       pure-jnp oracle
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import decode_attention as _da
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ref
+from repro.kernels import rmsnorm as _rn
+from repro.kernels import similarity as _sim
+
+DEFAULT_IMPL = "auto"
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def _resolve(impl: str | None) -> str:
+    impl = impl or DEFAULT_IMPL
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    return impl
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    impl: str | None = None, **kw):
+    mode = _resolve(impl)
+    if mode == "ref":
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               interpret=(mode == "interpret"), **kw)
+
+
+def decode_attention(q, k, v, lens, *, impl: str | None = None, **kw):
+    mode = _resolve(impl)
+    if mode == "ref":
+        return ref.decode_attention_ref(q, k, v, jnp.asarray(lens))
+    return _da.decode_attention(q, k, v, lens, interpret=(mode == "interpret"), **kw)
+
+
+@functools.partial(jax.jit, static_argnames=("normalize",))
+def _sim_ref_jit(q, c, normalize=True):
+    return ref.similarity_ref(q, c, normalize=normalize)
+
+
+def similarity(queries, corpus, *, normalize: bool = True,
+               impl: str | None = None, **kw) -> np.ndarray:
+    mode = _resolve(impl)
+    if mode == "ref":
+        return np.asarray(_sim_ref_jit(jnp.asarray(queries), jnp.asarray(corpus),
+                                       normalize=normalize))
+    return np.asarray(_sim.similarity(queries, corpus, normalize=normalize,
+                                      interpret=(mode == "interpret"), **kw))
+
+
+def rmsnorm(x, scale, *, eps: float = 1e-5, impl: str | None = None, **kw):
+    mode = _resolve(impl)
+    if mode == "ref":
+        return ref.rmsnorm_ref(x, scale, eps=eps)
+    return _rn.rmsnorm(x, scale, eps=eps, interpret=(mode == "interpret"), **kw)

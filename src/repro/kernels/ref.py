@@ -1,0 +1,63 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These define the numerics the kernels must match (tests sweep shapes/dtypes
+and assert_allclose against these)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q:[B,Sq,H,hd], k/v:[B,Sk,Hk,hd] (GQA) -> [B,Sq,H,hd]; softmax in f32."""
+    h, hk = q.shape[2], k.shape[2]
+    if hk != h:
+        k = jnp.repeat(k, h // hk, axis=2)
+        v = jnp.repeat(v, h // hk, axis=2)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    s = jnp.einsum("bqhd,bshd->bhqs", q, k, preferred_element_type=jnp.float32) * scale
+    sq, sk = q.shape[1], k.shape[1]
+    q_pos, k_pos = jnp.arange(sq), jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask = q_pos[:, None] >= k_pos[None, :]
+    if window:
+        mask = mask & (q_pos[:, None] - k_pos[None, :] < window)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqs,bshd->bqhd", p.astype(v.dtype), v)
+
+
+def decode_attention_ref(q, k, v, lens):
+    """q:[B,1,H,hd], k/v:[B,S,Hk,hd], lens:[B] -> [B,1,H,hd].
+
+    Attends to positions 0..lens[b] inclusive (the new token already written)."""
+    h, hk = q.shape[2], k.shape[2]
+    if hk != h:
+        k = jnp.repeat(k, h // hk, axis=2)
+        v = jnp.repeat(v, h // hk, axis=2)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    s = jnp.einsum("bqhd,bshd->bhqs", q, k, preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(k.shape[1])[None, :] <= lens[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqs,bshd->bqhd", p.astype(v.dtype), v)
+
+
+def similarity_ref(queries, corpus, *, normalize: bool = True):
+    """queries:[nq,d], corpus:[nc,d] -> [nq,nc] cosine/inner-product scores."""
+    q = jnp.asarray(queries, jnp.float32)
+    c = jnp.asarray(corpus, jnp.float32)
+    if normalize:
+        q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-9)
+        c = c / jnp.maximum(jnp.linalg.norm(c, axis=-1, keepdims=True), 1e-9)
+    return q @ c.T
+
+
+def rmsnorm_ref(x, scale, *, eps: float = 1e-5):
+    """x:[..., d], scale:[d] -> same shape; stats in f32."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,52 @@
+"""Pallas TPU batched similarity: fused L2-normalize + MXU-tiled inner
+products — the vector-search hot loop behind sem_search / sem_sim_join /
+sem_join's sim-filter proxy (the FAISS-GPU analogue, TPU-native).
+
+Grid (q-blocks, c-blocks); the full feature dim d rides inside the block
+(embedding dims are <= a few thousand — one VMEM tile).  Norms are fused so
+raw (un-normalized) embeddings never round-trip through HBM twice.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, c_ref, o_ref, *, normalize: bool):
+    q = q_ref[...].astype(jnp.float32)
+    c = c_ref[...].astype(jnp.float32)
+    if normalize:
+        q = q * jax.lax.rsqrt(jnp.maximum(jnp.sum(q * q, -1, keepdims=True), 1e-18))
+        c = c * jax.lax.rsqrt(jnp.maximum(jnp.sum(c * c, -1, keepdims=True), 1e-18))
+    o_ref[...] = jax.lax.dot_general(
+        q, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def similarity(queries, corpus, *, normalize: bool = True,
+               block_q: int = 256, block_c: int = 256, interpret: bool = False):
+    """queries:[nq,d], corpus:[nc,d] -> [nq,nc] f32 scores."""
+    nq, d = queries.shape
+    nc = corpus.shape[0]
+    bq = min(block_q, nq)
+    bc = min(block_c, nc)
+    pq = (-nq) % bq
+    pc = (-nc) % bc
+    q = jnp.pad(jnp.asarray(queries), ((0, pq), (0, 0))) if pq else jnp.asarray(queries)
+    c = jnp.pad(jnp.asarray(corpus), ((0, pc), (0, 0))) if pc else jnp.asarray(corpus)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, normalize=normalize),
+        grid=((nq + pq) // bq, (nc + pc) // bc),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bc, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nq + pq, nc + pc), jnp.float32),
+        interpret=interpret,
+    )(q, c)
+    return out[:nq, :nc]

@@ -1,0 +1,409 @@
+"""Static analysis of optimized (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` does NOT multiply while-loop bodies by
+their trip counts (verified in tests/test_roofline.py), which makes it
+useless for scan-over-layers programs.  This module walks the HLO call graph
+itself:
+
+  * FLOPs: every ``dot``/``convolution``, 2 * prod(result) * contraction,
+    recursing into fusions/calls/while bodies, multiplying while bodies by
+    their trip count (parsed from the loop-condition's compare constant).
+  * HBM bytes: per *top-level* (post-fusion) instruction, operands + result —
+    i.e. the standard fused-HLO memory-traffic model.  In-place ops
+    (dynamic-update-slice, scatter) count only the updated slice.
+  * Collective bytes: operand bytes per collective (x2 for all-reduce),
+    multiplied by enclosing trip counts.
+
+Shapes in the per-device SPMD module are local, so all numbers are
+per-device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Iterable
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "bf16": 2, "f16": 2, "f32": 4,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(  # tuple types may contain /*index=N*/ comments
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^()]*\)|[\w\[\]{},]+))\s+([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.+\{\s*$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_WIRE_FACTOR = {"all-gather": 1.0, "reduce-scatter": 1.0, "all-reduce": 2.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def shape_dims(type_str: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dims = [int(d) for d in m.group(2).split(",") if d]
+        out.append((m.group(1), dims))
+    return out
+
+
+def shape_elems(type_str: str) -> int:
+    total = 0
+    for _, dims in shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in shape_dims(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str          # everything after the opening paren of the op
+
+    @property
+    def operands(self) -> list[str]:
+        depth, i, end = 1, 0, len(self.rest)
+        while i < len(self.rest):
+            c = self.rest[i]
+            if c == "(":
+                depth += 1
+            elif c == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+            i += 1
+        return _OPERAND_RE.findall(self.rest[:end])
+
+    def attr(self, key: str) -> str | None:
+        m = re.search(rf"{key}=%?([\w.\-]+)", self.rest)
+        return m.group(1) if m else None
+
+    def attr_list(self, key: str) -> list[int]:
+        m = re.search(rf"{key}={{([\d,]*)}}", self.rest)
+        return [int(x) for x in m.group(1).split(",") if x] if m else []
+
+
+@dataclasses.dataclass
+class Module:
+    computations: dict[str, list[Instr]]
+    entry: str
+    types: dict[str, str]
+
+
+def parse(text: str) -> Module:
+    computations: dict[str, list[Instr]] = {}
+    types: dict[str, str] = {}
+    entry = ""
+    cur: list[Instr] | None = None
+    for line in text.splitlines():
+        cm = _COMP_RE.match(line)
+        if cm and ("->" in line):
+            name = cm.group(1)
+            cur = computations.setdefault(name, [])
+            if line.lstrip().startswith("ENTRY"):
+                entry = name
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        im = _INSTR_RE.match(line)
+        if im and cur is not None:
+            ins = Instr(im.group(1), im.group(2), im.group(3), im.group(4))
+            cur.append(ins)
+            types[ins.name] = ins.type_str
+    return Module(computations, entry, types)
+
+
+_SCOPE_TAGS = ("attn_core", "moe_ffn", "ssd_core")
+_SCOPE_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def scope_of(rest: str) -> str | None:
+    m = _SCOPE_RE.search(rest)
+    if not m:
+        return None
+    for tag in _SCOPE_TAGS:
+        if tag in m.group(1):
+            return tag
+    return None
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    cpu_upcast_bytes: float = 0.0   # XLA:CPU bf16->f32 dot-operand upcasts
+    coll: dict[str, float] = dataclasses.field(default_factory=dict)
+    # per named-scope (flops, bytes) attribution
+    scopes: dict[str, list] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Costs", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.cpu_upcast_bytes += other.cpu_upcast_bytes * mult
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v * mult
+        for k, (f, b) in other.scopes.items():
+            cur = self.scopes.setdefault(k, [0.0, 0.0])
+            cur[0] += f * mult
+            cur[1] += b * mult
+
+    def tag(self, rest: str, flops: float, byts: float) -> None:
+        sc = scope_of(rest)
+        if sc:
+            cur = self.scopes.setdefault(sc, [0.0, 0.0])
+            cur[0] += flops
+            cur[1] += byts
+
+
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+               "bitcast-convert", "copy", "copy-start", "copy-done",
+               "after-all", "partition-id", "replica-id", "iota"}
+
+
+class Analyzer:
+    def __init__(self, module: Module):
+        self.m = module
+        self._memo: dict[str, Costs] = {}
+
+    # -- helpers ---------------------------------------------------------
+    def _trip_count(self, cond_name: str) -> int:
+        """Max s32 constant in the loop condition ~= trip count for scans."""
+        best = 1
+        for ins in self.m.computations.get(cond_name, []):
+            if ins.op == "constant":
+                m = re.match(r"(\d+)", ins.rest)
+                if m:
+                    best = max(best, int(m.group(1)))
+        return best
+
+    def _dot_flops(self, ins: Instr) -> float:
+        ops = ins.operands
+        if not ops:
+            return 0.0
+        lhs_t = self.m.types.get(ops[0], "")
+        dims = shape_dims(lhs_t)
+        if not dims:
+            return 0.0
+        lhs_dims = dims[0][1]
+        contract = 1
+        for i in ins.attr_list("lhs_contracting_dims"):
+            if i < len(lhs_dims):
+                contract *= lhs_dims[i]
+        result = 1
+        for _, ds in shape_dims(ins.type_str):
+            for d in ds:
+                result *= d
+            break
+        return 2.0 * result * contract
+
+    def _root_op(self, comp_name: str) -> str:
+        comp = self.m.computations.get(comp_name, [])
+        return comp[-1].op if comp else ""
+
+    def _io_bytes(self, ins: Instr) -> float:
+        if ins.op in ("dynamic-update-slice",):
+            ops = ins.operands
+            upd = shape_bytes(self.m.types.get(ops[1], "")) if len(ops) > 1 else 0
+            return 2.0 * upd  # read+write of the slice
+        if ins.op == "scatter":
+            ops = ins.operands
+            upd = sum(shape_bytes(self.m.types.get(o, "")) for o in ops[2:])
+            return 2.0 * upd
+        if ins.op == "fusion":
+            return self._fusion_io(ins)
+        total = shape_bytes(ins.type_str)
+        for o in ins.operands:
+            total += shape_bytes(self.m.types.get(o, ""))
+        return float(total)
+
+    def _fusion_io(self, ins: Instr) -> float:
+        """Traffic of a fusion = bytes actually *touched*, not operand sizes:
+
+        * a parameter consumed only by dynamic-slice ops contributes the
+          slice bytes (scan-over-layers KV caches would otherwise count the
+          whole [L, ...] stacked buffer once per layer),
+        * an in-place dynamic-update-slice of a buffer counts the update
+          region for both the read and the write sides."""
+        called = ins.attr("calls")
+        comp = self.m.computations.get(called or "", [])
+        if not comp:
+            return float(shape_bytes(ins.type_str)
+                         + sum(shape_bytes(self.m.types.get(o, "")) for o in ins.operands))
+        by_name = {i.name: i for i in comp}
+        consumers: dict[str, list[Instr]] = {}
+        for i in comp:
+            for o in i.operands:
+                consumers.setdefault(o, []).append(i)
+
+        # dtype converts / layout bitcasts are free on TPU (they fuse into the
+        # surrounding op's pipeline); trace dataflow through them.
+        TRANSPARENT = ("convert", "bitcast", "copy", "reshape")
+
+        def terminals(name: str, depth: int = 0) -> list[Instr]:
+            outs: list[Instr] = []
+            for c in consumers.get(name, []):
+                if c.op in TRANSPARENT and depth < 8:
+                    outs.extend(terminals(c.name, depth + 1))
+                else:
+                    outs.append(c)
+            return outs
+
+        def upd_bytes(d: Instr) -> float:
+            if len(d.operands) > 1:
+                o = d.operands[1]
+                b = shape_bytes(self.m.types.get(o, ""))
+                if not b and o in by_name:
+                    b = shape_bytes(by_name[o].type_str)
+                return float(b)
+            return 0.0
+
+        def feeds_buffer(d: Instr, pname: str) -> bool:
+            """Is param `pname` the in-place buffer operand (op 0) of DUS d,
+            possibly through transparent ops?"""
+            if not d.operands:
+                return False
+            o = d.operands[0]
+            for _ in range(8):
+                if o == pname:
+                    return True
+                nxt = by_name.get(o)
+                if nxt is None or nxt.op not in TRANSPARENT or not nxt.operands:
+                    return False
+                o = nxt.operands[0]
+            return False
+
+        read = 0.0
+        for pi in (i for i in comp if i.op == "parameter"):
+            terms = terminals(pi.name)
+            if terms and all(t.op == "dynamic-slice" for t in terms):
+                read += sum(shape_bytes(t.type_str) for t in terms)
+            elif terms and all(t.op == "dynamic-update-slice" and feeds_buffer(t, pi.name)
+                               or t.op == "dynamic-update-slice"
+                               for t in terms) and                     all(t.op == "dynamic-update-slice" for t in terms) and                     any(feeds_buffer(t, pi.name) or True for t in terms):
+                # param flows (via converts) into DUS; if it is the updated
+                # buffer, only the overwritten region is touched
+                buf_like = [t for t in terms if shape_elems(t.type_str)
+                            == shape_elems(pi.type_str)]
+                if buf_like:
+                    read += sum(upd_bytes(t) for t in buf_like)
+                else:
+                    read += shape_bytes(pi.type_str)
+            else:
+                read += shape_bytes(pi.type_str)
+
+        write = float(shape_bytes(ins.type_str))
+        result_e = shape_elems(ins.type_str)
+        for d in comp:
+            if d.op == "dynamic-update-slice" and shape_elems(d.type_str) == result_e:
+                write = upd_bytes(d)
+                break
+        return read + write
+
+    def _is_pure_upcast(self, ins: Instr) -> bool:
+        """bf16 -> f32 convert-only fusions: XLA:CPU upcasts bf16 operands
+        before every dot; the TPU MXU consumes bf16 natively, so this traffic
+        does not exist on the target hardware.  Counted separately."""
+        if ins.op != "fusion" or not ins.name.startswith(("convert", "wrapped_convert")):
+            return False
+        called = ins.attr("calls")
+        comp = self.m.computations.get(called or "", [])
+        real = [i for i in comp if i.op not in ("parameter", "bitcast", "copy", "transpose")]
+        if not real or any(i.op not in ("convert",) for i in real):
+            return False
+        return "f32" in ins.type_str
+
+    # -- main walk -------------------------------------------------------
+    def computation(self, name: str) -> Costs:
+        if name in self._memo:
+            return self._memo[name]
+        self._memo[name] = Costs()  # cycle guard
+        c = Costs()
+        for ins in self.m.computations.get(name, []):
+            op = ins.op
+            if op in ("dot", "convolution"):
+                f, b = self._dot_flops(ins), self._io_bytes(ins)
+                c.flops += f
+                c.bytes += b
+                c.tag(ins.rest, f, b)
+            elif op == "while":
+                body = ins.attr("body")
+                cond = ins.attr("condition")
+                trips = self._trip_count(cond) if cond else 1
+                if body:
+                    c.add(self.computation(body), trips)
+                if cond:
+                    c.add(self.computation(cond), trips)
+            elif op == "fusion":
+                called = ins.attr("calls")
+                subf = 0.0
+                if called:
+                    sub = self.computation(called)
+                    subf = sub.flops
+                    c.flops += sub.flops           # dots inside fusions
+                    for k, v in sub.coll.items():
+                        c.coll[k] = c.coll.get(k, 0.0) + v
+                b = self._io_bytes(ins)            # fusion io only
+                if self._is_pure_upcast(ins):
+                    c.cpu_upcast_bytes += b        # XLA:CPU artifact, see above
+                else:
+                    c.bytes += b
+                    c.tag(ins.rest, subf, b)
+            elif op in ("call", "async-start"):
+                called = ins.attr("to") or ins.attr("calls")
+                if called:
+                    c.add(self.computation(called))
+            elif op == "conditional":
+                for key in ("true_computation", "false_computation"):
+                    sub = ins.attr(key)
+                    if sub:
+                        c.add(self.computation(sub), 0.5)
+                m = re.search(r"branch_computations={([^}]*)}", ins.rest)
+                if m:
+                    subs = _OPERAND_RE.findall(m.group(1))
+                    for s in subs:
+                        c.add(self.computation(s), 1.0 / max(len(subs), 1))
+            elif any(op.startswith(k) for k in COLLECTIVES):
+                if op.endswith("-done"):
+                    continue
+                kind = next(k for k in COLLECTIVES if op.startswith(k))
+                b = sum(shape_bytes(self.m.types.get(o, "")) for o in ins.operands)
+                c.coll[kind] = c.coll.get(kind, 0.0) + b * _WIRE_FACTOR[kind]
+                c.bytes += self._io_bytes(ins)
+            elif op in _SKIP_BYTES:
+                continue
+            else:  # unfused top-level elementwise / reduce / gather / dus ...
+                b = self._io_bytes(ins)
+                c.bytes += b
+                c.tag(ins.rest, 0.0, b)
+        self._memo[name] = c
+        return c
+
+    def entry_costs(self) -> Costs:
+        c = self.computation(self.m.entry)
+        c.coll["total"] = sum(v for k, v in c.coll.items() if k != "total")
+        return c
+
+
+def analyze_text(hlo_text: str) -> Costs:
+    return Analyzer(parse(hlo_text)).entry_costs()

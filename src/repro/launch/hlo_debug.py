@@ -1,0 +1,78 @@
+"""Dry-run profiler: top memory/collective/flop contributors of a cell's HLO
+with loop-trip multipliers — the 'profile' of the §Perf hypothesis loop.
+
+    PYTHONPATH=src python -m repro.launch.hlo_debug --arch zamba2-7b --shape train_4k
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+import argparse
+
+from repro.launch.hlo_analysis import Analyzer, parse, scope_of, shape_bytes
+
+
+def top_contributors(hlo_text: str, n: int = 20):
+    m = parse(hlo_text)
+    a = Analyzer(m)
+    rows = []
+
+    def walk(cname, mult=1.0):
+        for ins in m.computations.get(cname, []):
+            op = ins.op
+            if op == "while":
+                body, cond = ins.attr("body"), ins.attr("condition")
+                trips = a._trip_count(cond) if cond else 1
+                if body:
+                    walk(body, mult * trips)
+            elif op == "call":
+                sub = ins.attr("to") or ins.attr("calls")
+                if sub:
+                    walk(sub, mult)
+            elif op in ("parameter", "constant", "tuple", "get-tuple-element",
+                        "bitcast", "copy", "iota"):
+                continue
+            else:
+                b = a._io_bytes(ins)
+                f = 0.0
+                if op in ("dot", "convolution"):
+                    f = a._dot_flops(ins)
+                elif op == "fusion":
+                    called = ins.attr("calls")
+                    if called:
+                        f = a.computation(called).flops
+                rows.append((b * mult, f * mult, op, ins.name, ins.type_str[:70],
+                             mult, scope_of(ins.rest) or ""))
+
+    walk(m.entry)
+    rows.sort(reverse=True)
+    return rows[:n], rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--rules", default=None)
+    ap.add_argument("--top", type=int, default=20)
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import build_cell
+    from repro.launch.mesh import make_production_mesh
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    lowered, meta = build_cell(args.arch, args.shape, mesh, rules=args.rules)
+    compiled = lowered.compile()
+    text = compiled.as_text()
+    top, rows = top_contributors(text, args.top)
+    total_b = sum(r[0] for r in rows)
+    total_f = sum(r[1] for r in rows)
+    print(f"total bytes/dev {total_b/1e9:.1f}GB  flops/dev {total_f/1e12:.2f}T")
+    print(f"{'GB':>9} {'GF':>9} {'x':>6} {'op':20} {'scope':10} name/type")
+    for b, f, op, name, ty, mult, sc in top:
+        print(f"{b/1e9:9.2f} {f/1e9:9.1f} {mult:6.0f} {op:20} {sc:10} {name[:28]:28} {ty}")
+    ma = compiled.memory_analysis()
+    print("memory:", {k: round(getattr(ma, k + '_size_in_bytes', 0)/1e9, 2)
+                      for k in ("argument", "output", "temp", "alias")})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Cluster training driver.
+
+Single-controller on this host; on a real multi-host TPU cluster pass
+--coordinator/--num-processes/--process-id (jax.distributed) and each host
+runs the same binary — the GSPMD program, checkpoint layout, and data shards
+are already multi-host-aware (shard_id = process index).
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b --steps 100 \
+        [--mesh-data 16 --mesh-model 16 --rules default] \
+        [--coordinator host:1234 --num-processes 64 --process-id 0]
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, get_smoke
+from repro.data.tokenizer import TOKENIZER
+from repro.train import optimizer as opt
+from repro.train.loop import LoopConfig, run
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--compress-grads", action="store_true")
+    # multi-host
+    ap.add_argument("--coordinator", default=None)
+    ap.add_argument("--num-processes", type=int, default=1)
+    ap.add_argument("--process-id", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.coordinator:
+        jax.distributed.initialize(coordinator_address=args.coordinator,
+                                   num_processes=args.num_processes,
+                                   process_id=args.process_id)
+
+    cfg = (get_smoke(args.arch) if args.smoke else get_config(args.arch))
+    cfg = cfg.with_(vocab_size=TOKENIZER.vocab_size) if args.smoke else cfg
+    loop = LoopConfig(steps=args.steps, batch=args.batch, seq_len=args.seq_len,
+                      microbatches=args.microbatches, ckpt_dir=args.ckpt_dir,
+                      ckpt_every=args.ckpt_every,
+                      compress_grads=args.compress_grads,
+                      shard_id=args.process_id, num_shards=args.num_processes)
+    ocfg = opt.OptimizerConfig(learning_rate=args.lr, total_steps=args.steps,
+                               warmup_steps=max(args.steps // 20, 1))
+    metrics = run(cfg, ocfg, loop)
+    print("[train] final:", metrics)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,257 @@
+"""GQA attention: full / chunked (memory-safe at 32k+) / sliding-window / cross /
+decode-against-cache.  Pure jnp; the Pallas flash kernels in ``repro.kernels``
+are the TPU hot path and are selected via ``cfg.attn_impl == 'pallas'``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import ParamSpec
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+def attention_spec(cfg: ModelConfig, *, cross: bool = False) -> dict:
+    d, h, hk, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    specs = {
+        ("wq",): ParamSpec((d, h, hd), ("embed_in", "heads", "qkv"), init="scaled"),
+        ("wk",): ParamSpec((d, hk, hd), ("embed_in", "kv_heads", "qkv"), init="scaled"),
+        ("wv",): ParamSpec((d, hk, hd), ("embed_in", "kv_heads", "qkv"), init="scaled"),
+        ("wo",): ParamSpec((h, hd, d), ("heads", "qkv_in", "embed_out"), init="scaled"),
+    }
+    if cfg.qkv_bias and not cross:
+        specs[("bq",)] = ParamSpec((h, hd), ("heads", "qkv"), init="zeros", dtype=jnp.float32)
+        specs[("bk",)] = ParamSpec((hk, hd), ("kv_heads", "qkv"), init="zeros", dtype=jnp.float32)
+        specs[("bv",)] = ParamSpec((hk, hd), ("kv_heads", "qkv"), init="zeros", dtype=jnp.float32)
+    return specs
+
+
+def project_qkv(params, x, mem=None, *, cfg: ModelConfig, positions=None):
+    """Project hidden states to (q, k, v). ``mem`` (cross-attn) supplies k/v."""
+    src = x if mem is None else mem
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", src, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, params["wv"])
+    if "bq" in params:
+        q = q + params["bq"].astype(q.dtype)
+        k = k + params["bk"].astype(k.dtype)
+        v = v + params["bv"].astype(v.dtype)
+    if positions is not None and mem is None:  # RoPE only for self-attention
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def out_proj(params, attn_out):
+    return jnp.einsum("bshk,hkd->bsd", attn_out, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Core softmax attention (GQA-aware)
+# ---------------------------------------------------------------------------
+
+
+def _repeat_kv(k, num_heads):
+    """[B,S,Hk,hd] -> [B,S,H,hd]. The repeat-KV formulation (instead of a
+    [Hk, G] grouped reshape) keeps the q-heads dimension intact so GSPMD can
+    shard it over the ``model`` axis even when Hk < mesh width — a grouped
+    reshape of a sharded 64-head axis into [8, 8] is unpartitionable and
+    silently replicates attention compute across the whole model axis."""
+    hk = k.shape[2]
+    if hk == num_heads:
+        return k
+    return jnp.repeat(k, num_heads // hk, axis=2)
+
+
+def gqa_attend(q, k, v, mask):
+    """q:[B,Sq,H,hd] k,v:[B,Sk,Hk,hd] mask: broadcastable to [B,1,Sq,Sk] (bool).
+
+    Returns [B,Sq,H,hd]. Softmax in f32.
+
+    Sq > 1 (train/prefill) uses the repeat-KV formulation so the q-heads dim
+    shards over the model axis (a grouped reshape of a sharded heads axis is
+    unpartitionable).  Sq == 1 (decode) uses the grouped einsum instead: the
+    decode step is KV-bandwidth-bound, repeat-KV would materialize (and
+    stream) group-times more cache bytes, and the tiny single-token q is
+    replicated anyway (§Perf iteration log, qwen2-72b x decode_32k).
+    """
+    with jax.named_scope("attn_core"):
+        b, sq, h, hd = q.shape
+        hk = k.shape[2]
+        scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+        if sq == 1 and hk != h:
+            g = h // hk
+            qg = q.reshape(b, 1, hk, g, hd)
+            scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                                preferred_element_type=jnp.float32) * scale
+            scores = jnp.where(mask[:, :, None] if mask.ndim == 4 else mask,
+                               scores, NEG_INF)
+            probs = jax.nn.softmax(scores, axis=-1)
+            out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v)
+            return out.reshape(b, 1, h, hd)
+        k = _repeat_kv(k, h)
+        v = _repeat_kv(v, h)
+        scores = jnp.einsum("bqhd,bshd->bhqs", q, k, preferred_element_type=jnp.float32)
+        scores = scores * scale
+        scores = jnp.where(mask, scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhqs,bshd->bqhd", probs.astype(v.dtype), v)
+        return out
+
+
+def make_mask(q_pos, k_pos, *, causal: bool, window: int = 0, k_valid=None):
+    """Boolean mask [.., Sq, Sk] from absolute positions."""
+    m = jnp.ones(q_pos.shape[-1:] + k_pos.shape[-1:], bool)
+    if causal:
+        m = q_pos[..., :, None] >= k_pos[..., None, :]
+    if window:
+        m = m & (q_pos[..., :, None] - k_pos[..., None, :] < window)
+    if k_valid is not None:
+        m = m & k_valid[..., None, :]
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Full / chunked self-attention over a sequence
+# ---------------------------------------------------------------------------
+
+
+def self_attention(params, x, *, cfg: ModelConfig, causal: bool = True):
+    """Training/prefill self-attention with automatic q-chunking for long seq.
+
+    Returns (out [B,S,D], (k, v)) — k/v are handed back so prefill can fill a
+    decode cache without recomputing projections.
+    """
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q, k, v = project_qkv(params, x, cfg=cfg, positions=positions)
+    impl = cfg.attn_impl
+    if impl == "auto":
+        impl = "chunked" if s > 8 * cfg.attn_q_chunk else "full"
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=causal, window=cfg.sliding_window)
+    elif impl == "chunked":
+        out = _kv_chunked_attention(q, k, v, cfg=cfg, causal=causal)
+    else:
+        mask = make_mask(jnp.arange(s), jnp.arange(s), causal=causal, window=cfg.sliding_window)
+        out = gqa_attend(q, k, v, mask[None, None])
+    return out_proj(params, out), (k, v)
+
+
+def _kv_chunked_attention(q, k, v, *, cfg: ModelConfig, causal: bool):
+    """Flash-style online-softmax scan over KV blocks.
+
+    q is never sliced (it may be sequence-sharded across the ``model`` axis —
+    slicing a sharded dim would force GSPMD to reshard); k/v are sliced on
+    their (replicated/gathered) sequence dim, which is free.  Peak score
+    buffer is [B, H, Sq_local, C] for one KV block.
+    """
+    with jax.named_scope("attn_core"):
+        b, s, h, hd = q.shape
+        c = min(cfg.attn_q_chunk, s)
+        if s % c:  # pad KV with masked tail positions (q is never padded)
+            pad = c - s % c
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s_kv = k.shape[1]
+        n = s_kv // c
+        k = _repeat_kv(k, h)
+        v = _repeat_kv(v, h)
+        kc = k.reshape(b, n, c, h, hd).transpose(1, 0, 2, 3, 4)  # [n,B,C,H,hd]
+        vc = v.reshape(b, n, c, h, hd).transpose(1, 0, 2, 3, 4)
+        q_pos = jnp.arange(s)
+        scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+        f32 = jnp.float32
+
+        m0 = jnp.full((b, h, s), NEG_INF, f32)
+        l0 = jnp.zeros((b, h, s), f32)
+        o0 = jnp.zeros((b, s, h, hd), f32)
+
+        def body(carry, kv_i):
+            m, l, o = carry
+            k_blk, v_blk, i = kv_i
+            k_pos = i * c + jnp.arange(c)
+            mask = make_mask(q_pos, k_pos, causal=causal, window=cfg.sliding_window,
+                             k_valid=k_pos < s)  # excludes padded tail keys
+            sc = jnp.einsum("bqhd,bshd->bhqs", q, k_blk, preferred_element_type=f32) * scale
+            sc = jnp.where(mask[None, None], sc, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(sc - m_new[..., None])
+            l = l * alpha + jnp.sum(p, axis=-1)
+            o = o * alpha.transpose(0, 2, 1)[..., None] + jnp.einsum(
+                "bhqs,bshd->bqhd", p.astype(v_blk.dtype), v_blk).astype(f32)
+            return (m_new, l, o), None
+
+        (m, l, o), _ = jax.lax.scan(body, (m0, l0, o0), (kc, vc, jnp.arange(n)))
+        o = o / jnp.maximum(l.transpose(0, 2, 1)[..., None], 1e-30)
+        return o.astype(q.dtype)
+
+
+def cross_attention(params, x, mem, *, cfg: ModelConfig, mem_valid=None):
+    """Cross-attention to a memory (image patches / audio frames / encoder out)."""
+    q, k, v = project_qkv(params, x, mem, cfg=cfg)
+    sq, sk = x.shape[1], mem.shape[1]
+    mask = make_mask(jnp.arange(sq), jnp.arange(sk), causal=False, k_valid=mem_valid)
+    out = gqa_attend(q, k, v, mask[None, None])
+    return out_proj(params, out)
+
+
+# ---------------------------------------------------------------------------
+# Decode-step attention against a KV cache
+# ---------------------------------------------------------------------------
+
+
+def decode_self_attention(params, x, k_cache, v_cache, cache_len, *, cfg: ModelConfig):
+    """x: [B,1,D]; caches: [B,Smax,Hk,hd]. Writes new kv at ``cache_len``.
+
+    ``cache_len`` may be a scalar (uniform batch; dry-run serve_step) or a
+    [B] vector (continuous batching: per-slot lengths).
+    Returns (out [B,1,D], new_k_cache, new_v_cache).
+    """
+    b = x.shape[0]
+    if cfg.decode_cp:
+        from repro.dist import sharding as shd
+        ctx = getattr(shd._ctx, "cfg", None)
+        if ctx is not None and "model" in ctx[0].axis_names:
+            from repro.dist.context_parallel import cp_decode_self_attention
+            mesh, rules = ctx
+            spec = shd.resolve_pspec(k_cache.shape, ("batch", "kv_seq", "kv_heads", "qkv"),
+                                     mesh, rules)
+            seq_axes = spec[1] if spec[1] is not None else "model"
+            return cp_decode_self_attention(params, x, k_cache, v_cache, cache_len,
+                                            cfg=cfg, mesh=mesh, axis=seq_axes,
+                                            dp_spec=spec[0])
+    lens = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+    positions = lens[:, None]
+    q, k_new, v_new = project_qkv(params, x, cfg=cfg, positions=positions)
+    bidx = jnp.arange(b)
+    k_cache = k_cache.at[bidx, lens].set(k_new[:, 0].astype(k_cache.dtype), mode="drop")
+    v_cache = v_cache.at[bidx, lens].set(v_new[:, 0].astype(v_cache.dtype), mode="drop")
+    s_max = k_cache.shape[1]
+    k_pos = jnp.arange(s_max)
+    k_valid = k_pos[None, :] <= lens[:, None]
+    if cfg.sliding_window:
+        k_valid = k_valid & (lens[:, None] - k_pos[None, :] < cfg.sliding_window)
+    mask = k_valid[:, None, None, :]
+    out = gqa_attend(q, k_cache, v_cache, mask)
+    return out_proj(params, out), k_cache, v_cache
+
+
+def decode_cross_attention(params, x, k_mem, v_mem, *, cfg: ModelConfig):
+    """Cross-attn during decode with precomputed memory K/V: [B,Sm,Hk,hd]."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    if "bq" in params:
+        q = q + params["bq"].astype(q.dtype)
+    mask = jnp.ones((1, 1, 1, k_mem.shape[1]), bool)
+    out = gqa_attend(q, k_mem, v_mem, mask)
+    return out_proj(params, out)

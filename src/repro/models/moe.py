@@ -1,0 +1,102 @@
+"""Mixture-of-Experts FFN: top-k routing with per-row capacity grouping.
+
+Design (TPU-native, GSPMD-friendly):
+  * tokens are grouped *per batch row*, so position-in-expert cumsums stay
+    device-local under batch sharding (no cross-device prefix ops),
+  * dispatch/combine are scatter/gather into a dense [B, E, C, d] buffer —
+    expert compute is a single einsum that shards cleanly with E on the
+    ``model`` mesh axis (expert parallelism) when E is divisible by it,
+    otherwise d_ff takes the ``model`` axis (tensor parallelism inside
+    experts; mixtral's 8 experts on a 16-wide axis),
+  * dropped tokens (beyond capacity) fall into an overflow slot that is
+    sliced away — standard capacity-factor semantics.
+
+Returns an aux dict with load-balance and router-z losses (ST-MoE style).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import ParamSpec
+from repro.configs.base import ModelConfig
+
+
+def moe_spec(cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    return {
+        ("router",): ParamSpec((d, e), ("embed_in", "experts_in"), init="scaled", dtype=jnp.float32),
+        ("w_gate",): ParamSpec((e, d, f), ("experts", "embed_in", "mlp_out"), init="scaled"),
+        ("w_up",): ParamSpec((e, d, f), ("experts", "embed_in", "mlp_out"), init="scaled"),
+        ("w_down",): ParamSpec((e, f, d), ("experts", "mlp", "embed_out"), init="scaled"),
+    }
+
+
+def capacity(cfg: ModelConfig, seq_len: int) -> int:
+    c = math.ceil(seq_len * cfg.experts_per_token / cfg.num_experts * cfg.capacity_factor)
+    return max(int(c), 4)
+
+
+def moe_ffn(params, x, *, cfg: ModelConfig):
+    """x: [B, S, d] -> ([B, S, d], aux_losses dict).
+
+    Under an active mesh (dry-run / cluster runs) dispatch goes through the
+    shard_map implementation (moe_sharded.py) — GSPMD's handling of the
+    dispatch scatter all-reduces the full dispatch buffer otherwise."""
+    with jax.named_scope("moe_ffn"):
+        from repro.dist import sharding as shd
+        ctx = getattr(shd._ctx, "cfg", None)
+        if ctx is not None and "model" in ctx[0].axis_names:
+            from repro.models.moe_sharded import moe_ffn_sharded
+            return moe_ffn_sharded(params, x, cfg=cfg, mesh=ctx[0])
+        return _moe_ffn(params, x, cfg=cfg)
+
+
+def _moe_ffn(params, x, *, cfg: ModelConfig):
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    cap = capacity(cfg, s)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # [B,S,k]
+    if k > 1:  # renormalize selected gates (mixtral convention)
+        gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # position of each (token, choice) within its expert, per batch row.
+    onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.int32)      # [B,S,k,E]
+    flat = onehot.reshape(b, s * k, e)                           # choice-major within token
+    pos = jnp.cumsum(flat, axis=1) - 1                           # [B,S*k,E]
+    pos = jnp.sum(pos * flat, axis=-1).reshape(b, s, k)          # [B,S,k]
+    dropped = pos >= cap
+    slot = jnp.where(dropped, cap, pos)                          # overflow slot = cap
+
+    # dispatch: buffer[b, e, c, :] = x[b, s, :]
+    buf = jnp.zeros((b, e, cap + 1, d), x.dtype)
+    bidx = jnp.arange(b)[:, None, None]
+    buf = buf.at[bidx, expert_idx, slot].add(
+        jnp.broadcast_to(x[:, :, None, :], (b, s, k, d)), mode="drop"
+    )
+    buf = buf[:, :, :cap]
+
+    # expert FFN (dense einsum; E shards over 'model' -> expert parallelism)
+    g = jnp.einsum("becd,edf->becf", buf, params["w_gate"])
+    u = jnp.einsum("becd,edf->becf", buf, params["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    out_buf = jnp.einsum("becf,efd->becd", h, params["w_down"])
+    out_buf = jnp.concatenate([out_buf, jnp.zeros((b, e, 1, d), out_buf.dtype)], axis=2)
+
+    # combine: y[b, s] = sum_k gate * out_buf[b, e_k, slot_k]
+    gathered = out_buf[bidx, expert_idx, slot]                   # [B,S,k,d]
+    gates = jnp.where(dropped, 0.0, gate_vals).astype(x.dtype)
+    y = jnp.einsum("bskd,bsk->bsd", gathered, gates)
+
+    # aux losses
+    frac_tokens = jnp.mean(jax.nn.one_hot(expert_idx, e, dtype=jnp.float32), axis=(1, 2))  # [B,E]
+    mean_probs = jnp.mean(probs, axis=1)                                                    # [B,E]
+    lb_loss = e * jnp.mean(jnp.sum(frac_tokens * mean_probs, axis=-1))
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    aux = {"moe_lb": lb_loss * cfg.router_aux_coef, "moe_z": z_loss * 1e-3}
+    return y, aux

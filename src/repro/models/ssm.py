@@ -1,0 +1,234 @@
+"""Mamba2-style state-space layer (SSD) with chunked parallel scan.
+
+The core primitive ``ssd_chunked`` implements the scalar-decay SSD recurrence
+
+    h_t = a_t * h_{t-1} + B_t (x_t)^T        (state [H, P, N], a_t scalar/head)
+    y_t = C_t^T h_t
+
+as (intra-chunk quadratic attention-like pass) + (inter-chunk state scan).
+We scan over chunks with the running state as carry so the [H, Q, Q] decay
+matrices exist for one chunk at a time (memory-safe at 500k sequence length).
+The same primitive powers the xLSTM mLSTM block (see xlstm.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import ParamSpec
+from repro.configs.base import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Core SSD primitive
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(x, log_a, B, C, *, chunk: int, h0=None, normalize: bool = False):
+    """Chunked scalar-decay SSD.
+
+    x:     [b, L, H, P]   (inputs, already gated/scaled by dt etc.)
+    log_a: [b, L, H]      (log decay per head, <= 0)
+    B, C:  [b, L, G, N]   (input/output projections, G groups broadcast to H)
+    h0:    optional initial state [b, H, P, N]
+
+    Returns (y [b, L, H, P], h_final [b, H, P, N]).
+    If ``normalize``, y is divided by the matching scalar recurrence of a
+    normalizer n_t = a_t n_{t-1} + B_t (mLSTM denominator).
+    """
+    b, L, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    Q = min(chunk, L)
+    if L % Q:  # pad with identity steps (a=1, zero input) — state passes through
+        pad = Q - L % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        y, h = ssd_chunked(x, log_a, B, C, chunk=Q, h0=h0, normalize=normalize)
+        return y[:, :L], h
+    nc = L // Q
+    hpg = H // G
+    f32 = jnp.float32
+
+    def to_chunks(t):
+        return t.reshape((b, nc, Q) + t.shape[2:])
+
+    xc = to_chunks(x)
+    lac = to_chunks(log_a).astype(f32)
+    Bc, Cc = to_chunks(B), to_chunks(C)
+    if h0 is None:
+        h0 = jnp.zeros((b, H, P, N), f32)
+
+    # move chunk axis to front for scan
+    xc = jnp.moveaxis(xc, 1, 0)
+    lac = jnp.moveaxis(lac, 1, 0)
+    Bc = jnp.moveaxis(Bc, 1, 0)
+    Cc = jnp.moveaxis(Cc, 1, 0)
+
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def body(h_prev, inp):
+        xq, laq, Bq, Cq = inp            # [b,Q,H,P], [b,Q,H], [b,Q,G,N]
+        cum = jnp.cumsum(laq, axis=1)    # [b,Q,H]
+        # group -> heads broadcast
+        Bh = jnp.repeat(Bq, hpg, axis=2) if G != H else Bq   # [b,Q,H,N]
+        Ch = jnp.repeat(Cq, hpg, axis=2) if G != H else Cq
+
+        # intra-chunk: scores[t,s] = C_t . B_s * exp(cum_t - cum_s), s <= t
+        scores = jnp.einsum("bqhn,bshn->bhqs", Ch.astype(f32), Bh.astype(f32))
+        decay = jnp.exp(cum[:, :, None, :].transpose(0, 3, 1, 2)
+                        - cum[:, None, :, :].transpose(0, 3, 1, 2))  # [b,H,Q,Q]
+        w = jnp.where(mask[None, None], scores * decay, 0.0)
+        y_intra = jnp.einsum("bhqs,bshp->bqhp", w, xq.astype(f32))
+
+        # inter-chunk contribution from carried state
+        in_decay = jnp.exp(cum)          # [b,Q,H]
+        y_inter = jnp.einsum("bqhn,bhpn->bqhp", Ch.astype(f32) * in_decay[..., None], h_prev)
+
+        # new chunk state
+        out_decay = jnp.exp(cum[:, -1:, :] - cum)  # decay from s to end of chunk
+        S = jnp.einsum("bqhn,bqhp->bhpn", Bh.astype(f32) * out_decay[..., None], xq.astype(f32))
+        a_chunk = jnp.exp(cum[:, -1, :])           # [b,H]
+        h_new = a_chunk[:, :, None, None] * h_prev + S
+        return h_new, (y_intra + y_inter).astype(x.dtype)
+
+    with jax.named_scope("ssd_core"):
+        h_final, ys = jax.lax.scan(body, h0, (xc, lac, Bc, Cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, L, H, P)
+
+    if normalize:
+        ones = jnp.ones_like(x[..., :1])
+        n, _ = ssd_chunked(ones, log_a, B, C, chunk=chunk, normalize=False)
+        y = (y.astype(f32) / jnp.maximum(jnp.abs(n.astype(f32)), 1.0)).astype(x.dtype)
+    return y, h_final.astype(f32)
+
+
+def ssd_decode_step(h, x, log_a, B, C):
+    """Single-token SSD update. h:[b,H,P,N] x:[b,H,P] log_a:[b,H] B,C:[b,G,N]."""
+    G, H = B.shape[1], x.shape[1]
+    hpg = H // G
+    Bh = jnp.repeat(B, hpg, axis=1) if G != H else B  # [b,H,N]
+    Ch = jnp.repeat(C, hpg, axis=1) if G != H else C
+    a = jnp.exp(log_a.astype(jnp.float32))[:, :, None, None]
+    h = a * h + jnp.einsum("bhn,bhp->bhpn", Bh.astype(jnp.float32), x.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhpn->bhp", Ch.astype(jnp.float32), h)
+    return h, y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def mamba2_spec(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    H = d_in // 64  # head size P=64, mamba2 default
+    N, G, cw = cfg.ssm_state, cfg.ssm_groups, cfg.ssm_conv
+    conv_dim = d_in + 2 * G * N
+    return {
+        ("in_proj",): ParamSpec((d, 2 * d_in + 2 * G * N + H), ("embed_in", "ssm_in"), init="scaled"),
+        ("conv_w",): ParamSpec((cw, conv_dim), ("conv", "ssm_in"), init="scaled"),
+        ("conv_b",): ParamSpec((conv_dim,), ("ssm_in",), init="zeros", dtype=jnp.float32),
+        ("A_log",): ParamSpec((H,), ("heads",), init="zeros", dtype=jnp.float32),
+        ("dt_bias",): ParamSpec((H,), ("heads",), init="zeros", dtype=jnp.float32),
+        ("D",): ParamSpec((H,), ("heads",), init="ones", dtype=jnp.float32),
+        ("norm_scale",): ParamSpec((d_in,), ("ssm_inner",), init="ones", dtype=jnp.float32),
+        ("out_proj",): ParamSpec((d_in, d), ("ssm_inner", "embed_out"), init="scaled"),
+    }
+
+
+def _mamba2_dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = d_in // 64
+    return d_in, H, 64, cfg.ssm_state, cfg.ssm_groups
+
+
+def _split_in_proj(cfg, proj):
+    d_in, H, P, N, G = _mamba2_dims(cfg)
+    z, xbc_dt = jnp.split(proj, [d_in], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [d_in + 2 * G * N], axis=-1)
+    return z, xbc, dt
+
+
+def _gated_norm(scale, y, z, eps):
+    """Mamba2's RMSNorm(y * silu(z))."""
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps) * scale).astype(y.dtype)
+
+
+def mamba2_forward(params, x, *, cfg: ModelConfig, state=None, return_state: bool = False):
+    """Full-sequence Mamba2 mixer. x: [b, L, d] -> [b, L, d] (+ optional state)."""
+    b, L, d = x.shape
+    d_in, H, P, N, G = _mamba2_dims(cfg)
+    proj = jnp.einsum("bld,de->ble", x, params["in_proj"])
+    z, xbc, dt = _split_in_proj(cfg, proj)
+
+    # depthwise causal conv over (x, B, C)
+    cw = cfg.ssm_conv
+    if state is None:
+        pad = jnp.pad(xbc, ((0, 0), (cw - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([state["conv"].astype(xbc.dtype), xbc], axis=1)
+    conv = sum(pad[:, i:i + L] * params["conv_w"][i].astype(x.dtype) for i in range(cw))
+    conv = jax.nn.silu((conv + params["conv_b"].astype(x.dtype)).astype(jnp.float32)).astype(x.dtype)
+    xs, B, C = jnp.split(conv, [d_in, d_in + G * N], axis=-1)
+    xs = xs.reshape(b, L, H, P)
+    B = B.reshape(b, L, G, N)
+    C = C.reshape(b, L, G, N)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [b,L,H]
+    log_a = -dt * jnp.exp(params["A_log"])
+    x_in = (xs.astype(jnp.float32) * dt[..., None]).astype(x.dtype)
+
+    y, h_final = ssd_chunked(x_in, log_a, B, C, chunk=cfg.ssm_chunk,
+                             h0=state["h"] if state is not None else None)
+    y = y + xs * params["D"][None, None, :, None].astype(x.dtype)
+    y = _gated_norm(params["norm_scale"], y.reshape(b, L, d_in), z, cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, params["out_proj"])
+    if return_state:
+        new_conv = pad[:, L:] if state is not None else xbc[:, max(L - (cw - 1), 0):]
+        if new_conv.shape[1] < cw - 1:  # short sequences: left-pad with zeros
+            z0 = jnp.zeros((b, cw - 1 - new_conv.shape[1], new_conv.shape[2]), new_conv.dtype)
+            new_conv = jnp.concatenate([z0, new_conv], axis=1)
+        return out, {"conv": new_conv, "h": h_final}
+    return out
+
+
+def mamba2_state_specs(cfg: ModelConfig, batch: int) -> dict:
+    d_in, H, P, N, G = _mamba2_dims(cfg)
+    conv_dim = d_in + 2 * G * N
+    return {
+        ("conv",): ParamSpec((batch, cfg.ssm_conv - 1, conv_dim), ("batch", None, "ssm_in"),
+                             dtype=jnp.dtype(cfg.dtype), init="zeros"),
+        ("h",): ParamSpec((batch, H, P, N), ("batch", "heads", None, None),
+                          dtype=jnp.float32, init="zeros"),
+    }
+
+
+def mamba2_decode(params, state, x, *, cfg: ModelConfig):
+    """Single-token step. x: [b, 1, d]; state: {'conv': [b,cw-1,Cd], 'h': [b,H,P,N]}."""
+    b, _, d = x.shape
+    d_in, H, P, N, G = _mamba2_dims(cfg)
+    proj = jnp.einsum("bld,de->ble", x, params["in_proj"])[:, 0]
+    z, xbc, dt = _split_in_proj(cfg, proj)
+
+    hist = jnp.concatenate([state["conv"], xbc[:, None, :]], axis=1)  # [b,cw,Cd]
+    conv = jnp.einsum("bwc,wc->bc", hist.astype(jnp.float32), params["conv_w"])
+    conv = jax.nn.silu(conv + params["conv_b"]).astype(x.dtype)
+    new_conv = hist[:, 1:]
+
+    xs, B, C = jnp.split(conv, [d_in, d_in + G * N], axis=-1)
+    xs = xs.reshape(b, H, P)
+    B = B.reshape(b, G, N)
+    C = C.reshape(b, G, N)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    log_a = -dtv * jnp.exp(params["A_log"])
+    h, y = ssd_decode_step(state["h"], (xs.astype(jnp.float32) * dtv[..., None]).astype(x.dtype), log_a, B, C)
+    y = y + xs * params["D"][None, :, None].astype(x.dtype)
+    y = _gated_norm(params["norm_scale"], y.reshape(b, 1, d_in), z[:, None, :], cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, params["out_proj"])
+    return {"conv": new_conv, "h": h}, out

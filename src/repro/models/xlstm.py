@@ -1,0 +1,205 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunked-parallel via the SSD primitive)
+and sLSTM (scalar memory with exp gates + stabilizer, sequential scan).
+
+Structure follows arXiv:2405.04517: pre-norm residual mixer blocks; every
+``cfg.slstm_every``-th block is an sLSTM, the rest are mLSTM.  Deviation
+(recorded in DESIGN.md): the mLSTM input gate uses the sigmoid (log-domain
+-softplus) parameterization rather than the unbounded exp gate, which removes
+the running max-stabilizer state while keeping the matrix-memory/normalizer
+structure intact; sLSTM keeps the faithful exp gates + m stabilizer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import ParamSpec
+from repro.configs.base import ModelConfig
+from repro.models.layers import rmsnorm, rmsnorm_spec
+from repro.models.ssm import ssd_chunked, ssd_decode_step
+
+EXPAND = 2  # mLSTM internal up-projection factor
+
+
+def _mlstm_dims(cfg: ModelConfig):
+    d_in = EXPAND * cfg.d_model
+    H = cfg.num_heads
+    P = d_in // H       # value head dim
+    N = P               # key/query head dim
+    return d_in, H, P, N
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+
+def mlstm_spec(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_in, H, P, N = _mlstm_dims(cfg)
+    cw = cfg.ssm_conv
+    return {
+        ("in_proj",): ParamSpec((d, 2 * d_in), ("embed_in", "mlp"), init="scaled"),
+        ("conv_w",): ParamSpec((cw, d_in), ("conv", "mlp"), init="scaled"),
+        ("conv_b",): ParamSpec((d_in,), ("mlp",), init="zeros", dtype=jnp.float32),
+        ("wq",): ParamSpec((d_in, H, N), ("mlp_in", "heads", "qkv"), init="scaled"),
+        ("wk",): ParamSpec((d_in, H, N), ("mlp_in", "heads", "qkv"), init="scaled"),
+        ("wv",): ParamSpec((d_in, H, P), ("mlp_in", "heads", "qkv"), init="scaled"),
+        ("w_gates",): ParamSpec((d_in, 2 * H), ("mlp_in", "heads"), init="scaled", dtype=jnp.float32),
+        ("b_gates",): ParamSpec((2 * H,), ("heads",), init="zeros", dtype=jnp.float32),
+        ("norm_scale",): ParamSpec((d_in,), ("mlp",), init="ones", dtype=jnp.float32),
+        ("out_proj",): ParamSpec((d_in, d), ("mlp", "embed_out"), init="scaled"),
+    }
+
+
+def _mlstm_qkv_gates(params, x, *, cfg: ModelConfig, conv_hist=None):
+    """Common projection path. x: [b, L, d]. Returns (q,k,v,log_f,log_i,z,new_hist)."""
+    b, L, d = x.shape
+    d_in, H, P, N = _mlstm_dims(cfg)
+    proj = jnp.einsum("bld,de->ble", x, params["in_proj"])
+    x_in, z = jnp.split(proj, 2, axis=-1)
+
+    cw = cfg.ssm_conv
+    if conv_hist is None:
+        hist_full = jnp.pad(x_in, ((0, 0), (cw - 1, 0), (0, 0)))
+        new_hist = x_in[:, L - (cw - 1):] if L >= cw - 1 else None
+    else:
+        hist_full = jnp.concatenate([conv_hist.astype(x_in.dtype), x_in], axis=1)
+        new_hist = hist_full[:, -(cw - 1):]
+    conv = sum(hist_full[:, i:i + L] * params["conv_w"][i].astype(x.dtype) for i in range(cw))
+    conv = jax.nn.silu((conv + params["conv_b"].astype(x.dtype)).astype(jnp.float32)).astype(x.dtype)
+
+    q = jnp.einsum("ble,ehn->blhn", conv, params["wq"]) * (1.0 / jnp.sqrt(N).astype(x.dtype))
+    k = jnp.einsum("ble,ehn->blhn", conv, params["wk"])
+    v = jnp.einsum("ble,ehp->blhp", x_in, params["wv"])
+    gates = jnp.einsum("ble,eh->blh", x_in.astype(jnp.float32), params["w_gates"]) + params["b_gates"]
+    f_pre, i_pre = jnp.split(gates, 2, axis=-1)  # [b,L,H]
+    log_f = -jax.nn.softplus(-f_pre)             # log sigmoid(f)
+    log_i = -jax.nn.softplus(-i_pre)
+    return q, k, v, log_f, log_i, z, new_hist
+
+
+def mlstm_forward(params, x, *, cfg: ModelConfig, state=None, return_state: bool = False):
+    """Full-sequence mLSTM mixer. state: optional dict(C, n, conv)."""
+    b, L, d = x.shape
+    d_in, H, P, N = _mlstm_dims(cfg)
+    conv_hist = state["conv"] if state is not None else None
+    q, k, v, log_f, log_i, z, new_hist = _mlstm_qkv_gates(params, x, cfg=cfg, conv_hist=conv_hist)
+
+    # fold input gate into k so the normalizer recurrence sees it too
+    k_i = k.astype(jnp.float32) * jnp.exp(log_i)[..., None]
+    h0 = state["C"] if state is not None else None
+    n0 = state["n"][..., None, :] if state is not None else None  # [b,H,1,N]
+    y, C_f = ssd_chunked(v, log_f, k_i.astype(v.dtype), q, chunk=cfg.ssm_chunk, h0=h0)
+    ones = jnp.ones(v.shape[:3] + (1,), v.dtype)
+    nqt, n_f = ssd_chunked(ones, log_f, k_i.astype(v.dtype), q, chunk=cfg.ssm_chunk, h0=n0)
+    y = (y.astype(jnp.float32) / jnp.maximum(jnp.abs(nqt.astype(jnp.float32)), 1.0)).astype(x.dtype)
+
+    y = y.reshape(b, L, d_in)
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(var + cfg.norm_eps) * params["norm_scale"]).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("ble,ed->bld", y, params["out_proj"])
+    if return_state:
+        return out, {"C": C_f, "n": n_f[:, :, 0, :], "conv": new_hist}
+    return out
+
+
+def mlstm_state_specs(cfg: ModelConfig, batch: int) -> dict:
+    d_in, H, P, N = _mlstm_dims(cfg)
+    return {
+        ("C",): ParamSpec((batch, H, P, N), ("batch", "heads", None, None), dtype=jnp.float32, init="zeros"),
+        ("n",): ParamSpec((batch, H, N), ("batch", "heads", None), dtype=jnp.float32, init="zeros"),
+        ("conv",): ParamSpec((batch, cfg.ssm_conv - 1, d_in), ("batch", None, "mlp"),
+                             dtype=jnp.dtype(cfg.dtype), init="zeros"),
+    }
+
+
+def mlstm_decode(params, state, x, *, cfg: ModelConfig):
+    """Single-token mLSTM step. x: [b, 1, d]."""
+    b = x.shape[0]
+    d_in, H, P, N = _mlstm_dims(cfg)
+    q, k, v, log_f, log_i, z, new_hist = _mlstm_qkv_gates(params, x, cfg=cfg, conv_hist=state["conv"])
+    k_i = (k.astype(jnp.float32) * jnp.exp(log_i)[..., None])[:, 0]
+    C, y = ssd_decode_step(state["C"], v[:, 0], log_f[:, 0], k_i, q[:, 0].astype(jnp.float32))
+    n, nqt = ssd_decode_step(state["n"][..., None, :], jnp.ones((b, H, 1), jnp.float32),
+                             log_f[:, 0], k_i, q[:, 0].astype(jnp.float32))
+    y = y.astype(jnp.float32) / jnp.maximum(jnp.abs(nqt.astype(jnp.float32)), 1.0)
+    y = y.reshape(b, 1, d_in)
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + cfg.norm_eps) * params["norm_scale"]).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("ble,ed->bld", y, params["out_proj"])
+    return {"C": C, "n": n[:, :, 0, :], "conv": new_hist}, out
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (sequential; exp gates + stabilizer, block-diagonal recurrence)
+# ---------------------------------------------------------------------------
+
+
+def slstm_spec(cfg: ModelConfig) -> dict:
+    d, H = cfg.d_model, cfg.num_heads
+    dh = d // H
+    return {
+        ("w_in",): ParamSpec((d, 4 * d), ("embed_in", "mlp"), init="scaled"),
+        ("r",): ParamSpec((H, dh, 4 * dh), ("heads", None, None), init="scaled"),
+        ("b",): ParamSpec((4 * d,), ("mlp",), init="zeros", dtype=jnp.float32),
+        ("out_proj",): ParamSpec((d, d), ("embed_in", "embed_out"), init="scaled"),
+    }
+
+
+def _slstm_step(params, carry, x_t, *, cfg: ModelConfig):
+    """One sLSTM step. carry: (h, c, n, m) each [b, d] f32; x_t: [b, d]."""
+    h, c, n, m = carry
+    b, d = x_t.shape
+    H = cfg.num_heads
+    dh = d // H
+    pre = jnp.einsum("bd,de->be", x_t.astype(jnp.float32), params["w_in"].astype(jnp.float32))
+    rec = jnp.einsum("bhx,hxe->bhe", h.reshape(b, H, dh), params["r"].astype(jnp.float32))
+    pre = pre + rec.reshape(b, 4 * d) + params["b"]
+    i_pre, f_pre, z_pre, o_pre = jnp.split(pre, 4, axis=-1)
+    log_f = -jax.nn.softplus(-f_pre)             # sigmoid forget (stable branch)
+    m_new = jnp.maximum(log_f + m, i_pre)        # stabilizer
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(log_f + m - m_new)
+    c_new = f_g * c + i_g * jnp.tanh(z_pre)
+    n_new = f_g * n + i_g
+    h_new = jax.nn.sigmoid(o_pre) * c_new / jnp.maximum(n_new, 1.0)
+    return (h_new, c_new, n_new, m_new)
+
+
+def slstm_forward(params, x, *, cfg: ModelConfig, state=None, return_state: bool = False):
+    b, L, d = x.shape
+    if state is None:
+        z = jnp.zeros((b, d), jnp.float32)
+        carry = (z, z, z, z - 30.0)
+    else:
+        carry = (state["h"], state["c"], state["n"], state["m"])
+
+    def body(carry, x_t):
+        new = _slstm_step(params, carry, x_t, cfg=cfg)
+        return new, new[0]
+
+    carry, hs = jax.lax.scan(body, carry, x.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).astype(x.dtype)
+    out = jnp.einsum("bld,de->ble", y, params["out_proj"])
+    if return_state:
+        h, c, n, m = carry
+        return out, {"h": h, "c": c, "n": n, "m": m}
+    return out
+
+
+def slstm_state_specs(cfg: ModelConfig, batch: int) -> dict:
+    d = cfg.d_model
+    return {(k,): ParamSpec((batch, d), ("batch", "embed"), dtype=jnp.float32, init="zeros")
+            for k in ("h", "c", "n", "m")}
+
+
+def slstm_decode(params, state, x, *, cfg: ModelConfig):
+    carry = (state["h"], state["c"], state["n"], state["m"])
+    new = _slstm_step(params, carry, x[:, 0], cfg=cfg)
+    h, c, n, m = new
+    out = jnp.einsum("bld,de->ble", h[:, None, :].astype(x.dtype), params["out_proj"])
+    return {"h": h, "c": c, "n": n, "m": m}, out

@@ -1,0 +1,52 @@
+"""Int8 gradient compression with error feedback (1-bit-Adam-family trick).
+
+Applied at the data-parallel reduction boundary: gradients are quantized to
+int8 with a per-tensor scale before crossing the slow (DCI / pod) links, and
+the quantization residual is kept in an error-feedback buffer that is added
+back into the next step's gradient — preserving convergence (the residuals
+telescope).  On the GSPMD single-program path the quantize/dequantize pair
+runs just before the optimizer (XLA keeps the int8 form across the reduce);
+the shard_map pipeline/DP paths call ``compress`` explicitly around their
+``psum``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_buffer(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def _quantize(x):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_leaf(g, err):
+    """Returns (int8 payload, scale, new_error_buffer, dequantized grad)."""
+    x = g.astype(jnp.float32) + err
+    q, scale = _quantize(x)
+    deq = _dequantize(q, scale)
+    return q, scale, x - deq, deq
+
+
+def compress_tree(grads, err_buf):
+    """Error-feedback int8 round-trip on every leaf.
+
+    Returns (dequantized grads, new error buffers).  The int8 payload is what
+    would cross the wire; the caller reduces either the payload (shard_map
+    paths) or the dequantized value (GSPMD path).
+    """
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err_buf)
+    outs = [compress_leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    new_err = jax.tree.unflatten(tdef, [o[2] for o in outs])
+    deq = jax.tree.unflatten(tdef, [o[3] for o in outs])
+    return deq, new_err

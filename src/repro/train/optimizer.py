@@ -1,0 +1,106 @@
+"""AdamW with f32 master weights, global-norm clipping and cosine schedule.
+
+(optax is not available offline — this is a from-scratch implementation with
+the same semantics; state is a plain pytree so it checkpoints/reshards like
+params.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    # memory knobs for very large models (e.g. 400B on a single 256-chip pod):
+    state_dtype: str = "float32"     # dtype of m/v moments
+    use_master: bool = True          # keep f32 master copy of params
+
+
+def lr_at(cfg: OptimizerConfig, step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = cfg.learning_rate * step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.learning_rate * cos)
+
+
+def init_state(params, cfg: OptimizerConfig | None = None) -> dict:
+    sd = jnp.dtype(cfg.state_dtype) if cfg else jnp.float32
+    mk = lambda t: jax.tree.map(lambda x: jnp.zeros_like(x, sd), t)
+    state = {"step": jnp.zeros((), jnp.int32), "m": mk(params), "v": mk(params)}
+    if cfg is None or cfg.use_master:
+        state["master"] = jax.tree.map(lambda x: x.astype(jnp.float32), params)
+    return state
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, tree), norm
+
+
+def apply_updates(cfg: OptimizerConfig, params, state, grads):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state["step"] + 1
+    lr = lr_at(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+    sd = jnp.dtype(cfg.state_dtype)
+    has_master = "master" in state
+
+    def upd(m, v, g, w):
+        mf = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        vf = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g)
+        mh = mf / b1c
+        vh = vf / b2c
+        wf = w.astype(jnp.float32)
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * wf
+        return mf.astype(sd), vf.astype(sd), wf - lr * delta
+
+    flat_m, tdef = jax.tree.flatten(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    flat_g = jax.tree.leaves(grads)
+    flat_w = jax.tree.leaves(state["master"] if has_master else params)
+    out = [upd(m, v, g, w) for m, v, g, w in zip(flat_m, flat_v, flat_g, flat_w)]
+    new_m = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_w = jax.tree.unflatten(tdef, [o[2] for o in out])
+    new_params = jax.tree.map(lambda w, p: w.astype(p.dtype), new_w, params)
+    new_state = {"step": step, "m": new_m, "v": new_v}
+    if has_master:
+        new_state["master"] = new_w
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def state_specs(param_specs_tree: dict, cfg: OptimizerConfig | None = None) -> dict:
+    """SpecTree for optimizer state given model ParamSpecs (for dry-run)."""
+    from repro.common import ParamSpec
+    cfg = cfg or OptimizerConfig()
+    sd = jnp.dtype(cfg.state_dtype)
+    out = {("step",): ParamSpec((), (), dtype=jnp.int32, init="zeros")}
+    names = ("m", "v") + (("master",) if cfg.use_master else ())
+    for path, s in param_specs_tree.items():
+        for name in names:
+            dt = jnp.float32 if name == "master" else sd
+            out[(name,) + path] = ParamSpec(s.shape, s.axes, dtype=dt, init="zeros")
+    return out

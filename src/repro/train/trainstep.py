@@ -1,0 +1,79 @@
+"""Training step: CE loss + MoE aux, microbatch gradient accumulation via
+scan (live activations bounded by one microbatch), optional int8
+error-feedback compression, AdamW update.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.data.tokenizer import TOKENIZER
+from repro.models import registry
+from repro.train import grad_compress, optimizer as opt
+
+
+def loss_fn(cfg: ModelConfig, params, tokens, labels, extra=None):
+    """Causal-LM cross-entropy, ignoring PAD labels; adds MoE aux losses."""
+    logits, aux = registry.forward(cfg, params, tokens, extra=extra, remat=cfg.remat)
+    valid = (labels != TOKENIZER.pad_id) & (labels >= 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    tgt = jnp.take_along_axis(logp, jnp.clip(labels, 0)[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(jnp.sum(valid), 1)
+    ce = -jnp.sum(jnp.where(valid, tgt, 0.0)) / denom
+    total = ce
+    for v in (aux or {}).values():
+        total = total + v
+    return total, {"ce": ce, **{k: v for k, v in (aux or {}).items()}}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: opt.OptimizerConfig, *,
+                    microbatches: int = 1, compress: bool = False):
+    """Returns train_step(params, opt_state, batch[, err_buf]) -> (...)"""
+
+    grad_fn = jax.value_and_grad(functools.partial(loss_fn, cfg), has_aux=True)
+
+    def accumulate(params, tokens, labels, extra):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, tokens, labels, extra)
+            return loss, metrics, grads
+
+        b = tokens.shape[0]
+        assert b % microbatches == 0, (b, microbatches)
+        mb = b // microbatches
+        resh = lambda t: t.reshape((microbatches, mb) + t.shape[1:])
+        tokens_mb, labels_mb = resh(tokens), resh(labels)
+        extra_mb = jax.tree.map(resh, extra) if extra else None
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(carry, xs):
+            gacc, lacc = carry
+            if extra_mb is not None:
+                t, l, e = xs
+            else:
+                (t, l), e = xs, None
+            (loss, metrics), grads = grad_fn(params, t, l, e)
+            gacc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), gacc, grads)
+            return (gacc, lacc + loss), metrics
+
+        xs = (tokens_mb, labels_mb, extra_mb) if extra_mb is not None else (tokens_mb, labels_mb)
+        (gacc, lsum), metrics = jax.lax.scan(body, (zeros, 0.0), xs)
+        grads = jax.tree.map(lambda g: g / microbatches, gacc)
+        metrics = jax.tree.map(lambda m: m[-1], metrics)
+        return lsum / microbatches, metrics, grads
+
+    def train_step(params, opt_state, batch, err_buf=None):
+        extra = {k: v for k, v in batch.items() if k not in ("tokens", "labels")} or None
+        loss, metrics, grads = accumulate(params, batch["tokens"], batch["labels"], extra)
+        if compress:
+            grads, err_buf = grad_compress.compress_tree(grads, err_buf)
+        params, opt_state, om = opt.apply_updates(opt_cfg, params, opt_state, grads)
+        metrics = {"loss": loss, **metrics, **om}
+        if compress:
+            return params, opt_state, err_buf, metrics
+        return params, opt_state, metrics
+
+    return train_step

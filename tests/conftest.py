@@ -1,0 +1,16 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the dry-run sets its own 512-device
+# flag in its own process; see src/repro/launch/dryrun.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

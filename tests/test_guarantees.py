@@ -1,0 +1,165 @@
+"""Statistical accuracy guarantees (§2.2, §3, paper Fig. 9).
+
+Property tests on the estimation machinery (hypothesis) + repeated-trial
+tests that observed failure rates stay at/below the configured delta.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.backends import synth
+from repro.core.frame import Session
+from repro.core.operators.filter import sem_filter_cascade, sem_filter_gold
+from repro.core.operators.groupby import sem_group_by_cascade, sem_group_by_gold
+from repro.core.operators.join import sem_join_cascade, sem_join_gold
+from repro.core.optimizer import stats
+from repro.index.quantile import quantile_calibrate
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests on the estimators
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.floats(-1e3, 1e3), min_size=1, max_size=200))
+def test_quantile_calibrate_range_and_order(xs):
+    a = np.asarray(xs)
+    q = quantile_calibrate(a)
+    assert np.all(q > 0) and np.all(q <= 1)
+    order = np.argsort(a, kind="stable")
+    assert np.all(np.diff(q[order]) >= 0)  # monotone in the raw score
+
+
+@given(st.integers(10, 300), st.floats(0.05, 0.95), st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_importance_weights_unbiased(n, rate, seed):
+    """Hajek-weighted positive-count estimates concentrate on the truth."""
+    rng = np.random.default_rng(seed)
+    truth = rng.random(n) < rate
+    scores = np.clip(truth * 0.6 + rng.random(n) * 0.4, 0, 1)
+    probs = stats.defensive_importance_probs(scores)
+    ests = []
+    for t in range(30):
+        idx = stats.importance_sample(np.random.default_rng((seed, t)), probs, 200)
+        w = 1.0 / (n * probs[idx])
+        ests.append(np.sum(w * truth[idx]) / np.sum(w) * n)
+    got = float(np.mean(ests))
+    want = float(truth.sum())
+    assert abs(got - want) <= max(4.0, 0.35 * n)
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_threshold_fallbacks_are_safe(seed):
+    """Degenerate samples must fall back to the safe thresholds."""
+    rng = np.random.default_rng(seed)
+    n = 50
+    probs = np.full(n, 1.0 / n)
+    idx = rng.integers(0, n, 30)
+    # all-negative sample: nothing should be auto-accepted
+    sample = stats.Sample(idx=idx, probs=probs,
+                          labels=np.zeros(30, bool), scores=rng.random(30))
+    assert stats.pt_threshold(sample, 0.9, 0.1) == np.inf
+    assert stats.rt_threshold(sample, 0.9, 0.1) == -np.inf
+
+
+def test_rt_pt_monotone_in_target():
+    rng = np.random.default_rng(3)
+    n = 400
+    truth = rng.random(n) < 0.5
+    scores = np.clip(0.55 * truth + 0.45 * rng.random(n), 0, 1)
+    probs = stats.defensive_importance_probs(scores)
+    idx = stats.importance_sample(rng, probs, 150)
+    sample = stats.Sample(idx=idx, probs=probs, labels=truth[idx], scores=scores[idx])
+    rts = [stats.rt_threshold(sample, g, 0.1) for g in (0.5, 0.7, 0.9, 0.99)]
+    assert all(a >= b or b == -np.inf for a, b in zip(rts, rts[1:]))  # stricter -> lower tau-
+    pts = [stats.pt_threshold(sample, g, 0.1) for g in (0.5, 0.7, 0.9)]
+    assert all(a <= b or b == np.inf for a, b in zip(pts, pts[1:]))   # stricter -> higher tau+
+
+
+# ---------------------------------------------------------------------------
+# repeated-trial guarantee tests (Fig. 9 analogues)
+# ---------------------------------------------------------------------------
+
+TRIALS = 25
+
+
+@pytest.mark.parametrize("alpha", [2.5, 1.0])  # strong / weak proxy
+def test_filter_cascade_guarantees(alpha):
+    delta, target = 0.2, 0.9
+    fails_r = fails_p = 0
+    oracle_fracs = []
+    for t in range(TRIALS):
+        records, world, oracle, proxy, _ = synth.make_filter_world(
+            400, proxy_alpha=alpha, seed=1000 + t)
+        sess = Session(oracle=oracle, proxy=proxy)
+        gold, _ = sem_filter_gold(records, "{claim} holds", sess.oracle)
+        opt, stt = sem_filter_cascade(records, "{claim} holds", sess.oracle, sess.proxy,
+                                      recall_target=target, precision_target=target,
+                                      delta=delta, sample_size=100, seed=t)
+        inter = (gold & opt).sum()
+        fails_r += inter / max(gold.sum(), 1) < target
+        fails_p += inter / max(opt.sum(), 1) < target
+        oracle_fracs.append(stt["oracle_calls"] / len(records))
+    # observed failure rate must not exceed delta (with binomial slack)
+    assert fails_r / TRIALS <= delta + 0.1
+    assert fails_p / TRIALS <= delta + 0.1
+    if alpha > 2:  # a strong proxy must actually save oracle calls
+        assert np.mean(oracle_fracs) < 0.5
+
+
+def test_weak_proxy_needs_more_oracle_calls():
+    """Fig 9c: at fixed targets, the weaker proxy routes more to the oracle."""
+    fracs = {}
+    for alpha in (2.5, 0.8):
+        vals = []
+        for t in range(8):
+            records, _, oracle, proxy, _ = synth.make_filter_world(
+                400, proxy_alpha=alpha, seed=2000 + t)
+            sess = Session(oracle=oracle, proxy=proxy)
+            _, stt = sem_filter_cascade(records, "{claim} holds", sess.oracle, sess.proxy,
+                                        recall_target=0.9, precision_target=0.9,
+                                        delta=0.2, sample_size=100, seed=t)
+            vals.append(stt["oracle_calls"])
+        fracs[alpha] = np.mean(vals)
+    assert fracs[0.8] > fracs[2.5]
+
+
+def test_join_cascade_guarantee_and_plan_choice():
+    delta, target = 0.2, 0.8
+    fails = 0
+    plans = []
+    for t in range(12):
+        left, right, world, oracle, proxy, emb = synth.make_join_world(
+            30, 20, labels_per_left=1, sim_correlation=0.0, seed=3000 + t)
+        sess = Session(oracle=oracle, proxy=proxy, embedder=emb)
+        gold, _ = sem_join_gold(left, right, "the {abstract} reports the {reaction:right}",
+                                sess.oracle)
+        mask, stt = sem_join_cascade(left, right,
+                                     "the {abstract} reports the {reaction:right}",
+                                     sess.oracle, sess.embedder,
+                                     recall_target=target, precision_target=target,
+                                     delta=delta, sample_size=150, seed=t)
+        inter = (gold & mask).sum()
+        fails += inter / max(gold.sum(), 1) < target
+        plans.append(stt["plan"])
+    assert fails / 12 <= delta + 0.15
+    # with zero raw-similarity correlation, projection is the better proxy
+    assert plans.count("project-sim-filter") > plans.count("sim-filter")
+
+
+def test_groupby_cascade_guarantee():
+    delta, target = 0.2, 0.85
+    fails = 0
+    for t in range(10):
+        records, world, model, emb = synth.make_topic_world(200, 4, seed=4000 + t)
+        sess = Session(oracle=model, embedder=emb)
+        gold = sem_group_by_gold(records, "the topic of {paper}", 4,
+                                 sess.oracle, sess.embedder, seed=t)
+        opt = sem_group_by_cascade(records, "the topic of {paper}", 4,
+                                   sess.oracle, sess.embedder,
+                                   accuracy_target=target, delta=delta,
+                                   sample_size=80, seed=t)
+        agree = float(np.mean(gold.assignment == opt.assignment))
+        fails += agree < target
+    assert fails / 10 <= delta + 0.15

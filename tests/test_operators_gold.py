@@ -1,0 +1,130 @@
+"""Gold algorithms: exactness on noiseless worlds (Table 1 semantics)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.backends import synth
+from repro.core.backends.base import CountedModel
+from repro.core.backends.simulated import SimConfig
+from repro.core.frame import SemFrame, Session
+from repro.core.langex import Langex, as_langex
+from repro.core.operators.agg import sem_agg_fold, sem_agg_hierarchical
+from repro.core.operators.mapex import _snap_to_source
+from repro.core.operators.topk import (sem_topk_heap, sem_topk_quadratic,
+                                       sem_topk_quickselect)
+
+
+def test_filter_gold_equals_truth():
+    records, world, oracle, _, _ = synth.make_filter_world(300, seed=5)
+    sess = Session(oracle=oracle)
+    sf = SemFrame(records, sess)
+    out = sf.sem_filter("{claim} holds")
+    got = {t["id"] for t in out.records}
+    want = {r for r, v in world.filter_truth.items() if v}
+    assert got == want
+    assert sf.last_stats()["oracle_calls"] == 300  # linear pass, one per tuple
+
+
+def test_join_gold_equals_truth_and_is_quadratic():
+    left, right, world, oracle, _, _ = synth.make_join_world(12, 9, seed=6)
+    sess = Session(oracle=oracle)
+    sf = SemFrame(left, sess)
+    out = sf.sem_join(right, "the {abstract} reports the {reaction:right}")
+    got = {(t["id"], t["right_id"]) for t in out.records}
+    want = {p for p, v in world.join_truth.items() if v}
+    assert got == want
+    assert sf.last_stats()["oracle_calls"] == 12 * 9
+
+
+@pytest.mark.parametrize("algo,fn", [
+    ("quickselect", sem_topk_quickselect),
+    ("quadratic", sem_topk_quadratic),
+    ("heap", sem_topk_heap),
+])
+def test_topk_algorithms_exact_at_zero_noise(algo, fn):
+    records, world, model, _, _ = synth.make_rank_world(60, compare_noise=1e-9, seed=7)
+    model = CountedModel(model, "oracle")
+    if algo == "quickselect":
+        idx, stt = fn(records, "{abstract}", 8, model, seed=0)
+    else:
+        idx, stt = fn(records, "{abstract}", 8, model)
+    want = sorted(range(60), key=lambda i: -world.rank_value[records[i]["id"]])[:8]
+    assert list(idx) == want  # exact ordered top-k
+    if algo == "quadratic":
+        assert stt["compare_calls"] == 60 * 59 // 2
+
+
+def test_topk_call_complexity_ordering():
+    """Quadratic must cost ~an order of magnitude more comparisons (Table 7)."""
+    records, world, model, _, piv = synth.make_rank_world(80, compare_noise=1e-9, seed=8)
+    model = CountedModel(model, "oracle")
+    _, st_q = sem_topk_quickselect(records, "{abstract}", 10, model, seed=0)
+    _, st_quad = sem_topk_quadratic(records, "{abstract}", 10, model)
+    assert st_quad["compare_calls"] > 5 * st_q["compare_calls"]
+
+
+def test_topk_pivot_optimization_lossless():
+    """§3.4: similarity-guided pivots change cost, never the answer."""
+    records, world, model, _, piv = synth.make_rank_world(70, compare_noise=1e-9, seed=9)
+    a, _ = sem_topk_quickselect(records, "{abstract}", 6, model, seed=1)
+    b, _ = sem_topk_quickselect(records, "{abstract}", 6, model, seed=1,
+                                pivot_scores=piv)
+    assert list(a) == list(b)
+
+
+def test_agg_hierarchical_covers_all_and_logarithmic_depth():
+    records, world, model, _ = synth.make_topic_world(100, 3, seed=10)
+    model = CountedModel(model, "oracle")
+    out, stt = sem_agg_hierarchical(records, "summarize {paper}", model, fanout=8)
+    assert isinstance(out, str) and out
+    assert stt["generate_calls"] <= 100 / 8 + 5  # ~n/fanout + upper levels
+    out2, st2 = sem_agg_fold(records[:10], "summarize {paper}", model)
+    assert st2["generate_calls"] == 9  # sequential fold: n-1 calls
+
+
+@given(st.text(min_size=1, max_size=80), st.integers(0, 79), st.integers(1, 30))
+@settings(max_examples=40, deadline=None)
+def test_extract_snap_always_substring(source, start, length):
+    answer = source[start % len(source):][:length]
+    got = _snap_to_source(answer, source)
+    assert got in source
+
+
+@given(st.text(alphabet=st.characters(blacklist_characters="{}"), max_size=40))
+def test_langex_passthrough_without_fields(t):
+    lx = Langex(t)
+    assert lx.fields == []
+    assert lx.render({}) == t
+
+
+def test_langex_parsing_and_render():
+    lx = as_langex("the {abstract:left} uses the {dataset:right}")
+    assert [f.name for f in lx.fields] == ["abstract", "dataset"]
+    assert lx.is_binary
+    got = lx.render({"abstract": "A"}, {"dataset": "B"})
+    assert got == "the A uses the B"
+    with pytest.raises(KeyError):
+        lx.validate({"abstract"}, {"nope"})
+
+
+def test_sim_join_and_search_roundtrip():
+    records, world, model, emb = synth.make_topic_world(50, 5, seed=11)
+    sess = Session(oracle=model, embedder=emb)
+    sf = SemFrame(records, sess)
+    idx = sf.sem_index("paper")
+    hits = sf.sem_search("paper", records[7]["paper"], k=1, index=idx)
+    assert hits.records[0]["id"] == records[7]["id"]
+    left5 = SemFrame(records[:5], sess)
+    joined = left5.sem_sim_join(records, "paper", "paper", k=1)
+    assert all(t["right_id"] == t["id"] for t in joined.records)  # self-match
+
+
+def test_sem_map_and_extract():
+    records, world, model, emb = synth.make_topic_world(10, 3, seed=12)
+    sess = Session(oracle=model, embedder=emb)
+    sf = SemFrame(records, sess)
+    mapped = sf.sem_map("classify {paper}")
+    assert all("mapped" in t for t in mapped.records)
+    ex = sf.sem_extract("find the paper id in {paper}", source_field="paper")
+    for t in ex.records:
+        assert t["extracted"] in t["paper"]

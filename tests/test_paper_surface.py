@@ -1,0 +1,132 @@
+"""Coverage for the remaining paper-surface features (§4.2 conveniences):
+sem_topk group_by, sem_agg partitioner override (footnote 4), sem_search
+re-ranking, scheduler deadlines, analyzer edge cases."""
+import time
+
+import numpy as np
+
+from repro.core import accounting
+from repro.core.backends import synth
+from repro.core.backends.base import CountedModel
+from repro.core.frame import SemFrame, Session
+from repro.core.operators.agg import sem_agg_hierarchical
+from repro.launch.hlo_analysis import analyze_text, parse, shape_bytes, shape_elems
+
+
+def test_sem_topk_group_by():
+    """Fig 5: per-group top-k over standard equality groups."""
+    records, world, model, emb, piv = synth.make_rank_world(60, compare_noise=1e-9, seed=50)
+    for i, t in enumerate(records):
+        t["domain"] = "cs.DB" if i % 2 == 0 else "cs.IR"
+    sess = Session(oracle=model, embedder=emb)
+    sf = SemFrame(records, sess)
+    top = sf.sem_topk("{abstract} highest accuracy", 3, group_by="domain")
+    assert len(top) == 6
+    by_dom = {}
+    for t in top.records:
+        by_dom.setdefault(t["domain"], []).append(t)
+    for dom, recs in by_dom.items():
+        pool = [t for t in records if t["domain"] == dom]
+        want = sorted(pool, key=lambda t: -world.rank_value[t["id"]])[:3]
+        assert [t["id"] for t in recs] == [t["id"] for t in want], dom
+
+
+def test_sem_agg_partitioner_override():
+    """Footnote 4: user-controlled grouping/ordering of the first reduce level."""
+    records, world, model, _ = synth.make_topic_world(24, 2, seed=51)
+    model = CountedModel(model, "oracle")
+    calls = {}
+
+    def partitioner(items):
+        calls["groups"] = [items[:4], items[4:]]   # deliberately uneven
+        return calls["groups"]
+
+    out, st = sem_agg_hierarchical(records, "summarize {paper}", model,
+                                   fanout=8, partitioner=partitioner)
+    assert out and "groups" in calls
+    assert st["generate_calls"] >= 3  # 2 first-level groups + >=1 upper level
+
+
+def test_sem_search_with_rerank():
+    """§4.2 n_rerank: similarity retrieval then LLM re-ranking."""
+    records, world, model, emb, piv = synth.make_rank_world(40, compare_noise=1e-9, seed=52)
+    sess = Session(oracle=model, embedder=emb)
+    sf = SemFrame(records, sess)
+    idx = sf.sem_index("abstract")
+    hits = sf.sem_search("abstract", "highest accuracy paper", k=10, index=idx,
+                         n_rerank=3, rerank_langex="{abstract} highest accuracy")
+    assert len(hits) == 3
+    st = sf.last_stats()
+    assert st["compare_calls"] > 0     # the re-rank actually used the LLM
+
+
+def test_scheduler_deadline_requeues():
+    """Straggler guard: a request over its wall-clock budget is re-dispatched."""
+    from repro.configs import get_smoke
+    from repro.data.tokenizer import TOKENIZER
+    from repro.engine.runner import ModelRunner
+    from repro.engine.scheduler import ContinuousBatchScheduler, Request
+    from repro.models import registry
+    import jax
+
+    cfg = get_smoke("llama3.2-3b").with_(vocab_size=TOKENIZER.vocab_size)
+    runner = ModelRunner(cfg, registry.init_params(cfg, jax.random.PRNGKey(0)),
+                         max_slots=2, max_seq=96)
+    sched = ContinuousBatchScheduler(runner, max_retries=1)
+    r = Request(rid=0, tokens=np.asarray(TOKENIZER.encode("slow req"), np.int32),
+                max_new_tokens=4, deadline_s=0.001)  # near-instantly-expired budget
+    sched.submit(r)
+    sched.step()                        # prefill
+    r.started_at = time.monotonic() - 10
+    sched.step()                        # deadline check fires -> requeue
+    done = sched.run_to_completion()
+    assert len(done) == 1
+    assert done[0].retries >= 1
+
+
+def test_accounting_operator_labels():
+    records, world, model, emb = synth.make_topic_world(10, 2, seed=53)
+    sess = Session(oracle=model, embedder=emb)
+    sf = SemFrame(records, sess)
+    sf.sem_map("x {paper}")
+    assert sf.last_stats()["operator"] == "sem_map"
+    assert sf.last_stats()["wall_s"] >= 0
+
+
+# ---------------------------------------------------------------------------
+# hlo_analysis edges
+# ---------------------------------------------------------------------------
+
+
+def test_shape_helpers():
+    assert shape_elems("bf16[4,8]{1,0}") == 32
+    assert shape_elems("(f32[2,2], s32[3])") == 7
+    assert shape_bytes("f8e4m3fn[10]") == 10
+
+
+def test_analyzer_handles_empty_and_garbage():
+    costs = analyze_text("HloModule empty\n")
+    assert costs.flops == 0 and costs.bytes == 0
+    m = parse("not hlo at all\n{}\n")
+    assert m.entry == ""
+
+
+def test_analyzer_dus_inplace_accounting():
+    """An in-place cache update inside jit must be charged the slice, not the
+    buffer (the measurement bug behind §Perf decode iteration 1)."""
+    import jax, jax.numpy as jnp
+
+    def step(cache, x):
+        def body(c, _):
+            c = jax.lax.dynamic_update_slice_in_dim(c, x, 0, axis=0)
+            return c, None
+        c, _ = jax.lax.scan(body, cache, None, length=50)
+        return c
+
+    cache = jax.ShapeDtypeStruct((1 << 14, 128), jnp.float32)
+    x = jax.ShapeDtypeStruct((1, 128), jnp.float32)
+    c = jax.jit(step).lower(cache, x).compile()
+    costs = analyze_text(c.as_text())
+    buffer_bytes = (1 << 14) * 128 * 4
+    # traffic must be far below 50 full-buffer writes
+    assert costs.bytes < 5 * buffer_bytes, costs.bytes
