@@ -2,7 +2,6 @@
 batching throughput + single-token predicate scoring latency."""
 import time
 
-import numpy as np
 
 from benchmarks._util import emit
 from repro.configs import get_smoke

@@ -9,8 +9,9 @@ import sys
 import time
 
 from benchmarks import (engine_bench, fig6_filter_tradeoff, fig8_groupby,
-                        fig9_guarantees, kernels_bench, table2_factcheck,
-                        table3_biodex, table5_join_plans, table6_7_ranking)
+                        fig9_guarantees, kernels_bench, pipeline_bench,
+                        table2_factcheck, table3_biodex, table5_join_plans,
+                        table6_7_ranking)
 
 MODULES = {
     "table2": table2_factcheck,
@@ -20,6 +21,7 @@ MODULES = {
     "fig6": fig6_filter_tradeoff,
     "fig8": fig8_groupby,
     "fig9": fig9_guarantees,
+    "pipeline": pipeline_bench,
     "engine": engine_bench,
     "kernels": kernels_bench,
 }

@@ -1,10 +1,9 @@
 """Table 5 analogue: candidate join plans vs the optimizer's choice, in the
 regime where raw similarity is uninformative (projection required)."""
-import numpy as np
 
 from benchmarks._util import emit, set_metrics
 from repro.core.backends import synth
-from repro.core.frame import SemFrame, Session
+from repro.core.frame import Session
 from repro.core.operators.join import sem_join_cascade, sem_join_gold
 
 

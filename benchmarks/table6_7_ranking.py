@@ -7,7 +7,6 @@ import numpy as np
 from benchmarks._util import emit, ndcg_at_k
 from repro.core.backends import synth
 from repro.core.backends.base import CountedModel
-from repro.core import accounting
 from repro.core.operators.topk import (sem_topk_heap, sem_topk_quadratic,
                                        sem_topk_quickselect)
 

@@ -29,3 +29,12 @@ queries = claims.sem_map("write a search query for {claim}", out_column="query")
 idx = claims.sem_index("claim")
 hits = claims.sem_search("claim", "claim text 42", k=3, index=idx)
 print("search:", [t["id"] for t in hits.records])
+
+# lazy pipelines: build a logical plan, let the optimizer reorder/fuse/dedup,
+# then execute in one batched pass (see examples/lazy_pipeline.py for more)
+lazy = (claims.lazy()
+        .sem_map("write a search query for {claim}", out_column="query")
+        .sem_filter("the {claim} is supported"))
+print(lazy.explain())
+out = lazy.collect()
+print(f"lazy collect: {len(out)} rows, rewrites: {[r.rule for r in lazy.last_rewrites]}")

@@ -21,11 +21,15 @@ class OpStats:
     embed_calls: int = 0
     compare_calls: int = 0
     generate_calls: int = 0
+    cache_hits: int = 0    # prompts served by BatchedModelCache, not a model
     wall_s: float = 0.0
     details: dict = dataclasses.field(default_factory=dict)
 
+    _KINDS = ("oracle", "proxy", "embed", "compare", "generate", "cache_hit")
+
     def add(self, kind: str, n: int) -> None:
-        setattr(self, f"{kind}_calls", getattr(self, f"{kind}_calls") + n)
+        attr = "cache_hits" if kind == "cache_hit" else f"{kind}_calls"
+        setattr(self, attr, getattr(self, attr) + n)
 
     @property
     def lm_calls(self) -> int:
@@ -36,6 +40,7 @@ class OpStats:
             "operator": self.operator, "oracle_calls": self.oracle_calls,
             "proxy_calls": self.proxy_calls, "embed_calls": self.embed_calls,
             "compare_calls": self.compare_calls, "generate_calls": self.generate_calls,
+            "cache_hits": self.cache_hits,
             "lm_calls": self.lm_calls, "wall_s": round(self.wall_s, 4), **self.details,
         }
 
@@ -62,5 +67,6 @@ def track(operator: str):
         st.wall_s = time.monotonic() - t0
         _ctx.stats = prev
         if prev is not None:  # nested operators roll up into the parent
-            for kind in ("oracle", "proxy", "embed", "compare", "generate"):
-                prev.add(kind, getattr(st, f"{kind}_calls"))
+            for kind in OpStats._KINDS:
+                prev.add(kind, getattr(st, "cache_hits" if kind == "cache_hit"
+                                       else f"{kind}_calls"))

@@ -10,7 +10,6 @@ batched inference) is identical to a trained deployment.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from repro.configs import ModelConfig, get_smoke
 from repro.core.frame import Session
@@ -36,9 +35,7 @@ class EngineModel:
         return self.engine.compare(list(prompts))
 
     def choose(self, prompts, n_options):
-        # single-token digit options 0..9; beyond that, fall back to bucketed ids
-        ids = [TOKENIZER.encode(str(min(i, 9)), bos=False)[0] for i in range(n_options)]
-        return self.engine.choose(list(prompts), ids)
+        return self.engine.choose(list(prompts), n_options)
 
 
 def make_session(oracle_cfg: ModelConfig | None = None,

@@ -53,6 +53,10 @@ class SimulatedWorld:
         self.cfg = cfg or SimConfig()
         self.seed = seed
         self.filter_truth: dict[str, bool] = {}
+        # per-predicate truth: phrase (matched against the rendered prompt)
+        # -> {record id -> bool}; lets one corpus carry several filters with
+        # different selectivities (plan-optimizer workloads)
+        self.phrase_truth: dict[str, dict[str, bool]] = {}
         self.join_truth: dict[tuple[str, str], bool] = {}
         self.rank_value: dict[str, float] = {}
         self.class_of: dict[str, int] = {}
@@ -109,6 +113,9 @@ class SimulatedModel:
                     return True
             return False
         if ids:
+            for phrase, table in self.w.phrase_truth.items():
+                if phrase in prompt and ids[0] in table:
+                    return bool(table[ids[0]])
             return bool(self.w.filter_truth.get(ids[0], False))
         return False
 

@@ -28,6 +28,18 @@ def make_filter_world(n: int, *, positive_rate: float = 0.4,
     return records, world, oracle, proxy, SimulatedEmbedder(world)
 
 
+def add_phrase_predicate(world: SimulatedWorld, records: list[dict], phrase: str,
+                         rate: float, *, seed: int = 0) -> None:
+    """Attach an independent named predicate to an existing corpus: prompts
+    containing ``phrase`` are true for each record w.p. ``rate`` (fixed per
+    record).  Multiple phrases on one corpus give the plan optimizer filter
+    chains with genuinely different selectivities."""
+    import zlib
+    rng = np.random.default_rng((seed, zlib.crc32(phrase.encode())))
+    world.phrase_truth[phrase] = {t["id"]: bool(rng.random() < rate)
+                                  for t in records}
+
+
 def make_join_world(n_left: int, n_right: int, *, labels_per_left: int = 2,
                     sim_correlation: float = 0.8, seed: int = 0,
                     cfg: SimConfig | None = None):

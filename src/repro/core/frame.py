@@ -10,23 +10,33 @@ model-data independence in one switch.
     sf = SemFrame(records, sess)
     hits = sf.sem_filter("the {claim} is supported",
                          recall_target=0.9, precision_target=0.9, delta=0.2)
+
+Execution is layered frame -> plan -> executor -> engine: every ``sem_*``
+call builds a logical plan node (``repro.core.plan.nodes``).  The default
+eager path auto-collects the node immediately through ``PlanExecutor`` with
+no rewrites and no cache — call-for-call identical to classic eager
+semantics.  ``sf.lazy()`` instead accumulates the whole pipeline as a DAG;
+``collect()`` runs the rule-based optimizer (filter reordering/pushdown, map
+fusion, sim-join prefilters) and executes with prompt-dedup batching:
+
+    out = (sf.lazy()
+             .sem_filter("the {claim} is checkable")
+             .sem_join(labels, "the {claim} matches the {label:right}")
+             .collect())
+    print(sf.lazy().sem_filter(...).explain())
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Any, Callable, Sequence
 
-import numpy as np
-
+from repro.core import accounting
 from repro.core.backends.base import CountedEmbedder, CountedModel
 from repro.core.langex import as_langex
-from repro.core.operators import agg as _agg
-from repro.core.operators import filter as _filter
-from repro.core.operators import groupby as _groupby
-from repro.core.operators import join as _join
-from repro.core.operators import mapex as _mapex
 from repro.core.operators import search as _search
-from repro.core.operators import topk as _topk
+from repro.core.plan import nodes as PN
+from repro.core.plan.execute import PlanExecutor
+from repro.core.plan.optimize import PlanOptimizer, explain_plan, total_cost
 
 
 @dataclasses.dataclass
@@ -67,32 +77,29 @@ class SemFrame:
     def _child(self, records) -> "SemFrame":
         return SemFrame(records, self.session, self.stats_log)
 
-    def _log(self, stats: dict) -> dict:
-        self.stats_log.append(stats)
-        return stats
-
     def last_stats(self) -> dict:
         return self.stats_log[-1] if self.stats_log else {}
+
+    def lazy(self) -> "LazySemFrame":
+        """Switch to lazy plan building: sem_* calls accumulate a logical DAG
+        that ``collect()`` optimizes and executes (``explain()`` to inspect)."""
+        return LazySemFrame(PN.Scan(self.records), self.session, self.stats_log)
+
+    def _execute(self, node: PN.LogicalNode) -> list[dict]:
+        """Eager auto-collect: run one plan node, no rewrites, no cache."""
+        return PlanExecutor(self.session, stats_log=self.stats_log).run(node)
+
+    def _scan(self) -> PN.Scan:
+        return PN.Scan(self.records)
 
     # -- sem_filter -------------------------------------------------------
     def sem_filter(self, langex, *, recall_target: float | None = None,
                    precision_target: float | None = None,
                    delta: float | None = None) -> "SemFrame":
         as_langex(langex).validate(self.columns)
-        s = self.session
-        if recall_target is None and precision_target is None:
-            mask, stats = _filter.sem_filter_gold(self.records, langex, s.oracle)
-        else:
-            if s.proxy is None:
-                raise ValueError("optimized sem_filter needs a proxy model in the Session")
-            mask, stats = _filter.sem_filter_cascade(
-                self.records, langex, s.oracle, s.proxy,
-                recall_target=recall_target or 0.9,
-                precision_target=precision_target or 0.9,
-                delta=delta if delta is not None else s.default_delta,
-                sample_size=s.sample_size, seed=s.seed)
-        self._log(stats)
-        return self._child([t for t, m in zip(self.records, mask) if m])
+        node = PN.Filter(self._scan(), langex, recall_target=recall_target,
+                         precision_target=precision_target, delta=delta)
+        return self._child(self._execute(node))
 
     # -- sem_join ---------------------------------------------------------
     def sem_join(self, other: "SemFrame | Sequence[dict]", langex, *,
@@ -103,111 +110,47 @@ class SemFrame:
         right = other.records if isinstance(other, SemFrame) else list(other)
         lx = as_langex(langex)
         lx.validate(self.columns, set(right[0].keys()) if right else set())
-        s = self.session
-        if recall_target is None and precision_target is None:
-            mask, stats = _join.sem_join_gold(self.records, right, langex, s.oracle)
-        else:
-            if s.embedder is None:
-                raise ValueError("optimized sem_join needs an embedder in the Session")
-            mask, stats = _join.sem_join_cascade(
-                self.records, right, langex, s.oracle, s.embedder,
-                project_fn=project_fn,
-                recall_target=recall_target or 0.9,
-                precision_target=precision_target or 0.9,
-                delta=delta if delta is not None else s.default_delta,
-                sample_size=s.sample_size, seed=s.seed, force_plan=force_plan)
-        self._log(stats)
-        out = []
-        n1, n2 = mask.shape
-        for i in range(n1):
-            for j in range(n2):
-                if mask[i, j]:
-                    out.append({**self.records[i],
-                                **{f"right_{k}": v for k, v in right[j].items()}})
-        return self._child(out)
+        node = PN.Join(self._scan(), PN.Scan(right), langex,
+                       recall_target=recall_target,
+                       precision_target=precision_target, delta=delta,
+                       project_fn=project_fn, force_plan=force_plan)
+        return self._child(self._execute(node))
 
     # -- sem_topk ---------------------------------------------------------
     def sem_topk(self, langex, k: int, *, algorithm: str = "quickselect",
                  pivot_query: str | None = None, group_by: str | None = None
                  ) -> "SemFrame":
-        s = self.session
-        if group_by is not None:
-            groups: dict = {}
-            for t in self.records:
-                groups.setdefault(t[group_by], []).append(t)
-            out = []
-            for _, recs in sorted(groups.items(), key=lambda kv: str(kv[0])):
-                sub = self._child(recs).sem_topk(langex, k, algorithm=algorithm,
-                                                 pivot_query=pivot_query)
-                out.extend(sub.records)
-            return self._child(out)
-
-        pivot_scores = None
-        if pivot_query is not None and s.embedder is not None:
-            lx = as_langex(langex)
-            texts = [lx.render(t) for t in self.records]
-            emb = s.embedder.embed(texts)
-            qv = s.embedder.embed([pivot_query])[0]
-            pivot_scores = emb @ qv
-        fn = {"quickselect": _topk.sem_topk_quickselect,
-              "quadratic": _topk.sem_topk_quadratic,
-              "heap": _topk.sem_topk_heap}[algorithm]
-        if algorithm == "quickselect":
-            idx, stats = fn(self.records, langex, k, s.oracle,
-                            pivot_scores=pivot_scores, seed=s.seed)
-        else:
-            idx, stats = fn(self.records, langex, k, s.oracle)
-        self._log(stats)
-        return self._child([self.records[i] for i in idx])
+        node = PN.TopK(self._scan(), langex, k, algorithm=algorithm,
+                       pivot_query=pivot_query, group_by=group_by)
+        return self._child(self._execute(node))
 
     # -- sem_agg ----------------------------------------------------------
     def sem_agg(self, langex, *, fanout: int = 8, group_by: str | None = None,
                 partitioner=None):
-        s = self.session
+        node = PN.Agg(self._scan(), langex, fanout=fanout, group_by=group_by,
+                      partitioner=partitioner)
+        rows = self._execute(node)
         if group_by is not None:
-            out = {}
-            for t in self.records:
-                out.setdefault(t[group_by], []).append(t)
-            return {g: self._child(recs).sem_agg(langex, fanout=fanout,
-                                                 partitioner=partitioner)
-                    for g, recs in out.items()}
-        answer, stats = _agg.sem_agg_hierarchical(self.records, langex, s.oracle,
-                                                  fanout=fanout, partitioner=partitioner)
-        self._log(stats)
-        return answer
+            return {row[group_by]: row["aggregate"] for row in rows}
+        return rows[0]["aggregate"]
 
     # -- sem_group_by -----------------------------------------------------
     def sem_group_by(self, langex, C: int, *, accuracy_target: float | None = None,
                      delta: float | None = None) -> "SemFrame":
-        s = self.session
-        if s.embedder is None:
-            raise ValueError("sem_group_by needs an embedder in the Session")
-        if accuracy_target is None:
-            res = _groupby.sem_group_by_gold(self.records, langex, C,
-                                             s.oracle, s.embedder, seed=s.seed)
-        else:
-            res = _groupby.sem_group_by_cascade(
-                self.records, langex, C, s.oracle, s.embedder,
-                accuracy_target=accuracy_target,
-                delta=delta if delta is not None else s.default_delta,
-                sample_size=s.sample_size, seed=s.seed)
-        self._log(res.stats)
-        out = [{**t, "group": int(g), "group_label": res.labels[int(g)]}
-               for t, g in zip(self.records, res.assignment)]
-        return self._child(out)
+        node = PN.GroupBy(self._scan(), langex, C,
+                          accuracy_target=accuracy_target, delta=delta)
+        return self._child(self._execute(node))
 
     # -- sem_map / sem_extract ---------------------------------------------
     def sem_map(self, langex, *, out_column: str = "mapped") -> "SemFrame":
-        texts, stats = _mapex.sem_map(self.records, langex, self.session.oracle)
-        self._log(stats)
-        return self._child([{**t, out_column: x} for t, x in zip(self.records, texts)])
+        node = PN.Map(self._scan(), langex, out_column=out_column)
+        return self._child(self._execute(node))
 
     def sem_extract(self, langex, *, source_field: str,
                     out_column: str = "extracted") -> "SemFrame":
-        texts, stats = _mapex.sem_extract(self.records, langex, self.session.oracle,
-                                          source_field=source_field)
-        self._log(stats)
-        return self._child([{**t, out_column: x} for t, x in zip(self.records, texts)])
+        node = PN.Extract(self._scan(), langex, source_field=source_field,
+                          out_column=out_column)
+        return self._child(self._execute(node))
 
     # -- similarity family --------------------------------------------------
     def sem_index(self, column: str, *, path: str | None = None):
@@ -216,28 +159,157 @@ class SemFrame:
 
     def sem_search(self, column: str, query: str, *, k: int = 10,
                    n_rerank: int = 0, rerank_langex=None, index=None) -> "SemFrame":
-        s = self.session
-        index = index or self.sem_index(column)
-        hits, stats = _search.sem_search(
-            index, query, s.embedder, k=k, n_rerank=n_rerank,
-            rerank_model=s.oracle if n_rerank else None,
-            records=self.records, rerank_langex=rerank_langex)
-        self._log(stats)
-        return self._child([self.records[i] for i in hits])
+        node = PN.Search(self._scan(), column, query, k=k, n_rerank=n_rerank,
+                         rerank_langex=rerank_langex, index=index)
+        return self._child(self._execute(node))
 
     def sem_sim_join(self, other: "SemFrame | Sequence[dict]", left_col: str,
                      right_col: str, *, k: int = 1) -> "SemFrame":
         right = other.records if isinstance(other, SemFrame) else list(other)
-        index = _search.sem_index([str(t[right_col]) for t in right],
-                                  self.session.embedder)
-        scores, idx, stats = _search.sem_sim_join(
-            [str(t[left_col]) for t in self.records], index,
-            self.session.embedder, k=k)
-        self._log(stats)
-        out = []
-        for i, t in enumerate(self.records):
-            for rank in range(idx.shape[1]):
-                j = int(idx[i, rank])
-                out.append({**t, **{f"right_{kk}": v for kk, v in right[j].items()},
-                            "sim_score": float(scores[i, rank])})
-        return self._child(out)
+        node = PN.SimJoin(self._scan(), PN.Scan(right), left_col, right_col, k=k)
+        return self._child(self._execute(node))
+
+
+class LazySemFrame:
+    """A logical plan under construction; same sem_* surface as SemFrame but
+    nothing executes until ``collect()``.
+
+    ``collect(optimize=True)`` runs the rewrite passes and executes with the
+    ``BatchedModelCache`` (prompt dedup across all pipeline stages);
+    ``collect(optimize=False)`` executes the plan as written with no cache —
+    record- and stats-identical to the eager path.  ``explain()`` returns the
+    before/after plan trees plus the applied rewrites.
+    """
+
+    def __init__(self, plan: PN.LogicalNode, session: Session,
+                 stats_log: list | None = None):
+        self.plan = plan
+        self.session = session
+        self.stats_log = stats_log if stats_log is not None else []
+        self.last_rewrites: list = []
+        self._exec_pair: tuple | None = None  # (opt_kw, optimizer, executor)
+
+    # -- plumbing ---------------------------------------------------------
+    @property
+    def columns(self) -> set:
+        return self.plan.columns()
+
+    def _child(self, plan: PN.LogicalNode) -> "LazySemFrame":
+        return LazySemFrame(plan, self.session, self.stats_log)
+
+    def _right_plan(self, other) -> PN.LogicalNode:
+        if isinstance(other, LazySemFrame):
+            return other.plan
+        if isinstance(other, SemFrame):
+            return PN.Scan(other.records)
+        return PN.Scan(list(other))
+
+    # -- operators (plan builders) ----------------------------------------
+    def sem_filter(self, langex, *, recall_target: float | None = None,
+                   precision_target: float | None = None,
+                   delta: float | None = None) -> "LazySemFrame":
+        as_langex(langex).validate(self.columns)
+        return self._child(PN.Filter(self.plan, langex,
+                                     recall_target=recall_target,
+                                     precision_target=precision_target,
+                                     delta=delta))
+
+    def sem_join(self, other, langex, *, recall_target: float | None = None,
+                 precision_target: float | None = None,
+                 delta: float | None = None, project_fn: Callable | None = None,
+                 force_plan: str | None = None) -> "LazySemFrame":
+        right = self._right_plan(other)
+        as_langex(langex).validate(self.columns, right.columns())
+        return self._child(PN.Join(self.plan, right, langex,
+                                   recall_target=recall_target,
+                                   precision_target=precision_target,
+                                   delta=delta, project_fn=project_fn,
+                                   force_plan=force_plan))
+
+    def sem_topk(self, langex, k: int, *, algorithm: str = "quickselect",
+                 pivot_query: str | None = None,
+                 group_by: str | None = None) -> "LazySemFrame":
+        return self._child(PN.TopK(self.plan, langex, k, algorithm=algorithm,
+                                   pivot_query=pivot_query, group_by=group_by))
+
+    def sem_agg(self, langex, *, fanout: int = 8, group_by: str | None = None,
+                partitioner=None) -> "LazySemFrame":
+        return self._child(PN.Agg(self.plan, langex, fanout=fanout,
+                                  group_by=group_by, partitioner=partitioner))
+
+    def sem_group_by(self, langex, C: int, *,
+                     accuracy_target: float | None = None,
+                     delta: float | None = None) -> "LazySemFrame":
+        return self._child(PN.GroupBy(self.plan, langex, C,
+                                      accuracy_target=accuracy_target,
+                                      delta=delta))
+
+    def sem_map(self, langex, *, out_column: str = "mapped") -> "LazySemFrame":
+        return self._child(PN.Map(self.plan, langex, out_column=out_column))
+
+    def sem_extract(self, langex, *, source_field: str,
+                    out_column: str = "extracted") -> "LazySemFrame":
+        return self._child(PN.Extract(self.plan, langex,
+                                      source_field=source_field,
+                                      out_column=out_column))
+
+    def sem_search(self, column: str, query: str, *, k: int = 10,
+                   n_rerank: int = 0, rerank_langex=None,
+                   index=None) -> "LazySemFrame":
+        return self._child(PN.Search(self.plan, column, query, k=k,
+                                     n_rerank=n_rerank,
+                                     rerank_langex=rerank_langex, index=index))
+
+    def sem_sim_join(self, other, left_col: str, right_col: str, *,
+                     k: int = 1) -> "LazySemFrame":
+        return self._child(PN.SimJoin(self.plan, self._right_plan(other),
+                                      left_col, right_col, k=k))
+
+    # -- optimize / execute ------------------------------------------------
+    def _optimizer_and_executor(self, **opt_kw):
+        """One (optimizer, executor) pair per frame+options: explain() and a
+        later collect() share the BatchedModelCache, so selectivity probes
+        are paid once, not once per call."""
+        key = tuple(sorted(opt_kw.items()))
+        if self._exec_pair is not None and self._exec_pair[0] == key:
+            return self._exec_pair[1], self._exec_pair[2]
+        executor = PlanExecutor(self.session, stats_log=self.stats_log,
+                                use_cache=True)
+        optimizer = PlanOptimizer(self.session, oracle=executor.oracle,
+                                  proxy=executor.proxy,
+                                  seed=self.session.seed, **opt_kw)
+        self._exec_pair = (key, optimizer, executor)
+        return optimizer, executor
+
+    def collect(self, *, optimize: bool = True, **opt_kw) -> SemFrame:
+        if not optimize:
+            records = PlanExecutor(self.session,
+                                   stats_log=self.stats_log).run(self.plan)
+            self.last_rewrites = []
+            return SemFrame(records, self.session, self.stats_log)
+        optimizer, executor = self._optimizer_and_executor(**opt_kw)
+        # probe calls (selectivity sampling) are real model traffic: account
+        # for them as their own pipeline stage — they flow through the
+        # executor's cache, so execution re-uses every probed label
+        with accounting.track("plan_optimize") as st:
+            plan = optimizer.optimize(self.plan)
+        st.details.update(rewrites=[str(r) for r in optimizer.applied])
+        self.stats_log.append(st.as_dict())
+        self.last_rewrites = optimizer.applied
+        records = executor.run(plan)
+        return SemFrame(records, self.session, self.stats_log)
+
+    def explain(self, *, optimize: bool = True, **opt_kw) -> str:
+        out = ["== logical plan (as written) ==", explain_plan(self.plan),
+               f"-- estimated oracle calls: {total_cost(self.plan):.0f}"]
+        if optimize:
+            optimizer, _ = self._optimizer_and_executor(**opt_kw)
+            with accounting.track("plan_explain") as st:
+                plan = optimizer.optimize(self.plan)
+            if st.lm_calls or st.cache_hits:  # probes are real model traffic
+                self.stats_log.append(st.as_dict())
+            out += ["", "== optimized plan ==", explain_plan(plan),
+                    f"-- estimated oracle calls: {total_cost(plan):.0f}",
+                    "", "== applied rewrites =="]
+            out += [f" * {r}" for r in optimizer.applied] or [" (none)"]
+        return "\n".join(out)

@@ -8,6 +8,7 @@ closest matching source span or dropped).
 from __future__ import annotations
 
 import difflib
+import re
 
 from repro.core import accounting
 from repro.core.langex import as_langex
@@ -15,6 +16,10 @@ from repro.core.langex import as_langex
 MAP_INSTRUCTION = "Task: {task}\nInput: {item}\nAnswer concisely.\nAnswer:"
 EXTRACT_INSTRUCTION = ("Task: {task}\nSource text: {item}\n"
                        "Answer ONLY with an exact snippet copied from the source text.\nAnswer:")
+FUSED_MAP_INSTRUCTION = ("Tasks:\n{tasks}\n"
+                         "Answer every task, each on its own line as "
+                         "'<task number>. <answer>'. Answer concisely.\nAnswers:")
+_FUSED_ANSWER_RE = re.compile(r"^\s*(\d+)\s*[.:)]\s*(.*)$")
 
 
 def sem_map(records: list[dict], langex, model) -> tuple[list[str], dict]:
@@ -23,6 +28,34 @@ def sem_map(records: list[dict], langex, model) -> tuple[list[str], dict]:
         prompts = [MAP_INSTRUCTION.format(task=lx.template, item=lx.render(t))
                    for t in records]
         return model.generate(prompts), st.as_dict()
+
+
+def sem_map_fused(records: list[dict], langexes, model
+                  ) -> tuple[list[list[str]], dict]:
+    """K consecutive sem_maps over the same input in ONE prompt pass: a single
+    generate call per record asks all K tasks as a numbered list and the
+    numbered answer lines are parsed back out (lines that fail to parse fall
+    back to the whole generation, so a weak model degrades to duplicated
+    rather than missing columns).  Returns (columns [K][N], stats)."""
+    lxs = [as_langex(l) for l in langexes]
+    with accounting.track("sem_map_fused") as st:
+        prompts = []
+        for t in records:
+            tasks = "\n".join(f"{i + 1}. Task: {lx.template} Input: {lx.render(t)}"
+                              for i, lx in enumerate(lxs))
+            prompts.append(FUSED_MAP_INSTRUCTION.format(tasks=tasks))
+        raw = model.generate(prompts)
+        columns = [["" for _ in records] for _ in lxs]
+        for n, text in enumerate(raw):
+            parsed: dict[int, str] = {}
+            for line in str(text).splitlines():
+                m = _FUSED_ANSWER_RE.match(line)
+                if m and 1 <= int(m.group(1)) <= len(lxs):
+                    parsed[int(m.group(1)) - 1] = m.group(2).strip()
+            for i in range(len(lxs)):
+                columns[i][n] = parsed.get(i, str(text).strip())
+        st.details.update(fused=len(lxs))
+        return columns, st.as_dict()
 
 
 def _snap_to_source(answer: str, source: str) -> str:

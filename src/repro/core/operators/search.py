@@ -6,7 +6,6 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import accounting
-from repro.core.langex import as_langex
 from repro.index.vector_index import VectorIndex
 
 

@@ -158,6 +158,37 @@ def pt_threshold(sample: Sample, gamma_p: float, delta: float,
     return best
 
 
+def shared_sample_indices(n: int, sample_size: int, seed: int,
+                          scores: np.ndarray | None = None
+                          ) -> tuple[np.ndarray, np.ndarray]:
+    """One importance sample shared by every selectivity estimate in a plan.
+
+    With proxy ``scores`` the draw is the defensive SUPG proposal; without, it
+    is uniform.  Returns (idx [s] with replacement, probs [n]) so estimates
+    stay Hajek-unbiased under either proposal.  Sharing one sample across all
+    filters in a chain (rather than one per filter) is what lets the plan
+    optimizer rank k predicates with a single oracle-labeled subset.
+    """
+    rng = np.random.default_rng(seed)
+    if scores is not None:
+        probs = defensive_importance_probs(np.asarray(scores, float))
+    else:
+        probs = np.full(n, 1.0 / n)
+    s = min(sample_size, n)
+    return importance_sample(rng, probs, s), probs
+
+
+def estimate_selectivity(idx: np.ndarray, probs: np.ndarray,
+                         labels: np.ndarray) -> float:
+    """Hajek (self-normalized) selectivity estimate E[o] from a weighted
+    sample: sum(w*o)/sum(w), clipped to (0, 1) open so downstream cost
+    ranking never divides by zero."""
+    w = 1.0 / (len(probs) * probs[idx])
+    o = np.asarray(labels, float)
+    est = float(np.sum(w * o) / max(np.sum(w), 1e-12))
+    return float(np.clip(est, 1e-3, 1.0 - 1e-3))
+
+
 def accuracy_threshold(scores: np.ndarray, correct: np.ndarray, gamma: float,
                        delta: float, *, grid: int = DEFAULT_GRID) -> float:
     """PT-style threshold on *classification accuracy* (sem_group_by §3.3):

@@ -1,0 +1,102 @@
+"""BatchedModelCache: prompt-level dedup + LRU memoization over a model.
+
+Layered on ``CountedModel`` so accounting only sees the prompts that actually
+reach the backend: within one batched call, duplicate prompts are coalesced
+to a single backend row; across pipeline stages, previously answered prompts
+are served from the LRU (recorded as ``cache_hits`` in the active OpStats).
+This is what makes a repeated predicate — e.g. a filter re-checked after a
+join, or overlapping cascade sample/mid-region prompts — never pay twice
+inside one optimized pipeline.
+
+The wrapper is protocol-compatible with ``GenerativeModel``, so every
+operator implementation works against it unchanged.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import accounting
+
+
+class BatchedModelCache:
+    def __init__(self, model, *, capacity: int = 100_000):
+        self._m = model
+        self.capacity = capacity
+        self._lru: OrderedDict[tuple, object] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    # -- plumbing ----------------------------------------------------------
+    @property
+    def role(self) -> str:  # CountedModel compat (introspection / logging)
+        return getattr(self._m, "role", "model")
+
+    def _get(self, key):
+        self._lru.move_to_end(key)
+        return self._lru[key]
+
+    def _put(self, key, value) -> None:
+        self._lru[key] = value
+        if len(self._lru) > self.capacity:
+            self._lru.popitem(last=False)
+
+    def _through(self, kind: str, prompts: Sequence[str], call, *,
+                 extra_key: tuple = ()):
+        """Dedup ``prompts`` against the LRU and within the batch, answer the
+        misses with one backend ``call``, and reassemble per-prompt rows.
+
+        Reassembly reads from a batch-local row map, not the LRU: one batch
+        may be larger than the cache capacity, in which case inserting the
+        tail of the batch evicts its own head."""
+        keys = [(kind, *extra_key, p) for p in prompts]
+        batch_rows: dict[tuple, object] = {}
+        todo: list[tuple] = []
+        todo_prompts: list[str] = []
+        for key, p in zip(keys, prompts):
+            if key in batch_rows:
+                continue
+            if key in self._lru:
+                batch_rows[key] = self._get(key)
+            else:
+                batch_rows[key] = None  # placeholder marks in-batch dedup
+                todo.append(key)
+                todo_prompts.append(p)
+        if todo_prompts:
+            rows = call(todo_prompts)
+            for key, row in zip(todo, rows):
+                batch_rows[key] = row
+                self._put(key, row)
+        n_hit = len(prompts) - len(todo_prompts)
+        self.hits += n_hit
+        self.misses += len(todo_prompts)
+        accounting.record("cache_hit", n_hit)
+        return [batch_rows[k] for k in keys]
+
+    # -- GenerativeModel protocol -----------------------------------------
+    def predicate(self, prompts):
+        rows = self._through(
+            "predicate", prompts,
+            lambda ps: list(zip(*(np.asarray(a).tolist()
+                                  for a in self._m.predicate(ps)))))
+        passed = np.asarray([r[0] for r in rows], bool)
+        scores = np.asarray([r[1] for r in rows], np.float32)
+        return passed, scores
+
+    def generate(self, prompts):
+        return list(self._through("generate", prompts,
+                                  lambda ps: list(self._m.generate(ps))))
+
+    def compare(self, prompts):
+        rows = self._through("compare", prompts,
+                             lambda ps: np.asarray(self._m.compare(ps)).tolist())
+        return np.asarray(rows, bool)
+
+    def choose(self, prompts, n_options):
+        rows = self._through(
+            "choose", prompts,
+            lambda ps: np.asarray(self._m.choose(ps, n_options)).tolist(),
+            extra_key=(n_options,))
+        return np.asarray(rows, int)

@@ -1,0 +1,244 @@
+"""PlanExecutor: the batched physical layer under the plan IR.
+
+Walks a (possibly optimized) logical DAG bottom-up and dispatches each node
+to the gold/cascade operator implementations in ``repro.core.operators``.
+All model traffic goes through the executor's oracle/proxy handles; when the
+executor is built with ``use_cache=True`` (the ``LazySemFrame.collect()``
+path) those handles are ``BatchedModelCache`` wrappers, so a prompt answered
+anywhere in the pipeline — including by the optimizer's selectivity probes —
+is never re-issued to the backend.  The eager ``SemFrame`` path builds the
+executor without the cache, which makes it call-for-call identical to the
+pre-plan-layer behavior.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import accounting
+from repro.core.operators import agg as _agg
+from repro.core.operators import filter as _filter
+from repro.core.operators import groupby as _groupby
+from repro.core.operators import join as _join
+from repro.core.operators import mapex as _mapex
+from repro.core.operators import search as _search
+from repro.core.operators import topk as _topk
+from repro.core.plan import nodes as N
+from repro.core.plan.cache import BatchedModelCache
+
+
+class PlanExecutor:
+    def __init__(self, session, *, stats_log: list | None = None,
+                 use_cache: bool = False, oracle=None, proxy=None):
+        self.session = session
+        self.stats_log = stats_log if stats_log is not None else []
+        if oracle is None:
+            oracle = BatchedModelCache(session.oracle) if use_cache else session.oracle
+        if proxy is None and session.proxy is not None:
+            proxy = BatchedModelCache(session.proxy) if use_cache else session.proxy
+        self.oracle = oracle
+        self.proxy = proxy
+
+    # -- plumbing ---------------------------------------------------------
+    def _log(self, stats: dict) -> dict:
+        self.stats_log.append(stats)
+        return stats
+
+    def _targets(self, node) -> dict:
+        s = self.session
+        return dict(
+            recall_target=node.recall_target or 0.9,
+            precision_target=node.precision_target or 0.9,
+            delta=node.delta if node.delta is not None else s.default_delta,
+            sample_size=s.sample_size, seed=s.seed)
+
+    def run(self, node: N.LogicalNode) -> list[dict]:
+        fn = getattr(self, f"_run_{type(node).__name__.lower()}")
+        return fn(node)
+
+    # -- leaves ------------------------------------------------------------
+    def _run_scan(self, node: N.Scan) -> list[dict]:
+        return list(node.records)
+
+    # -- filter ------------------------------------------------------------
+    def _run_filter(self, node: N.Filter) -> list[dict]:
+        recs = self.run(node.child)
+        if not node.is_cascade:
+            mask, stats = _filter.sem_filter_gold(recs, node.langex, self.oracle)
+        else:
+            if self.proxy is None:
+                raise ValueError("optimized sem_filter needs a proxy model in the Session")
+            mask, stats = _filter.sem_filter_cascade(
+                recs, node.langex, self.oracle, self.proxy, **self._targets(node))
+        self._log(stats)
+        return [t for t, m in zip(recs, mask) if m]
+
+    # -- join --------------------------------------------------------------
+    def _run_join(self, node: N.Join) -> list[dict]:
+        left = self.run(node.left)
+        right = self.run(node.right)
+        if node.is_cascade:
+            if self.session.embedder is None:
+                raise ValueError("optimized sem_join needs an embedder in the Session")
+            mask, stats = _join.sem_join_cascade(
+                left, right, node.langex, self.oracle, self.session.embedder,
+                project_fn=node.project_fn, force_plan=node.force_plan,
+                **self._targets(node))
+        elif node.prefilter_k:
+            mask, stats = self._join_prefiltered(node, left, right)
+        else:
+            mask, stats = _join.sem_join_gold(left, right, node.langex, self.oracle)
+        self._log(stats)
+        out = []
+        n1, n2 = mask.shape
+        for i in range(n1):
+            for j in range(n2):
+                if mask[i, j]:
+                    out.append({**left[i],
+                                **{f"right_{k}": v for k, v in right[j].items()}})
+        return out
+
+    def _join_prefiltered(self, node: N.Join, left, right):
+        """Gold join narrowed to each left row's top-k most-similar right rows
+        (the optimizer-injected sem_sim_join prefilter; trades a recall tail
+        for an n1*k instead of n1*n2 oracle bill)."""
+        lx = node.langex
+        emb = self.session.embedder
+        with accounting.track("sem_join_prefiltered") as st:
+            n1, n2 = len(left), len(right)
+            k = min(node.prefilter_k, n2)
+            lfields = [f for f in lx.fields if f.side != "right"]
+            rfields = [f for f in lx.fields if f.side == "right"]
+            emb_l = emb.embed(_join._render_side(left, lfields))
+            emb_r = emb.embed(_join._render_side(right, rfields))
+            cand = np.argsort(-(emb_l @ emb_r.T), axis=1)[:, :k]
+            pairs = [(i, int(j)) for i in range(n1) for j in cand[i]]
+            passed, _ = self.oracle.predicate(_join._pair_prompts(lx, left, right, pairs))
+            mask = np.zeros((n1, n2), bool)
+            for (i, j), p in zip(pairs, passed):
+                mask[i, j] = p
+            st.details.update(prefilter_k=k, candidate_pairs=len(pairs),
+                              pruned_pairs=n1 * n2 - len(pairs))
+            return mask, st.as_dict()
+
+    # -- topk --------------------------------------------------------------
+    def _run_topk(self, node: N.TopK) -> list[dict]:
+        recs = self.run(node.child)
+        if node.group_by is not None:
+            groups: dict = {}
+            for t in recs:
+                groups.setdefault(t[node.group_by], []).append(t)
+            out = []
+            for _, sub in sorted(groups.items(), key=lambda kv: str(kv[0])):
+                child = dataclasses.replace(node, child=N.Scan(sub), group_by=None)
+                out.extend(self.run(child))
+            return out
+
+        s = self.session
+        pivot_scores = None
+        if node.pivot_query is not None and s.embedder is not None:
+            texts = [node.langex.render(t) for t in recs]
+            emb = s.embedder.embed(texts)
+            qv = s.embedder.embed([node.pivot_query])[0]
+            pivot_scores = emb @ qv
+        fn = {"quickselect": _topk.sem_topk_quickselect,
+              "quadratic": _topk.sem_topk_quadratic,
+              "heap": _topk.sem_topk_heap}[node.algorithm]
+        if node.algorithm == "quickselect":
+            idx, stats = fn(recs, node.langex, node.k, self.oracle,
+                            pivot_scores=pivot_scores, seed=s.seed)
+        else:
+            idx, stats = fn(recs, node.langex, node.k, self.oracle)
+        self._log(stats)
+        return [recs[i] for i in idx]
+
+    # -- agg ---------------------------------------------------------------
+    def _run_agg(self, node: N.Agg) -> list[dict]:
+        recs = self.run(node.child)
+        if node.group_by is not None:
+            groups: dict = {}
+            for t in recs:
+                groups.setdefault(t[node.group_by], []).append(t)
+            out = []
+            for g, sub in groups.items():
+                answer, stats = _agg.sem_agg_hierarchical(
+                    sub, node.langex, self.oracle,
+                    fanout=node.fanout, partitioner=node.partitioner)
+                self._log(stats)
+                out.append({node.group_by: g, node.out_column: answer})
+            return out
+        answer, stats = _agg.sem_agg_hierarchical(
+            recs, node.langex, self.oracle,
+            fanout=node.fanout, partitioner=node.partitioner)
+        self._log(stats)
+        return [{node.out_column: answer}]
+
+    # -- group_by ----------------------------------------------------------
+    def _run_groupby(self, node: N.GroupBy) -> list[dict]:
+        recs = self.run(node.child)
+        s = self.session
+        if s.embedder is None:
+            raise ValueError("sem_group_by needs an embedder in the Session")
+        if node.accuracy_target is None:
+            res = _groupby.sem_group_by_gold(recs, node.langex, node.C,
+                                             self.oracle, s.embedder, seed=s.seed)
+        else:
+            res = _groupby.sem_group_by_cascade(
+                recs, node.langex, node.C, self.oracle, s.embedder,
+                accuracy_target=node.accuracy_target,
+                delta=node.delta if node.delta is not None else s.default_delta,
+                sample_size=s.sample_size, seed=s.seed)
+        self._log(res.stats)
+        return [{**t, "group": int(g), "group_label": res.labels[int(g)]}
+                for t, g in zip(recs, res.assignment)]
+
+    # -- map family --------------------------------------------------------
+    def _run_map(self, node: N.Map) -> list[dict]:
+        recs = self.run(node.child)
+        texts, stats = _mapex.sem_map(recs, node.langex, self.oracle)
+        self._log(stats)
+        return [{**t, node.out_column: x} for t, x in zip(recs, texts)]
+
+    def _run_fusedmap(self, node: N.FusedMap) -> list[dict]:
+        recs = self.run(node.child)
+        columns, stats = _mapex.sem_map_fused(recs, node.langexes, self.oracle)
+        self._log(stats)
+        return [{**t, **{c: col[i] for c, col in zip(node.out_columns, columns)}}
+                for i, t in enumerate(recs)]
+
+    def _run_extract(self, node: N.Extract) -> list[dict]:
+        recs = self.run(node.child)
+        texts, stats = _mapex.sem_extract(recs, node.langex, self.oracle,
+                                          source_field=node.source_field)
+        self._log(stats)
+        return [{**t, node.out_column: x} for t, x in zip(recs, texts)]
+
+    # -- similarity family -------------------------------------------------
+    def _run_search(self, node: N.Search) -> list[dict]:
+        recs = self.run(node.child)
+        s = self.session
+        index = node.index or _search.sem_index(
+            [str(t[node.column]) for t in recs], s.embedder)
+        hits, stats = _search.sem_search(
+            index, node.query, s.embedder, k=node.k, n_rerank=node.n_rerank,
+            rerank_model=self.oracle if node.n_rerank else None,
+            records=recs, rerank_langex=node.rerank_langex)
+        self._log(stats)
+        return [recs[i] for i in hits]
+
+    def _run_simjoin(self, node: N.SimJoin) -> list[dict]:
+        left = self.run(node.left)
+        right = self.run(node.right)
+        s = self.session
+        index = _search.sem_index([str(t[node.right_col]) for t in right], s.embedder)
+        scores, idx, stats = _search.sem_sim_join(
+            [str(t[node.left_col]) for t in left], index, s.embedder, k=node.k)
+        self._log(stats)
+        out = []
+        for i, t in enumerate(left):
+            for rank in range(idx.shape[1]):
+                j = int(idx[i, rank])
+                out.append({**t, **{f"right_{kk}": v for kk, v in right[j].items()},
+                            "sim_score": float(scores[i, rank])})
+        return out

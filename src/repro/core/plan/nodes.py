@@ -1,0 +1,248 @@
+"""Logical plan IR: one dataclass per semantic operator.
+
+Nodes are cheap immutable-ish descriptions (langex + knobs + child nodes);
+they carry *no* execution state.  Rewrites produce new nodes with
+``dataclasses.replace``.  ``columns()`` propagates the static schema the same
+way the eager ``SemFrame`` does (joins prefix right columns with ``right_``),
+which is what the pushdown rule reasons over.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+from repro.core.langex import Langex, as_langex
+
+
+@dataclasses.dataclass
+class LogicalNode:
+    """Base: children are the dataclass fields holding LogicalNodes."""
+
+    def children(self) -> list["LogicalNode"]:
+        return [v for f in dataclasses.fields(self)
+                if isinstance(v := getattr(self, f.name), LogicalNode)]
+
+    def replace_children(self, mapping: dict[int, "LogicalNode"]) -> "LogicalNode":
+        """New node with children swapped (keyed by id of the old child)."""
+        kw = {f.name: mapping[id(v)]
+              for f in dataclasses.fields(self)
+              if isinstance(v := getattr(self, f.name), LogicalNode) and id(v) in mapping}
+        return dataclasses.replace(self, **kw) if kw else self
+
+    def columns(self) -> set[str]:
+        raise NotImplementedError
+
+    def label(self) -> str:
+        return type(self).__name__
+
+
+def _lx(langex) -> Langex:
+    return as_langex(langex)
+
+
+@dataclasses.dataclass
+class Scan(LogicalNode):
+    records: Sequence[dict]
+
+    def columns(self) -> set[str]:
+        return set(self.records[0].keys()) if self.records else set()
+
+    def label(self) -> str:
+        return f"Scan[n={len(self.records)}]"
+
+
+@dataclasses.dataclass
+class Filter(LogicalNode):
+    child: LogicalNode
+    langex: Langex
+    recall_target: float | None = None
+    precision_target: float | None = None
+    delta: float | None = None
+    selectivity: float | None = None  # estimate installed by the optimizer
+
+    def __post_init__(self):
+        self.langex = _lx(self.langex)
+
+    @property
+    def is_cascade(self) -> bool:
+        return self.recall_target is not None or self.precision_target is not None
+
+    def columns(self) -> set[str]:
+        return self.child.columns()
+
+    def label(self) -> str:
+        sel = f", sel~{self.selectivity:.2f}" if self.selectivity is not None else ""
+        mode = "cascade" if self.is_cascade else "gold"
+        return f"Filter[{mode}{sel}] {self.langex.template!r}"
+
+
+@dataclasses.dataclass
+class Join(LogicalNode):
+    left: LogicalNode
+    right: LogicalNode
+    langex: Langex
+    recall_target: float | None = None
+    precision_target: float | None = None
+    delta: float | None = None
+    project_fn: Callable | None = None
+    force_plan: str | None = None
+    prefilter_k: int | None = None  # sim-join candidate prefilter (optimizer)
+
+    def __post_init__(self):
+        self.langex = _lx(self.langex)
+
+    @property
+    def is_cascade(self) -> bool:
+        return self.recall_target is not None or self.precision_target is not None
+
+    def columns(self) -> set[str]:
+        return self.left.columns() | {f"right_{c}" for c in self.right.columns()}
+
+    def label(self) -> str:
+        mode = "cascade" if self.is_cascade else "gold"
+        pf = f", prefilter_k={self.prefilter_k}" if self.prefilter_k else ""
+        return f"Join[{mode}{pf}] {self.langex.template!r}"
+
+
+@dataclasses.dataclass
+class TopK(LogicalNode):
+    child: LogicalNode
+    langex: Langex
+    k: int
+    algorithm: str = "quickselect"
+    pivot_query: str | None = None
+    group_by: str | None = None
+
+    def __post_init__(self):
+        self.langex = _lx(self.langex)
+
+    def columns(self) -> set[str]:
+        return self.child.columns()
+
+    def label(self) -> str:
+        return f"TopK[k={self.k}, {self.algorithm}] {self.langex.template!r}"
+
+
+@dataclasses.dataclass
+class Agg(LogicalNode):
+    child: LogicalNode
+    langex: Langex
+    fanout: int = 8
+    group_by: str | None = None
+    partitioner: Callable | None = None
+    out_column: str = "aggregate"
+
+    def __post_init__(self):
+        self.langex = _lx(self.langex)
+
+    def columns(self) -> set[str]:
+        cols = {self.out_column}
+        if self.group_by is not None:
+            cols.add(self.group_by)
+        return cols
+
+    def label(self) -> str:
+        return f"Agg[fanout={self.fanout}] {self.langex.template!r}"
+
+
+@dataclasses.dataclass
+class GroupBy(LogicalNode):
+    child: LogicalNode
+    langex: Langex
+    C: int
+    accuracy_target: float | None = None
+    delta: float | None = None
+
+    def __post_init__(self):
+        self.langex = _lx(self.langex)
+
+    def columns(self) -> set[str]:
+        return self.child.columns() | {"group", "group_label"}
+
+    def label(self) -> str:
+        return f"GroupBy[C={self.C}] {self.langex.template!r}"
+
+
+@dataclasses.dataclass
+class Map(LogicalNode):
+    child: LogicalNode
+    langex: Langex
+    out_column: str = "mapped"
+
+    def __post_init__(self):
+        self.langex = _lx(self.langex)
+
+    def columns(self) -> set[str]:
+        return self.child.columns() | {self.out_column}
+
+    def label(self) -> str:
+        return f"Map[->{self.out_column}] {self.langex.template!r}"
+
+
+@dataclasses.dataclass
+class FusedMap(LogicalNode):
+    """N sem_maps over the same input collapsed into one prompt pass."""
+
+    child: LogicalNode
+    langexes: tuple[Langex, ...]
+    out_columns: tuple[str, ...]
+
+    def __post_init__(self):
+        self.langexes = tuple(_lx(l) for l in self.langexes)
+        assert len(self.langexes) == len(self.out_columns)
+
+    def columns(self) -> set[str]:
+        return self.child.columns() | set(self.out_columns)
+
+    def label(self) -> str:
+        return f"FusedMap[->{','.join(self.out_columns)}] x{len(self.langexes)}"
+
+
+@dataclasses.dataclass
+class Extract(LogicalNode):
+    child: LogicalNode
+    langex: Langex
+    source_field: str
+    out_column: str = "extracted"
+
+    def __post_init__(self):
+        self.langex = _lx(self.langex)
+
+    def columns(self) -> set[str]:
+        return self.child.columns() | {self.out_column}
+
+    def label(self) -> str:
+        return f"Extract[{self.source_field}->{self.out_column}] {self.langex.template!r}"
+
+
+@dataclasses.dataclass
+class Search(LogicalNode):
+    child: LogicalNode
+    column: str
+    query: str
+    k: int = 10
+    n_rerank: int = 0
+    rerank_langex: Any = None
+    index: Any = None
+
+    def columns(self) -> set[str]:
+        return self.child.columns()
+
+    def label(self) -> str:
+        return f"Search[k={self.k}] {self.column}~{self.query!r}"
+
+
+@dataclasses.dataclass
+class SimJoin(LogicalNode):
+    left: LogicalNode
+    right: LogicalNode
+    left_col: str
+    right_col: str
+    k: int = 1
+
+    def columns(self) -> set[str]:
+        return (self.left.columns()
+                | {f"right_{c}" for c in self.right.columns()} | {"sim_score"})
+
+    def label(self) -> str:
+        return f"SimJoin[k={self.k}] {self.left_col}~{self.right_col}"

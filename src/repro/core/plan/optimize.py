@@ -1,0 +1,307 @@
+"""Rule-based plan optimizer over the logical IR.
+
+Four rewrites, applied in a fixed order (each is semantics-preserving wrt
+the gold algorithms except the last, which trades a bounded recall tail for
+an n1*k oracle bill and only fires on high-fanout joins):
+
+  1. ``fuse_maps``            — consecutive independent sem_maps collapse
+                                into one FusedMap prompt pass (N calls, not
+                                K*N).
+  2. ``pushdown_filter``      — a filter over a join whose langex touches
+                                only one side's columns moves below the join,
+                                shrinking the pair space before the O(n1*n2)
+                                operator runs.
+  3. ``reorder_filters``      — a chain of filters over a Scan is re-ordered
+                                by estimated cost x selectivity: each
+                                predicate's selectivity comes from ONE shared
+                                importance sample (optimizer/stats.py) probed
+                                through the executor's BatchedModelCache, so
+                                probe labels are re-used by the execution
+                                itself.  Classic ordering: ascending
+                                cost / (1 - selectivity).
+  4. ``inject_sim_prefilter`` — a gold join whose estimated pair count
+                                exceeds ``prefilter_threshold`` gets a
+                                sem_sim_join candidate prefilter (top
+                                ``prefilter_frac`` of right rows per left
+                                row) when the session has an embedder.
+
+``explain_plan`` renders a plan tree with per-node cardinality and
+oracle-call estimates; ``LazySemFrame.explain()`` shows before/after plus
+the applied rewrite list.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+
+import numpy as np
+
+from repro.core.operators.filter import predicate_prompt
+from repro.core.optimizer import stats
+from repro.core.plan import nodes as N
+
+# per-tuple oracle-equivalent unit costs (cascades mostly pay the proxy)
+GOLD_FILTER_COST = 1.0
+CASCADE_FILTER_COST = 0.45
+GENERATE_COST = 1.0
+DEFAULT_FILTER_SEL = 0.5
+DEFAULT_JOIN_SEL = 0.05
+
+_RIGHT_FIELD_RE = re.compile(r"\{right_([^{}:]+)\}")
+
+
+@dataclasses.dataclass(frozen=True)
+class AppliedRewrite:
+    rule: str
+    detail: str
+
+    def __str__(self) -> str:
+        return f"{self.rule}: {self.detail}"
+
+
+# ---------------------------------------------------------------------------
+# Cost model
+# ---------------------------------------------------------------------------
+
+
+def estimate_cardinality(node: N.LogicalNode) -> float:
+    if isinstance(node, N.Scan):
+        return float(len(node.records))
+    if isinstance(node, N.Filter):
+        sel = node.selectivity if node.selectivity is not None else DEFAULT_FILTER_SEL
+        return sel * estimate_cardinality(node.child)
+    if isinstance(node, N.Join):
+        return (DEFAULT_JOIN_SEL * estimate_cardinality(node.left)
+                * estimate_cardinality(node.right))
+    if isinstance(node, N.SimJoin):
+        return node.k * estimate_cardinality(node.left)
+    if isinstance(node, N.TopK):
+        n = estimate_cardinality(node.child)
+        if node.group_by is not None:
+            return n  # k rows per group, group count unknown: upper bound
+        return float(min(node.k, n))
+    if isinstance(node, N.Search):
+        return float(min(node.k, estimate_cardinality(node.child)))
+    if isinstance(node, N.Agg):
+        return 1.0
+    # Map / FusedMap / Extract / GroupBy keep cardinality
+    return estimate_cardinality(node.children()[0]) if node.children() else 0.0
+
+
+def estimate_cost(node: N.LogicalNode) -> float:
+    """Estimated oracle-equivalent LM calls for this node alone."""
+    if isinstance(node, N.Scan) or isinstance(node, N.SimJoin):
+        return 0.0
+    if isinstance(node, N.Filter):
+        unit = CASCADE_FILTER_COST if node.is_cascade else GOLD_FILTER_COST
+        return unit * estimate_cardinality(node.child)
+    if isinstance(node, N.Join):
+        n1 = estimate_cardinality(node.left)
+        n2 = estimate_cardinality(node.right)
+        if node.is_cascade:
+            return 0.1 * n1 * n2 + n1  # sample + mid region + projection
+        if node.prefilter_k:
+            return n1 * min(node.prefilter_k, n2)
+        return n1 * n2
+    if isinstance(node, (N.Map, N.Extract, N.FusedMap)):
+        return GENERATE_COST * estimate_cardinality(node.child)
+    if isinstance(node, N.TopK):
+        return 2.0 * estimate_cardinality(node.child)
+    if isinstance(node, N.GroupBy):
+        n = estimate_cardinality(node.child)
+        return 2.0 * n if node.accuracy_target is None else 1.2 * n
+    if isinstance(node, N.Agg):
+        n = estimate_cardinality(node.child)
+        return n / max(node.fanout - 1, 1) + 1
+    if isinstance(node, N.Search):
+        return float(node.n_rerank or 0)
+    return 0.0
+
+
+def total_cost(node: N.LogicalNode) -> float:
+    return estimate_cost(node) + sum(total_cost(c) for c in node.children())
+
+
+def explain_plan(node: N.LogicalNode, *, indent: str = "") -> str:
+    out = [f"{indent}{node.label()}  "
+           f"(rows~{estimate_cardinality(node):.0f}, "
+           f"oracle~{estimate_cost(node):.0f})"]
+    for c in node.children():
+        out.append(explain_plan(c, indent=indent + "  "))
+    return "\n".join(out)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer
+# ---------------------------------------------------------------------------
+
+
+class PlanOptimizer:
+    def __init__(self, session, *, oracle=None, proxy=None, sample_size: int = 32,
+                 seed: int = 0, prefilter_threshold: int = 20_000,
+                 prefilter_frac: float = 0.25):
+        self.session = session
+        # probe through the executor's cache so sample labels are reused
+        self.oracle = oracle if oracle is not None else session.oracle
+        self.proxy = proxy if proxy is not None else session.proxy
+        self.sample_size = sample_size
+        self.seed = seed
+        self.prefilter_threshold = prefilter_threshold
+        self.prefilter_frac = prefilter_frac
+        self.applied: list[AppliedRewrite] = []
+        self._sel_memo: dict[tuple, float] = {}
+
+    # -- generic bottom-up transform --------------------------------------
+    def _transform(self, node: N.LogicalNode, fn) -> N.LogicalNode:
+        mapping = {id(c): self._transform(c, fn) for c in node.children()}
+        node = node.replace_children(mapping)
+        out = fn(node)
+        return node if out is None else out
+
+    def optimize(self, plan: N.LogicalNode) -> N.LogicalNode:
+        self.applied = []  # per-run; the selectivity memo persists across runs
+        plan = self._transform(plan, self._fuse_maps)
+        for _ in range(8):  # pushdown to fixpoint (filters sink through join stacks)
+            before = len(self.applied)
+            plan = self._transform(plan, self._pushdown_filter)
+            if len(self.applied) == before:
+                break
+        plan = self._reorder_filters(plan)
+        plan = self._transform(plan, self._inject_sim_prefilter)
+        return plan
+
+    # -- rule 1: map fusion ------------------------------------------------
+    def _fuse_maps(self, node):
+        if not isinstance(node, N.Map):
+            return None
+        child = node.child
+        if isinstance(child, N.Map):
+            langexes, cols = (child.langex,), (child.out_column,)
+            base = child.child
+        elif isinstance(child, N.FusedMap):
+            langexes, cols = child.langexes, child.out_columns
+            base = child.child
+        else:
+            return None
+        deps = {f.name for f in node.langex.fields}
+        if deps & set(cols) or node.out_column in cols:
+            return None  # second map reads/overwrites the first's output
+        fused = N.FusedMap(base, langexes + (node.langex,), cols + (node.out_column,))
+        self.applied.append(AppliedRewrite(
+            "fuse_maps", f"{len(fused.langexes)} sem_maps -> one prompt pass "
+                         f"(columns {', '.join(fused.out_columns)})"))
+        return fused
+
+    # -- rule 2: filter pushdown below join --------------------------------
+    def _pushdown_filter(self, node):
+        if not (isinstance(node, N.Filter) and isinstance(node.child, N.Join)):
+            return None
+        join = node.child
+        fields = {f.name for f in node.langex.fields}
+        if not fields:
+            return None
+        left_cols = join.left.columns()
+        right_cols = join.right.columns()
+        if fields <= left_cols:
+            pushed = dataclasses.replace(node, child=join.left)
+            self.applied.append(AppliedRewrite(
+                "pushdown_filter",
+                f"filter {node.langex.template!r} pushed below join (left side)"))
+            return dataclasses.replace(join, left=pushed)
+        stripped = {m.group(1) for m in _RIGHT_FIELD_RE.finditer(node.langex.template)}
+        if stripped and fields == {f"right_{s}" for s in stripped} \
+                and stripped <= right_cols:
+            template = _RIGHT_FIELD_RE.sub(r"{\1}", node.langex.template)
+            pushed = dataclasses.replace(node, child=join.right, langex=template)
+            self.applied.append(AppliedRewrite(
+                "pushdown_filter",
+                f"filter {node.langex.template!r} pushed below join (right side)"))
+            return dataclasses.replace(join, right=pushed)
+        return None
+
+    # -- rule 3: filter chain reordering -----------------------------------
+    def _filter_unit_cost(self, f: N.Filter) -> float:
+        return CASCADE_FILTER_COST if f.is_cascade else GOLD_FILTER_COST
+
+    def _probe_selectivity(self, f: N.Filter, base: N.Scan,
+                           idx: np.ndarray, probs: np.ndarray) -> float:
+        memo_key = (f.langex.template, id(base))
+        if memo_key not in self._sel_memo:
+            sampled = [base.records[i] for i in idx]
+            prompts = [predicate_prompt(f.langex, t) for t in sampled]
+            labels, _ = self.oracle.predicate(prompts)
+            self._sel_memo[memo_key] = stats.estimate_selectivity(idx, probs, labels)
+        return self._sel_memo[memo_key]
+
+    def _reorder_filters(self, node):
+        if not isinstance(node, N.Filter):
+            mapping = {id(c): self._reorder_filters(c) for c in node.children()}
+            return node.replace_children(mapping)
+
+        # collect the maximal chain below this (top-most) filter; the loop
+        # consumes inner filters, so recursion only re-enters below the chain
+        chain: list[N.Filter] = []
+        cur: N.LogicalNode = node
+        while isinstance(cur, N.Filter):
+            chain.append(cur)
+            cur = cur.child
+        base = self._reorder_filters(cur)
+        chain_bottom_up = list(reversed(chain))  # application order
+
+        if len(chain) < 2 or not isinstance(base, N.Scan) \
+                or len(base.records) < 2:
+            rebuilt = base
+            for f in chain_bottom_up:
+                rebuilt = dataclasses.replace(f, child=rebuilt)
+            return rebuilt
+
+        base_cols = base.columns()
+        if any({fl.name for fl in f.langex.fields} - base_cols for f in chain):
+            rebuilt = base
+            for f in chain_bottom_up:
+                rebuilt = dataclasses.replace(f, child=rebuilt)
+            return rebuilt
+
+        # with a proxy in the session, draw the shared sample from the SUPG
+        # defensive proposal over the chain's first predicate (cheap scores);
+        # without one, uniform — Hajek weighting absorbs either proposal
+        scores = None
+        if self.proxy is not None:
+            prompts = [predicate_prompt(chain_bottom_up[0].langex, t)
+                       for t in base.records]
+            _, scores = self.proxy.predicate(prompts)
+        idx, probs = stats.shared_sample_indices(
+            len(base.records), self.sample_size, self.seed, scores=scores)
+        sels = [self._probe_selectivity(f, base, idx, probs) for f in chain_bottom_up]
+        # optimal chain order: ascending cost / (1 - selectivity)
+        rank = [self._filter_unit_cost(f) / max(1.0 - s, 1e-6)
+                for f, s in zip(chain_bottom_up, sels)]
+        order = sorted(range(len(chain)), key=lambda i: rank[i])
+        rebuilt = base
+        for i in order:
+            rebuilt = dataclasses.replace(chain_bottom_up[i], child=rebuilt,
+                                          selectivity=sels[i])
+        if order != list(range(len(chain))):
+            self.applied.append(AppliedRewrite(
+                "reorder_filters",
+                f"{len(chain)}-filter chain reordered by cost x selectivity "
+                f"(sel={', '.join(f'{s:.2f}' for s in sels)})"))
+        return rebuilt
+
+    # -- rule 4: sim-join prefilter ----------------------------------------
+    def _inject_sim_prefilter(self, node):
+        if not isinstance(node, N.Join) or node.is_cascade or node.prefilter_k:
+            return None
+        if self.session.embedder is None or not node.langex.is_binary:
+            return None
+        n1 = estimate_cardinality(node.left)
+        n2 = estimate_cardinality(node.right)
+        if n1 * n2 < self.prefilter_threshold or n2 < 4:
+            return None
+        k = max(1, math.ceil(self.prefilter_frac * n2))
+        self.applied.append(AppliedRewrite(
+            "inject_sim_prefilter",
+            f"gold join over ~{n1 * n2:.0f} pairs narrowed to top-{k} "
+            f"similar right rows per left row"))
+        return dataclasses.replace(node, prefilter_k=k)

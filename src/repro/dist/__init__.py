@@ -1,0 +1,7 @@
+"""Distribution layer: logical-axis sharding rules, context-parallel decode,
+and pipeline parallelism.
+
+``sharding`` is pure rule resolution (no device state touched at import);
+``context_parallel`` / ``pipeline_parallel`` hold the multi-device execution
+paths exercised by tests/test_dist.py in forced-8-device subprocesses.
+"""

@@ -1,0 +1,86 @@
+"""Pipeline parallelism (GPipe-style, dense decoder stacks).
+
+The layer stack is partitioned into S = |first mesh axis| contiguous stages
+and microbatches flow through them on the classic (n_micro + S - 1)-tick
+schedule: at tick t, stage s runs microbatch t-s.  The tick loop is traced
+(unrolled), so work items at the same tick have no data dependencies between
+them and XLA is free to overlap them; *placement* of each stage's weights on
+its pod comes from the ``layers -> pod`` rule in ``repro.dist.sharding``
+(``spec_shardings`` shards the stacked layer dimension across the first mesh
+axis, which is exactly stage-stationary weight placement).
+
+Numerics are identical to ``registry.forward``: the schedule only reorders
+independent per-microbatch work, and the loss combines per-microbatch CE
+sums with a shared valid-token denominator.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.data.tokenizer import TOKENIZER
+from repro.models import layers as Lyr
+from repro.models import transformer as T
+
+
+def _n_stages(cfg: ModelConfig, mesh) -> int:
+    s = dict(mesh.shape)[mesh.axis_names[0]]
+    return s if cfg.num_layers % s == 0 else 1
+
+
+def _stage_tree(params, n_stages: int):
+    return jax.tree.map(
+        lambda a: a.reshape((n_stages, a.shape[0] // n_stages) + a.shape[1:]),
+        params["layers"])
+
+
+def _apply_stage(stage_p, h, *, cfg: ModelConfig):
+    def body(x, lp):
+        x, _, _ = T._decoder_layer_seq(lp, x, cfg=cfg, use_moe=False)
+        return x, None
+
+    h, _ = jax.lax.scan(body, h, stage_p)
+    return h
+
+
+def pp_forward(cfg: ModelConfig, mesh, params, tokens, *, n_micro: int = 4):
+    """tokens [B,S] -> logits [B,S,V] via the staged microbatch schedule."""
+    if T.layer_layout(cfg)["kind"] != "dense":
+        raise NotImplementedError("pipeline parallelism covers dense stacks")
+    n_stages = _n_stages(cfg, mesh)
+    stages = _stage_tree(params, n_stages)
+    b = tokens.shape[0]
+    assert b % n_micro == 0, (b, n_micro)
+    toks = tokens.reshape((n_micro, b // n_micro) + tokens.shape[1:])
+
+    acts: list = [None] * n_micro
+    for t in range(n_micro + n_stages - 1):
+        for s in range(n_stages - 1, -1, -1):  # later stages first (drain order)
+            m = t - s
+            if not 0 <= m < n_micro:
+                continue
+            if s == 0:
+                h = Lyr.embed(params["embed"], toks[m]).astype(cfg.activation_dtype)
+            else:
+                h = acts[m]
+            acts[m] = _apply_stage(jax.tree.map(lambda a, s=s: a[s], stages), h, cfg=cfg)
+
+    x = jnp.concatenate(acts, axis=0)
+    x = Lyr.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return Lyr.unembed({**params.get("out", {}), **params["embed"]}, x,
+                       tied=cfg.tie_embeddings)
+
+
+def make_pp_loss(cfg: ModelConfig, mesh, *, n_micro: int = 4):
+    """Causal-LM CE over the pipelined forward (same math as trainstep.loss_fn
+    for dense models: PAD labels ignored, one global token denominator)."""
+
+    def loss(params, tokens, labels):
+        logits = pp_forward(cfg, mesh, params, tokens, n_micro=n_micro)
+        valid = (labels != TOKENIZER.pad_id) & (labels >= 0)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        tgt = jnp.take_along_axis(logp, jnp.clip(labels, 0)[..., None], axis=-1)[..., 0]
+        return -jnp.sum(jnp.where(valid, tgt, 0.0)) / jnp.maximum(jnp.sum(valid), 1)
+
+    return loss

@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common import SpecTree, init_params, unflatten
+from repro.common import SpecTree, init_params
 from repro.configs.base import ModelConfig
 from repro.data.tokenizer import TOKENIZER
 from repro.models import attention as attn

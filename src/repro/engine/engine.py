@@ -22,7 +22,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.data.tokenizer import TOKENIZER
 from repro.engine.runner import ModelRunner
-from repro.engine.sampler import Sampler, logprobs_of
+from repro.engine.sampler import Sampler
 from repro.engine.scheduler import ContinuousBatchScheduler, Request
 from repro.models import registry
 
@@ -99,7 +99,17 @@ class InferenceEngine:
         logp = self._last_logits(prompts)
         return logp[:, TOKENIZER.a_id] > logp[:, TOKENIZER.b_id]
 
-    def choose(self, prompts: list[str], option_token_ids: list[int]) -> np.ndarray:
-        """Returns [B] int: argmax over the given single-token options."""
+    def choose(self, prompts: list[str], n_options: int) -> np.ndarray:
+        """Returns [B] int in [0, n_options): argmax over the option labels.
+
+        Matches the ``GenerativeModel`` protocol (operators pass the option
+        *count*; sem_group_by prompts number the categories "0.", "1.", ...):
+        options map to their single-token digit ids internally.  Beyond 10
+        options the leading digit is shared, so ties collapse to the first
+        option of each decade — callers wanting exact >10-way classification
+        should bucket (sem_group_by keeps C small).
+        """
         logp = self._last_logits(prompts)
+        option_token_ids = [TOKENIZER.encode(str(min(i, 9)), bos=False)[0]
+                            for i in range(n_options)]
         return np.argmax(logp[:, option_token_ids], axis=-1)

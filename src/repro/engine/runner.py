@@ -8,8 +8,6 @@ slot batch with per-slot cache lengths.
 from __future__ import annotations
 
 import functools
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 import numpy as np

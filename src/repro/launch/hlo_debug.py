@@ -7,7 +7,7 @@ import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 import argparse
 
-from repro.launch.hlo_analysis import Analyzer, parse, scope_of, shape_bytes
+from repro.launch.hlo_analysis import Analyzer, parse, scope_of
 
 
 def top_contributors(hlo_text: str, n: int = 20):

@@ -22,7 +22,6 @@ import json
 import re
 from typing import Any
 
-import numpy as np
 
 PEAK_FLOPS = 197e12       # bf16 per chip
 HBM_BW = 819e9            # bytes/s per chip
@@ -48,6 +47,18 @@ _COLLECTIVE_WIRE_FACTOR = {
     "all-to-all": 1.0,
     "collective-permute": 1.0,
 }
+
+
+def xla_cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` across jax versions: 0.4.x returns a
+    per-module list of dicts, newer versions one dict."""
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:  # pragma: no cover - backend without cost analysis
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
 
 
 def shape_bytes(type_str: str) -> int:
@@ -235,7 +246,7 @@ def analyse(compiled, lowered_text: str, *, arch: str, shape: str, mesh_name: st
     coll.setdefault("total", 0.0)
     mem["cpu_upcast_bytes_excluded"] = costs.cpu_upcast_bytes
     # cross-check fields (known-undercounting XLA numbers, kept for reference)
-    ca = compiled.cost_analysis() or {}
+    ca = xla_cost_analysis(compiled)
     mem["xla_flops_nocount_loops"] = float(ca.get("flops", 0.0))
     return Roofline(arch=arch, shape=shape, mesh=mesh_name, chips=chips,
                     hlo_flops_per_dev=flops, hlo_bytes_per_dev=byts,

@@ -8,8 +8,6 @@
 """
 from __future__ import annotations
 
-from typing import Any
-
 from repro.common import SpecTree, init_params as _init, param_structs, unflatten
 from repro.configs.base import ModelConfig
 

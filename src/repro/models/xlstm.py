@@ -15,7 +15,6 @@ import jax.numpy as jnp
 
 from repro.common import ParamSpec
 from repro.configs.base import ModelConfig
-from repro.models.layers import rmsnorm, rmsnorm_spec
 from repro.models.ssm import ssd_chunked, ssd_decode_step
 
 EXPAND = 2  # mLSTM internal up-projection factor

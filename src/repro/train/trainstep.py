@@ -5,8 +5,6 @@ error-feedback compression, AdamW update.
 from __future__ import annotations
 
 import functools
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 

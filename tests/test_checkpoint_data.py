@@ -1,7 +1,6 @@
 """Checkpointing (atomic/async/keep-n/bf16) + data pipeline determinism."""
 import os
 import tempfile
-import time
 
 import jax.numpy as jnp
 import numpy as np

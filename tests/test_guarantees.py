@@ -5,7 +5,10 @@ tests that observed failure rates stay at/below the configured delta.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the 'test' extra (pip install -e .[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.backends import synth
 from repro.core.frame import Session

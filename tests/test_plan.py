@@ -1,0 +1,268 @@
+"""Lazy plan layer: IR building, rewrite rules, batched execution.
+
+Covers the tentpole acceptance surface: filter reordering picks the
+cheap/selective predicate first (asserted via accounting oracle-call
+counts), join pushdown preserves the gold output set, BatchedModelCache
+dedups repeated prompts, and lazy pipelines reproduce the eager path
+record-for-record (and stat-for-stat with optimization off).
+"""
+import numpy as np
+import pytest
+
+from repro.core import accounting
+from repro.core.backends import synth
+from repro.core.backends.base import CountedModel
+from repro.core.frame import LazySemFrame, SemFrame, Session
+from repro.core.plan import BatchedModelCache, Filter, Join, Map, Scan
+from repro.core.plan.optimize import PlanOptimizer
+
+
+def _session(world, *, with_proxy=False, log=None):
+    return Session(oracle=synth.SimulatedModel(world, "oracle"),
+                   proxy=synth.SimulatedModel(world, "proxy") if with_proxy else None,
+                   embedder=synth.SimulatedEmbedder(world), sample_size=60)
+
+
+def _frame(records, world, **kw):
+    log = kw.pop("log", None)
+    return SemFrame(records, _session(world, **kw), log)
+
+
+def _calls(log, kind="oracle_calls"):
+    return sum(st.get(kind, 0) for st in log)
+
+
+# ---------------------------------------------------------------------------
+# lazy == eager
+# ---------------------------------------------------------------------------
+
+
+def test_lazy_unoptimized_matches_eager_records_and_stats():
+    left, right, world, *_ = synth.make_join_world(25, 8, seed=11)
+    synth.add_phrase_predicate(world, left, "is checkable", 0.4, seed=11)
+
+    elog, llog = [], []
+    eager = (_frame(left, world, log=elog)
+             .sem_filter("the {abstract} is checkable")
+             .sem_join(right, "the {abstract} reports the {reaction:right}"))
+    lazy = (_frame(left, world, log=llog).lazy()
+            .sem_filter("the {abstract} is checkable")
+            .sem_join(right, "the {abstract} reports the {reaction:right}")
+            .collect(optimize=False))
+    assert lazy.records == eager.records
+    strip = lambda st: {k: v for k, v in st.items() if k != "wall_s"}
+    assert [strip(s) for s in llog] == [strip(s) for s in elog]
+
+
+def test_lazy_optimized_matches_eager_records_with_fewer_oracle_calls():
+    """The acceptance pipeline: filter -> join, identical records, explain
+    shows a rewrite, accounting shows strictly fewer oracle calls."""
+    left, right, world, *_ = synth.make_join_world(40, 10, seed=12)
+    synth.add_phrase_predicate(world, left, "is checkable", 0.2, seed=12)
+    synth.add_phrase_predicate(world, left, "is in English", 0.85, seed=12)
+
+    def build(sf):
+        return (sf.sem_filter("the {abstract} is in English")
+                  .sem_filter("the {abstract} is checkable")
+                  .sem_join(right, "the {abstract} reports the {reaction:right}"))
+
+    elog, llog = [], []
+    eager = build(_frame(left, world, log=elog))
+    lazy_frame = build(_frame(left, world, log=llog).lazy())
+    out = lazy_frame.collect()
+    assert out.records == eager.records
+    assert any(r.rule == "reorder_filters" for r in lazy_frame.last_rewrites)
+    assert _calls(llog) < _calls(elog)
+
+
+# ---------------------------------------------------------------------------
+# rewrite rules
+# ---------------------------------------------------------------------------
+
+
+def test_filter_reorder_picks_selective_predicate_first():
+    records, world, oracle, proxy, emb = synth.make_filter_world(120, seed=13)
+    synth.add_phrase_predicate(world, records, "is rare", 0.1, seed=13)
+    synth.add_phrase_predicate(world, records, "is common", 0.9, seed=13)
+
+    log = []
+    lz = (_frame(records, world, log=log).lazy()
+          .sem_filter("the {claim} is common")       # broad first, as written
+          .sem_filter("the {claim} is rare"))
+    out = lz.collect()
+    # optimized order runs the rare predicate over all N and the common one
+    # only over the ~0.1*N survivors (plus the shared probe sample)
+    n = len(records)
+    assert _calls(log) < n + int(0.9 * n)            # << the as-written cost
+    assert any(r.rule == "reorder_filters" for r in lz.last_rewrites)
+    # output identical to the as-written eager chain
+    eager = (_frame(records, world)
+             .sem_filter("the {claim} is common")
+             .sem_filter("the {claim} is rare"))
+    assert out.records == eager.records
+
+
+def test_join_pushdown_preserves_gold_output_set():
+    left, right, world, *_ = synth.make_join_world(20, 8, seed=14)
+    synth.add_phrase_predicate(world, left, "is recent", 0.35, seed=14)
+
+    elog, llog = [], []
+    eager = (_frame(left, world, log=elog)
+             .sem_join(right, "the {abstract} reports the {reaction:right}")
+             .sem_filter("the {abstract} is recent"))
+    lz = (_frame(left, world, log=llog).lazy()
+          .sem_join(right, "the {abstract} reports the {reaction:right}")
+          .sem_filter("the {abstract} is recent"))
+    out = lz.collect()
+    assert any(r.rule == "pushdown_filter" for r in lz.last_rewrites)
+    assert out.records == eager.records              # gold set preserved
+    assert _calls(llog) < _calls(elog)               # filtered-left pair space
+
+
+def test_map_fusion_single_prompt_pass():
+    records, world, *_ = synth.make_filter_world(30, seed=15)
+    log = []
+    lz = (_frame(records, world, log=log).lazy()
+          .sem_map("a query for {claim}", out_column="q")
+          .sem_map("a title for {claim}", out_column="t"))
+    out = lz.collect()
+    assert any(r.rule == "fuse_maps" for r in lz.last_rewrites)
+    assert _calls(log, "generate_calls") == len(records)   # one pass, not two
+    assert all("q" in t and "t" in t for t in out.records)
+
+
+def test_map_fusion_skipped_on_dependency():
+    records, world, *_ = synth.make_filter_world(10, seed=16)
+    sess = _session(world)
+    plan = Map(Map(Scan(records), "a query for {claim}", out_column="q"),
+               "rewrite {q}", out_column="t")
+    opt = PlanOptimizer(sess)
+    optimized = opt.optimize(plan)
+    assert isinstance(optimized, Map) and isinstance(optimized.child, Map)
+    assert not any(r.rule == "fuse_maps" for r in opt.applied)
+
+
+def test_sim_prefilter_injected_under_high_fanout_join():
+    left, right, world, *_ = synth.make_join_world(30, 10, seed=17)
+    log = []
+    lz = (_frame(left, world, log=log).lazy()
+          .sem_join(right, "the {abstract} reports the {reaction:right}"))
+    out = lz.collect(prefilter_threshold=100)        # 300 pairs > threshold
+    assert any(r.rule == "inject_sim_prefilter" for r in lz.last_rewrites)
+    assert _calls(log) < len(left) * len(right)
+    gold = (_frame(left, world)
+            .sem_join(right, "the {abstract} reports the {reaction:right}"))
+    gold_pairs = {(t["id"], t["right_id"]) for t in gold.records}
+    got_pairs = {(t["id"], t["right_id"]) for t in out.records}
+    assert got_pairs <= gold_pairs                   # prefilter never invents
+    assert len(got_pairs & gold_pairs) >= 0.6 * len(gold_pairs)
+
+
+# ---------------------------------------------------------------------------
+# BatchedModelCache
+# ---------------------------------------------------------------------------
+
+
+def test_batched_cache_dedups_repeated_prompts():
+    records, world, *_ = synth.make_filter_world(20, seed=18)
+    cached = BatchedModelCache(CountedModel(synth.SimulatedModel(world, "oracle"),
+                                            "oracle"))
+    prompts = [f"the {t['claim']} holds" for t in records]
+    with accounting.track("first") as st1:
+        b1, s1 = cached.predicate(prompts + prompts[:5])  # in-batch dupes
+    assert st1.oracle_calls == 20                     # dupes coalesced
+    assert st1.cache_hits == 5
+    with accounting.track("second") as st2:
+        b2, s2 = cached.predicate(prompts)
+    assert st2.oracle_calls == 0                      # served from the LRU
+    assert st2.cache_hits == 20
+    np.testing.assert_array_equal(b1[:20], b2)
+    np.testing.assert_array_equal(s1[:20], s2)
+
+
+def test_batched_cache_survives_batch_larger_than_capacity():
+    records, world, *_ = synth.make_filter_world(8, seed=23)
+    cached = BatchedModelCache(
+        CountedModel(synth.SimulatedModel(world, "oracle"), "oracle"), capacity=3)
+    prompts = [f"the {t['claim']} holds" for t in records]
+    out = cached.generate(prompts)                    # batch (8) > capacity (3)
+    assert len(out) == 8 and all(isinstance(x, str) for x in out)
+
+
+def test_filter_reorder_uses_proxy_proposal_when_available():
+    records, world, *_ = synth.make_filter_world(80, seed=24)
+    synth.add_phrase_predicate(world, records, "is rare", 0.1, seed=24)
+    synth.add_phrase_predicate(world, records, "is common", 0.9, seed=24)
+    log = []
+    lz = (SemFrame(records, _session(world, with_proxy=True, log=None), log).lazy()
+          .sem_filter("the {claim} is common")
+          .sem_filter("the {claim} is rare"))
+    out = lz.collect()
+    assert any(r.rule == "reorder_filters" for r in lz.last_rewrites)
+    opt_stats = next(st for st in log if st["operator"] == "plan_optimize")
+    assert opt_stats["proxy_calls"] >= len(records)   # proposal scored the base
+    eager = (_frame(records, world)
+             .sem_filter("the {claim} is common")
+             .sem_filter("the {claim} is rare"))
+    assert [t["id"] for t in out.records] == [t["id"] for t in eager.records]
+
+
+def test_explain_then_collect_probes_once():
+    records, world, *_ = synth.make_filter_world(60, seed=25)
+    synth.add_phrase_predicate(world, records, "is rare", 0.1, seed=25)
+    synth.add_phrase_predicate(world, records, "is common", 0.9, seed=25)
+    log = []
+    lz = (_frame(records, world, log=log)
+          .lazy()
+          .sem_filter("the {claim} is common")
+          .sem_filter("the {claim} is rare"))
+    lz.explain()
+    lz.collect()
+    explain_st = next(st for st in log if st["operator"] == "plan_explain")
+    collect_st = next(st for st in log if st["operator"] == "plan_optimize")
+    assert explain_st["oracle_calls"] > 0             # probes are visible
+    # the shared optimizer memoizes selectivities: collect re-optimizes free
+    assert collect_st["oracle_calls"] == 0 and collect_st["proxy_calls"] == 0
+
+
+def test_batched_cache_choose_keyed_by_n_options():
+    records, world, model, emb = synth.make_topic_world(6, 3, seed=19)
+    cached = BatchedModelCache(CountedModel(model, "oracle"))
+    prompts = [f"item {t['paper']}\n0. a\n1. b" for t in records]
+    a = cached.choose(prompts, 2)
+    b = cached.choose(prompts, 3)                     # different key space
+    assert a.shape == b.shape == (6,)
+    assert cached.misses == 12                        # no cross-n_options reuse
+
+
+# ---------------------------------------------------------------------------
+# IR / explain
+# ---------------------------------------------------------------------------
+
+
+def test_plan_columns_propagate_like_eager_schema():
+    left, right, world, *_ = synth.make_join_world(5, 4, seed=20)
+    plan = Join(Filter(Scan(left), "the {abstract} holds"), Scan(right),
+                "the {abstract} reports the {reaction:right}")
+    assert plan.columns() == {"id", "abstract", "right_id", "right_reaction"}
+
+
+def test_explain_reports_costs_and_rewrites():
+    left, right, world, *_ = synth.make_join_world(25, 8, seed=21)
+    synth.add_phrase_predicate(world, left, "is recent", 0.3, seed=21)
+    lz = (_frame(left, world).lazy()
+          .sem_join(right, "the {abstract} reports the {reaction:right}")
+          .sem_filter("the {abstract} is recent"))
+    txt = lz.explain()
+    assert "== logical plan (as written) ==" in txt
+    assert "== optimized plan ==" in txt
+    assert "estimated oracle calls" in txt
+    assert "pushdown_filter" in txt
+
+
+def test_lazy_validates_langex_against_plan_schema():
+    records, world, *_ = synth.make_filter_world(5, seed=22)
+    lz = _frame(records, world).lazy()
+    with pytest.raises(KeyError):
+        lz.sem_filter("the {nope} holds")
+    assert isinstance(lz.sem_filter("the {claim} holds"), LazySemFrame)

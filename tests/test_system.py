@@ -3,7 +3,6 @@
 paper runs on vLLM: batched prefill/decode, logprob proxy scores, cascades,
 vector search), mirroring the paper's applications.
 """
-import numpy as np
 
 from repro.core import accounting
 from repro.core.backends import synth
