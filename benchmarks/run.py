@@ -10,8 +10,8 @@ import time
 
 from benchmarks import (engine_bench, fig6_filter_tradeoff, fig8_groupby,
                         fig9_guarantees, kernels_bench, pipeline_bench,
-                        table2_factcheck, table3_biodex, table5_join_plans,
-                        table6_7_ranking)
+                        serve_bench, table2_factcheck, table3_biodex,
+                        table5_join_plans, table6_7_ranking)
 
 MODULES = {
     "table2": table2_factcheck,
@@ -22,6 +22,7 @@ MODULES = {
     "fig8": fig8_groupby,
     "fig9": fig9_guarantees,
     "pipeline": pipeline_bench,
+    "serve": serve_bench,
     "engine": engine_bench,
     "kernels": kernels_bench,
 }

@@ -1,0 +1,112 @@
+"""Serving-gateway benchmark: N concurrent sessions vs serial execution.
+
+Each session is a filter -> join pipeline over the same corpus; sessions
+share predicate templates (the many-users-one-workload regime), so the
+gateway's cross-query micro-batching + shared semantic cache should answer
+most prompts once.  Reports per-mode throughput, p50/p95 latency, total
+oracle prompts, and the cross-query cache hit rate; verifies the concurrent
+results are record-identical to the serial runs.  Writes ``BENCH_serve.json``.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench
+"""
+import json
+import time
+
+from benchmarks._util import emit
+from repro.core.backends.testing import CountingBackend
+from repro.core.backends import synth
+from repro.core.frame import SemFrame, Session
+
+N_SESSIONS = 8
+N_LEFT, N_RIGHT = 60, 10
+# two templates across 8 sessions -> every template shared by 4 sessions
+FILTERS = ["the {abstract} is checkable", "the {abstract} is recent"]
+JOIN = "the {abstract} reports the {reaction:right}"
+
+
+def _world(seed=0):
+    left, right, world, *_ = synth.make_join_world(N_LEFT, N_RIGHT, seed=seed)
+    synth.add_phrase_predicate(world, left, "is checkable", 0.3, seed=seed)
+    synth.add_phrase_predicate(world, left, "is recent", 0.4, seed=seed)
+    return left, right, world
+
+
+def _session(world, backend):
+    return Session(oracle=backend, embedder=synth.SimulatedEmbedder(world),
+                   sample_size=40)
+
+
+def _pipeline(left, right, session, i):
+    return (SemFrame(left, session).lazy()
+            .sem_filter(FILTERS[i % len(FILTERS)])
+            .sem_join(right, JOIN))
+
+
+def run() -> None:
+    from repro.serve import Gateway
+
+    left, right, world = _world()
+
+    # -- serial: each session alone, fresh per-query cache ----------------
+    serial_backend = CountingBackend(synth.SimulatedModel(world, "oracle"))
+    serial_rows, serial_lat = [], []
+    t0 = time.monotonic()
+    for i in range(N_SESSIONS):
+        t1 = time.monotonic()
+        out = _pipeline(left, right, _session(world, serial_backend), i).collect()
+        serial_lat.append(time.monotonic() - t1)
+        serial_rows.append(out.records)
+    t_serial = time.monotonic() - t0
+    serial_lat.sort()
+    emit("serve/serial", 1e6 * t_serial / N_SESSIONS,
+         oracle_prompts=serial_backend.n_prompts,
+         throughput_rps=round(N_SESSIONS / t_serial, 2),
+         p95_latency_s=round(serial_lat[int(0.95 * (N_SESSIONS - 1))], 4),
+         wall_s=round(t_serial, 3))
+
+    # -- concurrent: all sessions through the gateway ---------------------
+    gw_backend = CountingBackend(synth.SimulatedModel(world, "oracle"))
+    t0 = time.monotonic()
+    with Gateway(_session(world, gw_backend), max_inflight=4,
+                 window_s=0.005, max_batch=256) as gw:
+        handles = [gw.submit(_pipeline(left, right, gw.session, i),
+                             tenant=f"tenant{i % 2}")
+                   for i in range(N_SESSIONS)]
+        rows = [h.result(timeout=300) for h in handles]
+        snap = gw.snapshot()
+    t_conc = time.monotonic() - t0
+    emit("serve/concurrent", 1e6 * t_conc / N_SESSIONS,
+         oracle_prompts=gw_backend.n_prompts,
+         throughput_rps=round(N_SESSIONS / t_conc, 2),
+         p50_latency_s=snap["p50_latency_s"],
+         p95_latency_s=snap["p95_latency_s"],
+         cross_query_hit_rate=round(snap["cross_query_hit_rate"], 3),
+         fused_batches=snap["dispatch"]["fused_batches"],
+         wall_s=round(t_conc, 3))
+
+    identical = rows == serial_rows
+    saved = serial_backend.n_prompts - gw_backend.n_prompts
+    emit("serve/outcome", 0.0, identical_records=identical,
+         oracle_prompts_saved=saved,
+         saved_pct=round(100.0 * saved / max(serial_backend.n_prompts, 1), 1))
+
+    with open("BENCH_serve.json", "w") as fh:
+        json.dump({
+            "sessions": N_SESSIONS,
+            "serial": {"oracle_prompts": serial_backend.n_prompts,
+                       "wall_s": round(t_serial, 4),
+                       "throughput_rps": round(N_SESSIONS / t_serial, 2)},
+            "concurrent": {"oracle_prompts": gw_backend.n_prompts,
+                           "wall_s": round(t_conc, 4),
+                           "gateway": snap},
+            "identical_records": identical,
+            "oracle_prompts_saved": saved,
+        }, fh, indent=2)
+
+    assert identical, "concurrent sessions diverged from serial results"
+    assert saved > 0, "gateway did not save oracle prompts vs serial"
+    assert snap["cross_query_hit_rate"] > 0, "no cross-query sharing happened"
+
+
+if __name__ == "__main__":
+    run()

@@ -2,6 +2,16 @@
 
 Every backend call is routed through the active ``OpStats`` so benchmarks can
 report the paper's '# LM calls' columns exactly.
+
+Two nesting levels:
+
+  * ``track(operator)`` — one OpStats per operator invocation; nested
+    operators roll up into their parent (unchanged single-query behavior).
+  * ``session_scope(name)`` — a long-lived roll-up that accumulates every
+    ``record()`` on this thread across *all* operator blocks, used by the
+    serving gateway to report per-session totals while many sessions run
+    concurrently (accounting state is thread-local, and each serve session
+    executes on one worker thread).
 """
 from __future__ import annotations
 
@@ -33,7 +43,10 @@ class OpStats:
 
     @property
     def lm_calls(self) -> int:
-        return self.oracle_calls + self.proxy_calls + self.compare_calls + self.generate_calls
+        # every LM call is attributed to its wrapping role (oracle/proxy);
+        # compare/generate are kept as per-kind breakdown columns of the same
+        # traffic, so summing them here would double-count
+        return self.oracle_calls + self.proxy_calls
 
     def as_dict(self) -> dict:
         return {
@@ -49,10 +62,17 @@ def current() -> OpStats | None:
     return getattr(_ctx, "stats", None)
 
 
+def current_session() -> OpStats | None:
+    return getattr(_ctx, "session_stats", None)
+
+
 def record(kind: str, n: int) -> None:
     st = current()
     if st is not None:
         st.add(kind, n)
+    sess = current_session()
+    if sess is not None:
+        sess.add(kind, n)
 
 
 @contextlib.contextmanager
@@ -70,3 +90,20 @@ def track(operator: str):
             for kind in OpStats._KINDS:
                 prev.add(kind, getattr(st, "cache_hits" if kind == "cache_hit"
                                        else f"{kind}_calls"))
+
+
+@contextlib.contextmanager
+def session_scope(name: str):
+    """Accumulate every ``record()`` on this thread into one session-level
+    OpStats, across any number of ``track()`` operator blocks.  ``track()``
+    roll-ups bypass ``record()``, so each backend call lands in the session
+    stats exactly once.  Scopes nest by shadowing (innermost wins)."""
+    prev = current_session()
+    st = OpStats(operator=f"session/{name}")
+    _ctx.session_stats = st
+    t0 = time.monotonic()
+    try:
+        yield st
+    finally:
+        st.wall_s = time.monotonic() - t0
+        _ctx.session_stats = prev

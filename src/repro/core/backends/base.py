@@ -38,7 +38,11 @@ class EmbeddingModel(Protocol):
 
 
 class CountedModel:
-    """Wraps a model, attributing calls to the active operator's OpStats."""
+    """Wraps a model, attributing calls to the active operator's OpStats.
+
+    Every call kind is attributed to the wrapping role (oracle/proxy) so
+    role-level counts cover generative ops too; generate/compare additionally
+    keep their per-kind breakdown columns."""
 
     def __init__(self, model, role: str):
         assert role in ("oracle", "proxy")
@@ -50,10 +54,12 @@ class CountedModel:
         return self._m.predicate(prompts)
 
     def generate(self, prompts):
+        accounting.record(self.role, len(prompts))
         accounting.record("generate", len(prompts))
         return self._m.generate(prompts)
 
     def compare(self, prompts):
+        accounting.record(self.role, len(prompts))
         accounting.record("compare", len(prompts))
         return self._m.compare(prompts)
 

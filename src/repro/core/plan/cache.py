@@ -1,12 +1,24 @@
-"""BatchedModelCache: prompt-level dedup + LRU memoization over a model.
+"""BatchedModelCache: prompt-level dedup + memoization over a model.
 
 Layered on ``CountedModel`` so accounting only sees the prompts that actually
 reach the backend: within one batched call, duplicate prompts are coalesced
 to a single backend row; across pipeline stages, previously answered prompts
-are served from the LRU (recorded as ``cache_hits`` in the active OpStats).
+are served from the cache (recorded as ``cache_hits`` in the active OpStats).
 This is what makes a repeated predicate — e.g. a filter re-checked after a
 join, or overlapping cascade sample/mid-region prompts — never pay twice
 inside one optimized pipeline.
+
+Two storage modes:
+
+  * **private** (default): an in-wrapper LRU ``OrderedDict`` bounded by
+    ``capacity`` — the single-query ``LazySemFrame.collect()`` path;
+  * **shared**: pass ``store=`` a ``repro.serve.store.SharedSemanticCache``
+    (or anything with its ``get_many``/``put_many`` protocol) and a
+    ``namespace`` (model role) — the serving-gateway path, where one
+    process-wide store with TTL/eviction/persistence is consulted by every
+    session's wrapper, so a predicate answered by *any* query is a hit for
+    all of them.  ``requester`` tags this wrapper's session for the store's
+    cross-query-hit attribution.
 
 The wrapper is protocol-compatible with ``GenerativeModel``, so every
 operator implementation works against it unchanged.
@@ -22,9 +34,14 @@ from repro.core import accounting
 
 
 class BatchedModelCache:
-    def __init__(self, model, *, capacity: int = 100_000):
+    def __init__(self, model, *, capacity: int = 100_000, store=None,
+                 namespace: str | None = None, requester: str | None = None):
         self._m = model
         self.capacity = capacity
+        self._store = store
+        self._ns = (namespace or getattr(model, "role", "model"),) \
+            if store is not None else ()
+        self._requester = requester
         self._lru: OrderedDict[tuple, object] = OrderedDict()
         self.hits = 0
         self.misses = 0
@@ -34,44 +51,56 @@ class BatchedModelCache:
     def role(self) -> str:  # CountedModel compat (introspection / logging)
         return getattr(self._m, "role", "model")
 
-    def _get(self, key):
-        self._lru.move_to_end(key)
-        return self._lru[key]
+    def _lookup(self, keys: list[tuple]) -> list[tuple]:
+        """-> [(found, row)] per key, from the shared store or the LRU."""
+        if self._store is not None:
+            return self._store.get_many(keys, requester=self._requester)
+        out = []
+        for key in keys:
+            if key in self._lru:
+                self._lru.move_to_end(key)
+                out.append((True, self._lru[key]))
+            else:
+                out.append((False, None))
+        return out
 
-    def _put(self, key, value) -> None:
-        self._lru[key] = value
-        if len(self._lru) > self.capacity:
-            self._lru.popitem(last=False)
+    def _insert(self, keys: list[tuple], rows: list) -> None:
+        if self._store is not None:
+            self._store.put_many(keys, rows, owner=self._requester)
+            return
+        for key, row in zip(keys, rows):
+            self._lru[key] = row
+            if len(self._lru) > self.capacity:
+                self._lru.popitem(last=False)
 
     def _through(self, kind: str, prompts: Sequence[str], call, *,
                  extra_key: tuple = ()):
-        """Dedup ``prompts`` against the LRU and within the batch, answer the
-        misses with one backend ``call``, and reassemble per-prompt rows.
+        """Dedup ``prompts`` against the cache and within the batch, answer
+        the misses with one backend ``call``, and reassemble per-prompt rows.
 
-        Reassembly reads from a batch-local row map, not the LRU: one batch
-        may be larger than the cache capacity, in which case inserting the
-        tail of the batch evicts its own head."""
-        keys = [(kind, *extra_key, p) for p in prompts]
+        Reassembly reads from a batch-local row map, not the backing store:
+        one batch may be larger than the cache capacity, in which case
+        inserting the tail of the batch evicts its own head."""
+        keys = [(*self._ns, kind, *extra_key, p) for p in prompts]
         batch_rows: dict[tuple, object] = {}
-        todo: list[tuple] = []
-        todo_prompts: list[str] = []
+        fresh: list[tuple[tuple, str]] = []
         for key, p in zip(keys, prompts):
-            if key in batch_rows:
-                continue
-            if key in self._lru:
-                batch_rows[key] = self._get(key)
-            else:
+            if key not in batch_rows:
                 batch_rows[key] = None  # placeholder marks in-batch dedup
-                todo.append(key)
-                todo_prompts.append(p)
-        if todo_prompts:
-            rows = call(todo_prompts)
-            for key, row in zip(todo, rows):
+                fresh.append((key, p))
+        found = self._lookup([k for k, _ in fresh])
+        todo = [(k, p) for (k, p), (hit, _) in zip(fresh, found) if not hit]
+        for (k, _), (hit, row) in zip(fresh, found):
+            if hit:
+                batch_rows[k] = row
+        if todo:
+            rows = call([p for _, p in todo])
+            for (key, _), row in zip(todo, rows):
                 batch_rows[key] = row
-                self._put(key, row)
-        n_hit = len(prompts) - len(todo_prompts)
+            self._insert([k for k, _ in todo], list(rows))
+        n_hit = len(prompts) - len(todo)
         self.hits += n_hit
-        self.misses += len(todo_prompts)
+        self.misses += len(todo)
         accounting.record("cache_hit", n_hit)
         return [batch_rows[k] for k in keys]
 

@@ -30,7 +30,8 @@ from repro.core.plan.cache import BatchedModelCache
 
 class PlanExecutor:
     def __init__(self, session, *, stats_log: list | None = None,
-                 use_cache: bool = False, oracle=None, proxy=None):
+                 use_cache: bool = False, oracle=None, proxy=None,
+                 embedder=None, stage_hook=None):
         self.session = session
         self.stats_log = stats_log if stats_log is not None else []
         if oracle is None:
@@ -39,10 +40,19 @@ class PlanExecutor:
             proxy = BatchedModelCache(session.proxy) if use_cache else session.proxy
         self.oracle = oracle
         self.proxy = proxy
+        self.embedder = embedder if embedder is not None else session.embedder
+        # called before every node dispatch — the serving gateway's yield
+        # point for cancellation / deadline checks between pipeline stages
+        self.stage_hook = stage_hook
 
     # -- plumbing ---------------------------------------------------------
     def _log(self, stats: dict) -> dict:
         self.stats_log.append(stats)
+        # every operator logs right after its model work: together with the
+        # descent-time check in run() this yields between pipeline stages,
+        # so a cancellation lands before the *next* stage's model calls
+        if self.stage_hook is not None:
+            self.stage_hook(None)
         return stats
 
     def _targets(self, node) -> dict:
@@ -54,6 +64,8 @@ class PlanExecutor:
             sample_size=s.sample_size, seed=s.seed)
 
     def run(self, node: N.LogicalNode) -> list[dict]:
+        if self.stage_hook is not None:
+            self.stage_hook(node)
         fn = getattr(self, f"_run_{type(node).__name__.lower()}")
         return fn(node)
 
@@ -79,10 +91,10 @@ class PlanExecutor:
         left = self.run(node.left)
         right = self.run(node.right)
         if node.is_cascade:
-            if self.session.embedder is None:
+            if self.embedder is None:
                 raise ValueError("optimized sem_join needs an embedder in the Session")
             mask, stats = _join.sem_join_cascade(
-                left, right, node.langex, self.oracle, self.session.embedder,
+                left, right, node.langex, self.oracle, self.embedder,
                 project_fn=node.project_fn, force_plan=node.force_plan,
                 **self._targets(node))
         elif node.prefilter_k:
@@ -104,7 +116,7 @@ class PlanExecutor:
         (the optimizer-injected sem_sim_join prefilter; trades a recall tail
         for an n1*k instead of n1*n2 oracle bill)."""
         lx = node.langex
-        emb = self.session.embedder
+        emb = self.embedder
         with accounting.track("sem_join_prefiltered") as st:
             n1, n2 = len(left), len(right)
             k = min(node.prefilter_k, n2)
@@ -137,10 +149,10 @@ class PlanExecutor:
 
         s = self.session
         pivot_scores = None
-        if node.pivot_query is not None and s.embedder is not None:
+        if node.pivot_query is not None and self.embedder is not None:
             texts = [node.langex.render(t) for t in recs]
-            emb = s.embedder.embed(texts)
-            qv = s.embedder.embed([node.pivot_query])[0]
+            emb = self.embedder.embed(texts)
+            qv = self.embedder.embed([node.pivot_query])[0]
             pivot_scores = emb @ qv
         fn = {"quickselect": _topk.sem_topk_quickselect,
               "quadratic": _topk.sem_topk_quadratic,
@@ -178,14 +190,14 @@ class PlanExecutor:
     def _run_groupby(self, node: N.GroupBy) -> list[dict]:
         recs = self.run(node.child)
         s = self.session
-        if s.embedder is None:
+        if self.embedder is None:
             raise ValueError("sem_group_by needs an embedder in the Session")
         if node.accuracy_target is None:
             res = _groupby.sem_group_by_gold(recs, node.langex, node.C,
-                                             self.oracle, s.embedder, seed=s.seed)
+                                             self.oracle, self.embedder, seed=s.seed)
         else:
             res = _groupby.sem_group_by_cascade(
-                recs, node.langex, node.C, self.oracle, s.embedder,
+                recs, node.langex, node.C, self.oracle, self.embedder,
                 accuracy_target=node.accuracy_target,
                 delta=node.delta if node.delta is not None else s.default_delta,
                 sample_size=s.sample_size, seed=s.seed)
@@ -217,11 +229,10 @@ class PlanExecutor:
     # -- similarity family -------------------------------------------------
     def _run_search(self, node: N.Search) -> list[dict]:
         recs = self.run(node.child)
-        s = self.session
         index = node.index or _search.sem_index(
-            [str(t[node.column]) for t in recs], s.embedder)
+            [str(t[node.column]) for t in recs], self.embedder)
         hits, stats = _search.sem_search(
-            index, node.query, s.embedder, k=node.k, n_rerank=node.n_rerank,
+            index, node.query, self.embedder, k=node.k, n_rerank=node.n_rerank,
             rerank_model=self.oracle if node.n_rerank else None,
             records=recs, rerank_langex=node.rerank_langex)
         self._log(stats)
@@ -230,10 +241,10 @@ class PlanExecutor:
     def _run_simjoin(self, node: N.SimJoin) -> list[dict]:
         left = self.run(node.left)
         right = self.run(node.right)
-        s = self.session
-        index = _search.sem_index([str(t[node.right_col]) for t in right], s.embedder)
+        index = _search.sem_index([str(t[node.right_col]) for t in right],
+                                  self.embedder)
         scores, idx, stats = _search.sem_sim_join(
-            [str(t[node.left_col]) for t in left], index, s.embedder, k=node.k)
+            [str(t[node.left_col]) for t in left], index, self.embedder, k=node.k)
         self._log(stats)
         out = []
         for i, t in enumerate(left):

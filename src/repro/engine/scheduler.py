@@ -69,19 +69,30 @@ class ContinuousBatchScheduler:
                 return i
         return None
 
+    def _requeue_or_fail(self, req: Request) -> None:
+        """Single failure path for prefill faults, decode faults, and blown
+        deadlines: reset all runtime state (stale out_tokens would corrupt a
+        retried sequence, a stale started_at its deadline clock) and re-queue
+        within the retry budget, else surface the request as failed."""
+        req.retries += 1
+        req.out_tokens = []
+        req.first_logits = None
+        req.started_at = None
+        if req.retries <= self.max_retries:
+            req.failed = req.done = False
+            self.queue.append(req)       # re-dispatch (straggler mitigation)
+        else:
+            req.failed, req.done = True, False
+            self.finished.append(req)
+
     def _finish(self, slot: int, *, failed: bool = False) -> None:
         req = self.slot_req[slot]
         assert req is not None
-        req.done = not failed
-        req.failed = failed
         self.slot_req[slot] = None
-        if failed and req.retries < self.max_retries:
-            req.retries += 1
-            req.failed = req.done = False
-            req.out_tokens = []
-            req.started_at = None
-            self.queue.append(req)       # re-dispatch (straggler mitigation)
+        if failed:
+            self._requeue_or_fail(req)
         else:
+            req.done, req.failed = True, False
             self.finished.append(req)
 
     def _check_deadlines(self) -> None:
@@ -104,12 +115,7 @@ class ContinuousBatchScheduler:
                 self.fault_hook()
                 logits = self.runner.prefill_into_slot(req.tokens, slot, extra=req.extra)
             except RuntimeError:
-                req.retries += 1
-                if req.retries <= self.max_retries:
-                    self.queue.append(req)
-                else:
-                    req.failed = True
-                    self.finished.append(req)
+                self._requeue_or_fail(req)
                 return True
             self.prefill_steps += 1
             req.first_logits = logits

@@ -1,0 +1,40 @@
+"""Concurrent semantic-query serving layer (the system half of the paper).
+
+PR 1 made one pipeline cheap (plan IR + optimizer + batched executor); this
+package makes *many concurrent* pipelines cheap by sharing work across them:
+
+  * ``store``    — :class:`SharedSemanticCache`, the process-wide semantic
+                   answer store (TTL, LRU capacity, per-role namespaces,
+                   optional JSON-lines persistence across runs);
+  * ``dispatch`` — :class:`MicroBatchDispatcher`, cross-query micro-batching:
+                   oracle/proxy/embed calls from all in-flight executors are
+                   coalesced (deduplicated) into fused backend batches on a
+                   short time/size window;
+  * ``session``  — :class:`ServeSession`, the future-style handle with
+                   deadlines, cooperative cancellation, and per-session
+                   OpStats roll-ups;
+  * ``gateway``  — :class:`Gateway`, multi-tenant admission (bounded queue,
+                   FIFO-with-fairness) plus the worker pool that executes
+                   plans through the shared runtime;
+  * ``metrics``  — gateway-level throughput / latency tails / cross-query
+                   cache hit rate.
+
+    gw = Gateway(session, max_inflight=4, cache_ttl_s=600)
+    handles = [gw.submit(sf.lazy().sem_filter(...)) for sf in frames]
+    rows = [h.result() for h in handles]
+    print(gw.snapshot())
+"""
+from repro.serve.dispatch import (DispatchedEmbedder, DispatchedModel,
+                                  DispatchError, MicroBatchDispatcher)
+from repro.serve.gateway import AdmissionError, Gateway
+from repro.serve.metrics import GatewayMetrics
+from repro.serve.session import (ServeSession, SessionCancelled,
+                                 SessionDeadlineExceeded)
+from repro.serve.store import SharedSemanticCache
+
+__all__ = [
+    "AdmissionError", "DispatchError", "DispatchedEmbedder",
+    "DispatchedModel", "Gateway", "GatewayMetrics", "MicroBatchDispatcher",
+    "ServeSession", "SessionCancelled", "SessionDeadlineExceeded",
+    "SharedSemanticCache",
+]

@@ -1,0 +1,240 @@
+"""Gateway: multi-tenant admission + scheduling for concurrent semantic
+pipelines over one shared runtime.
+
+``submit()`` turns a lazy pipeline (``LazySemFrame`` or a raw plan node)
+into a :class:`ServeSession` and parks it in the admission queue — FIFO
+within a tenant, round-robin across tenants, so one chatty tenant cannot
+starve the rest.  ``max_inflight`` worker threads pull sessions and execute
+their plans through :class:`PlanExecutor` with three serving-specific
+handles injected:
+
+  * oracle/proxy: ``BatchedModelCache`` (per-session dedup, counted consult
+    of the shared store) over ``DispatchedModel`` (cross-query micro-batch
+    fusion in the :class:`MicroBatchDispatcher`);
+  * embedder: ``DispatchedEmbedder`` (fused + store-backed, memory-only);
+  * ``stage_hook``: the session's cancellation/deadline check, honored at
+    every plan-node boundary.
+
+A bounded queue (``max_pending``) sheds load with :class:`AdmissionError`
+instead of building unbounded backlog; per-session accounting rolls up via
+``accounting.session_scope`` so each session reports its own OpStats even
+though backend calls are fused across sessions.
+"""
+from __future__ import annotations
+
+import threading
+import time
+import uuid
+from collections import deque
+
+from repro.core import accounting
+from repro.core.plan.cache import BatchedModelCache
+from repro.core.plan.execute import PlanExecutor
+from repro.core.plan.nodes import LogicalNode
+from repro.core.plan.optimize import PlanOptimizer
+from repro.serve.dispatch import (DispatchedEmbedder, DispatchedModel,
+                                  MicroBatchDispatcher)
+from repro.serve.metrics import GatewayMetrics
+from repro.serve.session import (CANCELLED, DONE, EXPIRED, FAILED, RUNNING,
+                                 ServeSession, SessionCancelled,
+                                 SessionDeadlineExceeded)
+from repro.serve.store import SharedSemanticCache
+
+
+class AdmissionError(RuntimeError):
+    """The gateway's pending queue is full; retry later or shed the query."""
+
+
+def _raw(model):
+    """Unwrap Session's Counted* layers: dispatched handles do their own
+    per-session attribution, so the backend must not double-count."""
+    return getattr(model, "_m", getattr(model, "_e", model))
+
+
+class Gateway:
+    def __init__(self, session, *, max_inflight: int = 4,
+                 max_pending: int = 64, window_s: float = 0.002,
+                 max_batch: int = 64, store: SharedSemanticCache | None = None,
+                 cache_capacity: int = 100_000, cache_ttl_s: float | None = None,
+                 persist_path: str | None = None,
+                 optimizer_kw: dict | None = None,
+                 history_limit: int = 1024):
+        self.session = session
+        self.store = store if store is not None else SharedSemanticCache(
+            capacity=cache_capacity, ttl_s=cache_ttl_s,
+            persist_path=persist_path)
+        self.dispatcher = MicroBatchDispatcher(
+            oracle=_raw(session.oracle),
+            proxy=_raw(session.proxy) if session.proxy is not None else None,
+            embedder=_raw(session.embedder)
+            if session.embedder is not None else None,
+            store=self.store, window_s=window_s, max_batch=max_batch)
+        self.metrics = GatewayMetrics()
+        self.max_pending = max_pending
+        self.optimizer_kw = optimizer_kw or {}
+        self._cv = threading.Condition()
+        self._queues: dict[str, deque[ServeSession]] = {}
+        self._tenants: list[str] = []
+        self._rr = 0
+        self._closed = False
+        self._counter = 0
+        # session ids must be unique across gateway instances AND runs:
+        # the shared/persistent store attributes entry ownership by sid, so
+        # a colliding id would hide genuine cross-run cache sharing
+        self._gid = uuid.uuid4().hex[:6]
+        # resolved sessions age out of this ring so a long-lived gateway
+        # doesn't pin every result set ever produced; callers keep their own
+        # handles, and wait_all() tracks only unresolved sessions
+        self.sessions: deque[ServeSession] = deque(maxlen=history_limit)
+        self._unresolved: dict[str, ServeSession] = {}
+        self._workers = [threading.Thread(target=self._worker, daemon=True,
+                                          name=f"gateway-worker-{i}")
+                         for i in range(max_inflight)]
+        for w in self._workers:
+            w.start()
+
+    # -- admission ---------------------------------------------------------
+    def submit(self, pipeline, *, tenant: str = "default",
+               optimize: bool = True, deadline_s: float | None = None,
+               session_id: str | None = None) -> ServeSession:
+        plan = pipeline.plan if hasattr(pipeline, "plan") else pipeline
+        if not isinstance(plan, LogicalNode):
+            raise TypeError("submit() takes a LazySemFrame or a plan node, "
+                            f"got {type(pipeline).__name__}")
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("gateway is closed")
+            pending = sum(len(q) for q in self._queues.values())
+            if pending >= self.max_pending:
+                self.metrics.on_reject()
+                raise AdmissionError(
+                    f"gateway queue full ({pending}/{self.max_pending} pending)")
+            self._counter += 1
+            sess = ServeSession(
+                sid=session_id or f"{self._gid}-s{self._counter:04d}", plan=plan,
+                tenant=tenant, optimize=optimize, deadline_s=deadline_s)
+            self._queues.setdefault(tenant, deque()).append(sess)
+            if tenant not in self._tenants:
+                self._tenants.append(tenant)
+            self.sessions.append(sess)
+            self._unresolved[sess.sid] = sess
+            self.metrics.on_submit()
+            self._cv.notify()
+        return sess
+
+    # -- scheduling --------------------------------------------------------
+    def _pop_next(self) -> ServeSession | None:
+        """Round-robin across tenants, FIFO within each (lock held)."""
+        n = len(self._tenants)
+        for i in range(n):
+            tenant = self._tenants[(self._rr + i) % n]
+            q = self._queues[tenant]
+            if q:
+                self._rr = (self._rr + i + 1) % n
+                return q.popleft()
+        return None
+
+    def _worker(self) -> None:
+        while True:
+            with self._cv:
+                sess = self._pop_next()
+                while sess is None and not self._closed:
+                    self._cv.wait()
+                    sess = self._pop_next()
+                if sess is None:
+                    return
+            self._run(sess)
+
+    # -- execution ---------------------------------------------------------
+    def _handles(self, sid: str):
+        oracle = BatchedModelCache(
+            DispatchedModel(self.dispatcher, "oracle", tag=sid),
+            store=self.store, namespace="oracle", requester=sid)
+        proxy = None
+        if self.session.proxy is not None:
+            proxy = BatchedModelCache(
+                DispatchedModel(self.dispatcher, "proxy", tag=sid),
+                store=self.store, namespace="proxy", requester=sid)
+        embedder = None
+        if self.session.embedder is not None:
+            embedder = DispatchedEmbedder(self.dispatcher, tag=sid)
+        return oracle, proxy, embedder
+
+    def _resolve(self, sess: ServeSession, status: str, *,
+                 records: list | None = None,
+                 error: BaseException | None = None) -> None:
+        sess.finish(status, records=records, error=error)
+        self.metrics.on_finish(status, sess.latency_s,
+                               len(records) if records is not None else None)
+        with self._cv:
+            self._unresolved.pop(sess.sid, None)
+
+    def _run(self, sess: ServeSession) -> None:
+        try:
+            sess.check()                 # cancelled / expired while queued
+        except SessionCancelled as exc:
+            self._resolve(sess, CANCELLED, error=exc)
+            return
+        except SessionDeadlineExceeded as exc:
+            self._resolve(sess, EXPIRED, error=exc)
+            return
+        sess.status = RUNNING
+        sess.started_at = time.monotonic()
+        oracle, proxy, embedder = self._handles(sess.sid)
+        executor = PlanExecutor(
+            self.session, stats_log=sess.stats_log, oracle=oracle,
+            proxy=proxy, embedder=embedder,
+            stage_hook=lambda node: sess.check())
+        try:
+            with accounting.session_scope(sess.sid) as st:
+                sess.stats = st
+                plan = sess.plan
+                if sess.optimize:
+                    optimizer = PlanOptimizer(
+                        self.session, oracle=oracle, proxy=proxy,
+                        seed=self.session.seed, **self.optimizer_kw)
+                    with accounting.track("plan_optimize") as opt_st:
+                        plan = optimizer.optimize(plan)
+                    opt_st.details.update(
+                        rewrites=[str(r) for r in optimizer.applied])
+                    sess.stats_log.append(opt_st.as_dict())
+                records = executor.run(plan)
+            self._resolve(sess, DONE, records=records)
+        except SessionCancelled as exc:
+            self._resolve(sess, CANCELLED, error=exc)
+        except SessionDeadlineExceeded as exc:
+            self._resolve(sess, EXPIRED, error=exc)
+        except BaseException as exc:
+            self._resolve(sess, FAILED, error=exc)
+
+    # -- lifecycle ---------------------------------------------------------
+    def wait_all(self, timeout: float | None = None) -> bool:
+        """Block until every outstanding session has resolved."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            outstanding = list(self._unresolved.values())
+        for sess in outstanding:
+            left = None if deadline is None else \
+                max(deadline - time.monotonic(), 0.0)
+            if not sess.wait(left):
+                return False
+        return True
+
+    def snapshot(self) -> dict:
+        return self.metrics.snapshot(store=self.store,
+                                     dispatcher=self.dispatcher)
+
+    def close(self) -> None:
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        for w in self._workers:
+            w.join(timeout=10.0)
+        self.dispatcher.close()
+        self.store.close()
+
+    def __enter__(self) -> "Gateway":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,0 +1,88 @@
+"""Gateway-level serving metrics: throughput, latency tails, cache sharing.
+
+One ``GatewayMetrics`` per gateway, fed by the worker threads as sessions
+resolve; ``snapshot()`` folds in the shared store's and dispatcher's own
+counters to report the serving headline numbers — sessions/s, p50/p95
+end-to-end latency, and the cross-query cache hit rate (the fraction of all
+prompt lookups answered by another session's work, in-window or from the
+shared store).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+
+import numpy as np
+
+
+class GatewayMetrics:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.started_at = time.monotonic()
+        self.submitted = 0
+        self.completed = 0
+        self.failed = 0
+        self.cancelled = 0
+        self.expired = 0
+        self.rejected = 0
+        self.rows_out = 0
+        # percentiles are computed over a sliding window so a long-lived
+        # gateway's metrics stay O(1) in memory
+        self.latencies: deque[float] = deque(maxlen=4096)
+
+    def on_submit(self) -> None:
+        with self._lock:
+            self.submitted += 1
+
+    def on_reject(self) -> None:
+        with self._lock:
+            self.rejected += 1
+
+    def on_finish(self, status: str, latency_s: float | None,
+                  n_rows: int | None) -> None:
+        with self._lock:
+            if status == "done":
+                self.completed += 1
+                self.rows_out += n_rows or 0
+            elif status == "cancelled":
+                self.cancelled += 1
+            elif status == "expired":
+                self.expired += 1
+            else:
+                self.failed += 1
+            if latency_s is not None:
+                self.latencies.append(latency_s)
+
+    def snapshot(self, *, store=None, dispatcher=None) -> dict:
+        with self._lock:
+            elapsed = max(time.monotonic() - self.started_at, 1e-9)
+            lat = np.asarray(self.latencies, float)
+            out = {
+                "submitted": self.submitted, "completed": self.completed,
+                "failed": self.failed, "cancelled": self.cancelled,
+                "expired": self.expired, "rejected": self.rejected,
+                "rows_out": self.rows_out,
+                "elapsed_s": round(elapsed, 4),
+                "throughput_rps": round(self.completed / elapsed, 4),
+                "p50_latency_s": round(float(np.percentile(lat, 50)), 4)
+                if lat.size else None,
+                "p95_latency_s": round(float(np.percentile(lat, 95)), 4)
+                if lat.size else None,
+            }
+        if store is not None:
+            out["cache"] = store.stats()
+        if dispatcher is not None:
+            out["dispatch"] = dispatcher.stats()
+        if store is not None and dispatcher is not None:
+            # cross-query sharing happens two ways: a hit on a store entry
+            # another session wrote, or an in-window dupe fused by the
+            # dispatcher; both are prompts this query never paid for
+            cache, disp = out["cache"], out["dispatch"]
+            total = cache["hits"] + cache["misses"]
+            out["cross_query_hit_rate"] = (
+                (cache["cross_hits"] + disp["cross_shared"]) / total
+                if total else 0.0)
+        elif store is not None:
+            out["cross_query_hit_rate"] = out["cache"]["cross_query_hit_rate"]
+        return out

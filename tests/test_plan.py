@@ -181,12 +181,36 @@ def test_batched_cache_dedups_repeated_prompts():
 
 
 def test_batched_cache_survives_batch_larger_than_capacity():
+    """Self-eviction reassembly: inserting the tail of an over-capacity batch
+    evicts its head from the LRU, but the per-prompt rows must still come
+    back correct and in order (reassembly reads the batch-local map)."""
     records, world, *_ = synth.make_filter_world(8, seed=23)
     cached = BatchedModelCache(
         CountedModel(synth.SimulatedModel(world, "oracle"), "oracle"), capacity=3)
     prompts = [f"the {t['claim']} holds" for t in records]
     out = cached.generate(prompts)                    # batch (8) > capacity (3)
     assert len(out) == 8 and all(isinstance(x, str) for x in out)
+    assert out == synth.SimulatedModel(world, "oracle").generate(prompts)
+    passed, _ = cached.predicate(prompts)
+    direct, _ = synth.SimulatedModel(world, "oracle").predicate(prompts)
+    np.testing.assert_array_equal(passed, direct)
+
+
+def test_batched_cache_lru_eviction_order():
+    records, world, *_ = synth.make_filter_world(3, seed=26)
+    cached = BatchedModelCache(
+        CountedModel(synth.SimulatedModel(world, "oracle"), "oracle"), capacity=2)
+    pa, pb, pc = [f"the {t['claim']} holds" for t in records]
+    cached.predicate([pa])
+    cached.predicate([pb])
+    cached.predicate([pa])                            # refresh a; b is now LRU
+    cached.predicate([pc])                            # evicts b, not a
+    with accounting.track("probe") as st:
+        cached.predicate([pa, pc])                    # both still cached
+    assert st.oracle_calls == 0 and st.cache_hits == 2
+    with accounting.track("probe2") as st2:
+        cached.predicate([pb])                        # b was evicted
+    assert st2.oracle_calls == 1 and st2.cache_hits == 0
 
 
 def test_filter_reorder_uses_proxy_proposal_when_available():
