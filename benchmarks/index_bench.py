@@ -1,0 +1,131 @@
+"""Retrieval-layer benchmark: exact scan vs IVF-pruned ANN at a fixed
+recall target, plus the degenerate exactness contract and cross-session
+index sharing.
+
+Three sections:
+
+  * 50k-row clustered corpus, 64 queries: IVF (cost-model nprobe at
+    recall_target=0.95, per-query probing) must score >= 5x fewer corpus
+    vectors than exact while holding recall@10 >= 0.95 vs the exact top-10;
+  * degenerate setting (nprobe = all clusters, 2k rows): top-k must be
+    *identical* to exact;
+  * two concurrent gateway sessions over one corpus: IndexRegistry metrics
+    must show exactly one index build.
+
+Writes ``BENCH_index.json``.
+
+    PYTHONPATH=src python -m benchmarks.index_bench
+"""
+import json
+import time
+
+import numpy as np
+
+from benchmarks._util import emit
+from repro.core.backends import synth
+from repro.core.frame import SemFrame, Session
+from repro.index import IVFIndex, VectorIndex, retrieval_costs
+
+N_CORPUS = 50_000
+N_QUERIES = 64
+K = 10
+RECALL_TARGET = 0.95
+MIN_PRUNE_FACTOR = 5.0
+
+
+def _clustered(n, d=32, n_centers=64, noise=0.18, seed=0):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(n_centers, d))
+    centers /= np.linalg.norm(centers, axis=1, keepdims=True)
+    lab = rng.integers(n_centers, size=n)
+    x = centers[lab] + noise * rng.normal(size=(n, d))
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    return np.asarray(x, np.float32), centers
+
+
+def run() -> None:
+    corpus, centers = _clustered(N_CORPUS)
+    rng = np.random.default_rng(99)
+    queries = centers[rng.integers(len(centers), size=N_QUERIES)] \
+        + 0.18 * rng.normal(size=(N_QUERIES, 32))
+    queries = np.asarray(queries, np.float32)
+
+    # -- exact baseline ----------------------------------------------------
+    exact = VectorIndex(corpus)
+    t0 = time.monotonic()
+    _, exact_idx = exact.search(queries, K)
+    t_exact = time.monotonic() - t0
+    exact_scored = exact.last_stats["scored_vectors"]
+    emit("index/exact", 1e6 * t_exact / N_QUERIES,
+         scored_vectors=exact_scored, wall_s=round(t_exact, 3))
+
+    # -- IVF at the recall target (cost-model nprobe, per-query probing) ---
+    costs = retrieval_costs(N_CORPUS, N_QUERIES, recall_target=RECALL_TARGET,
+                            shared=True)  # serving regime: registry-amortized
+    t0 = time.monotonic()
+    ivf = IVFIndex(corpus, recall_target=RECALL_TARGET, block_q=1, seed=7)
+    t_build = time.monotonic() - t0
+    t0 = time.monotonic()
+    _, ivf_idx = ivf.search(queries, K)
+    t_ivf = time.monotonic() - t0
+    st = ivf.last_stats
+    recall = float(np.mean([len(set(exact_idx[i]) & set(ivf_idx[i])) / K
+                            for i in range(N_QUERIES)]))
+    prune = exact_scored / max(st["scored_vectors"], 1)
+    emit("index/ivf", 1e6 * t_ivf / N_QUERIES,
+         scored_vectors=st["scored_vectors"],
+         prune_factor=round(prune, 1), recall_at_10=round(recall, 4),
+         nprobe=st["nprobe"], n_clusters=st["n_clusters"],
+         build_s=round(t_build, 3), wall_s=round(t_ivf, 3),
+         est_cost_exact=int(costs["exact"]), est_cost_ivf=int(costs["ivf"]))
+
+    # -- degenerate: nprobe = all clusters -> identical to exact -----------
+    small, _ = _clustered(2000, seed=3)
+    sq = np.asarray(small[::311][:8] + 0.01, np.float32)
+    _, de = VectorIndex(small).search(sq, K)
+    deg = IVFIndex(small, n_clusters=32, seed=3)
+    _, dv = deg.search(sq, K, nprobe=deg.n_clusters)
+    degenerate_identical = bool(np.array_equal(de, dv))
+    emit("index/degenerate", 0.0, identical_topk=degenerate_identical)
+
+    # -- cross-session sharing: 2 concurrent sessions, 1 build -------------
+    from repro.serve import Gateway
+    records, world, *_ = synth.make_filter_world(300, seed=21)
+    sess = Session(oracle=synth.SimulatedModel(world, "oracle"),
+                   embedder=synth.SimulatedEmbedder(world))
+    sf = SemFrame(records, sess)
+    with Gateway(sess, max_inflight=2) as gw:
+        handles = [gw.submit(sf.lazy().sem_search("claim", f"claim text {i}",
+                                                  k=3), tenant=f"t{i}")
+                   for i in range(2)]
+        for h in handles:
+            h.result(timeout=300)
+        snap = gw.snapshot()
+    emit("index/registry", 0.0, index_builds=snap["index_builds"],
+         index_hits=snap["index_hits"])
+
+    with open("BENCH_index.json", "w") as fh:
+        json.dump({
+            "corpus": N_CORPUS, "queries": N_QUERIES, "k": K,
+            "recall_target": RECALL_TARGET,
+            "exact": {"scored_vectors": exact_scored,
+                      "wall_s": round(t_exact, 4)},
+            "ivf": {**st, "recall_at_10": round(recall, 4),
+                    "prune_factor": round(prune, 2),
+                    "build_s": round(t_build, 4), "wall_s": round(t_ivf, 4)},
+            "degenerate_identical": degenerate_identical,
+            "registry": {"index_builds": snap["index_builds"],
+                         "index_hits": snap["index_hits"]},
+        }, fh, indent=2)
+
+    assert recall >= RECALL_TARGET, \
+        f"IVF recall@{K} {recall:.3f} below target {RECALL_TARGET}"
+    assert prune >= MIN_PRUNE_FACTOR, \
+        f"IVF scored only {prune:.1f}x fewer vectors (need >={MIN_PRUNE_FACTOR}x)"
+    assert degenerate_identical, "nprobe=all did not reproduce exact top-k"
+    assert snap["index_builds"] == 1, \
+        f"expected exactly one shared index build, got {snap['index_builds']}"
+
+
+if __name__ == "__main__":
+    run()

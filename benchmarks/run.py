@@ -9,9 +9,9 @@ import sys
 import time
 
 from benchmarks import (engine_bench, fig6_filter_tradeoff, fig8_groupby,
-                        fig9_guarantees, kernels_bench, pipeline_bench,
-                        serve_bench, table2_factcheck, table3_biodex,
-                        table5_join_plans, table6_7_ranking)
+                        fig9_guarantees, index_bench, kernels_bench,
+                        pipeline_bench, serve_bench, table2_factcheck,
+                        table3_biodex, table5_join_plans, table6_7_ranking)
 
 MODULES = {
     "table2": table2_factcheck,
@@ -23,6 +23,7 @@ MODULES = {
     "fig9": fig9_guarantees,
     "pipeline": pipeline_bench,
     "serve": serve_bench,
+    "index": index_bench,
     "engine": engine_bench,
     "kernels": kernels_bench,
 }

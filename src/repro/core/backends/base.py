@@ -76,6 +76,12 @@ class CountedEmbedder:
     def dim(self):
         return self._e.dim
 
+    @property
+    def index_key(self):
+        """Identity of the backend model (index-registry sharing key)."""
+        from repro.index.backend import embedder_key
+        return embedder_key(self._e)
+
     def embed(self, texts):
         accounting.record("embed", len(texts))
         return self._e.embed(texts)

@@ -153,20 +153,32 @@ class SemFrame:
         return self._child(self._execute(node))
 
     # -- similarity family --------------------------------------------------
-    def sem_index(self, column: str, *, path: str | None = None):
+    def sem_index(self, column: str, *, path: str | None = None,
+                  index: str = "exact", **index_kw):
+        """Build a retrieval index over a column ("exact" | "ivf" | "auto");
+        ``index_kw`` (n_clusters, nprobe, recall_target, ...) tunes IVF."""
         return _search.sem_index([str(t[column]) for t in self.records],
-                                 self.session.embedder, path=path)
+                                 self.session.embedder, path=path,
+                                 index=index, **index_kw)
 
     def sem_search(self, column: str, query: str, *, k: int = 10,
-                   n_rerank: int = 0, rerank_langex=None, index=None) -> "SemFrame":
+                   n_rerank: int = 0, rerank_langex=None, index=None,
+                   index_kind: str = "exact", nprobe: int | None = None
+                   ) -> "SemFrame":
+        """Eager search defaults to the exact index (classic semantics);
+        pass ``index_kind="ivf"`` (or "auto") to opt into ANN retrieval.
+        The lazy path's optimizer makes that choice cost-based instead."""
         node = PN.Search(self._scan(), column, query, k=k, n_rerank=n_rerank,
-                         rerank_langex=rerank_langex, index=index)
+                         rerank_langex=rerank_langex, index=index,
+                         index_kind=index_kind, nprobe=nprobe)
         return self._child(self._execute(node))
 
     def sem_sim_join(self, other: "SemFrame | Sequence[dict]", left_col: str,
-                     right_col: str, *, k: int = 1) -> "SemFrame":
+                     right_col: str, *, k: int = 1, index_kind: str = "exact",
+                     nprobe: int | None = None) -> "SemFrame":
         right = other.records if isinstance(other, SemFrame) else list(other)
-        node = PN.SimJoin(self._scan(), PN.Scan(right), left_col, right_col, k=k)
+        node = PN.SimJoin(self._scan(), PN.Scan(right), left_col, right_col,
+                          k=k, index_kind=index_kind, nprobe=nprobe)
         return self._child(self._execute(node))
 
 
@@ -254,16 +266,20 @@ class LazySemFrame:
                                       out_column=out_column))
 
     def sem_search(self, column: str, query: str, *, k: int = 10,
-                   n_rerank: int = 0, rerank_langex=None,
-                   index=None) -> "LazySemFrame":
+                   n_rerank: int = 0, rerank_langex=None, index=None,
+                   index_kind: str = "auto", nprobe: int | None = None
+                   ) -> "LazySemFrame":
         return self._child(PN.Search(self.plan, column, query, k=k,
                                      n_rerank=n_rerank,
-                                     rerank_langex=rerank_langex, index=index))
+                                     rerank_langex=rerank_langex, index=index,
+                                     index_kind=index_kind, nprobe=nprobe))
 
     def sem_sim_join(self, other, left_col: str, right_col: str, *,
-                     k: int = 1) -> "LazySemFrame":
+                     k: int = 1, index_kind: str = "auto",
+                     nprobe: int | None = None) -> "LazySemFrame":
         return self._child(PN.SimJoin(self.plan, self._right_plan(other),
-                                      left_col, right_col, k=k))
+                                      left_col, right_col, k=k,
+                                      index_kind=index_kind, nprobe=nprobe))
 
     # -- optimize / execute ------------------------------------------------
     def _optimizer_and_executor(self, **opt_kw):
@@ -273,8 +289,12 @@ class LazySemFrame:
         key = tuple(sorted(opt_kw.items()))
         if self._exec_pair is not None and self._exec_pair[0] == key:
             return self._exec_pair[1], self._exec_pair[2]
+        # the executor's "auto" index builds (join sim-prefilter) must obey
+        # the same retrieval knobs the optimizer plans with
+        exec_kw = {k: opt_kw[k] for k in ("recall_target", "index_min_corpus")
+                   if k in opt_kw}
         executor = PlanExecutor(self.session, stats_log=self.stats_log,
-                                use_cache=True)
+                                use_cache=True, **exec_kw)
         optimizer = PlanOptimizer(self.session, oracle=executor.oracle,
                                   proxy=executor.proxy,
                                   seed=self.session.seed, **opt_kw)

@@ -22,6 +22,7 @@ from repro.core.langex import as_langex
 from repro.core.operators.agg import sem_agg_hierarchical
 from repro.core.optimizer import stats
 from repro.index.kmeans import kmeans
+from repro.index.vector_index import VectorIndex
 
 MAP_LABEL_INSTRUCTION = ("Task: produce a short category label for: {item}\n"
                          "Criteria: {criteria}\nLabel:")
@@ -37,25 +38,30 @@ class GroupByResult:
 
 
 def _discover(records, lx, model, embedder, C, *, label_sample: int, seed: int):
-    """Stage 1: candidate labels -> embed -> kmeans -> label each cluster."""
+    """Stage 1: candidate labels -> embed -> kmeans -> label each cluster.
+
+    -> (cand_labels [N], center_sims [N, C], group_labels [C])."""
     cand_prompts = [MAP_LABEL_INSTRUCTION.format(item=lx.render(t), criteria=lx.template)
                     for t in records]
     cand_labels = model.generate(cand_prompts)
     emb = embedder.embed(list(cand_labels))
     centers, assign = kmeans(emb, C, seed=seed)
+    # center scoring rides the retrieval layer (the exact backend over the
+    # C discovered centers) so the similarity math matches search/sim_join;
+    # the same [N, C] matrix doubles as the cascade's proxy scores
+    center_sims = VectorIndex(centers).pairwise(emb)
     group_labels: list[str] = []
     for j in range(len(centers)):
         members = np.flatnonzero(assign == j)
         if len(members) == 0:
             group_labels.append(f"group-{j}")
             continue
-        sims = emb[members] @ centers[j]
-        top = members[np.argsort(-sims)[:label_sample]]
+        top = members[np.argsort(-center_sims[members, j])[:label_sample]]
         label, _ = sem_agg_hierarchical(
             [{"label": cand_labels[i]} for i in top],
             "a short category label capturing all of: {label}", model)
         group_labels.append(label)
-    return cand_labels, emb, centers, group_labels
+    return cand_labels, center_sims, group_labels
 
 
 def _oracle_classify(records, lx, model, group_labels, indices) -> np.ndarray:
@@ -70,8 +76,8 @@ def sem_group_by_gold(records, langex, C, model, embedder, *,
                       label_sample: int = 8, seed: int = 0) -> GroupByResult:
     lx = as_langex(langex)
     with accounting.track("sem_group_by_gold") as st:
-        _, _, _, group_labels = _discover(records, lx, model, embedder, C,
-                                          label_sample=label_sample, seed=seed)
+        _, _, group_labels = _discover(records, lx, model, embedder, C,
+                                       label_sample=label_sample, seed=seed)
         assign = _oracle_classify(records, lx, model, group_labels, range(len(records)))
         return GroupByResult(group_labels, assign, st.as_dict())
 
@@ -82,11 +88,11 @@ def sem_group_by_cascade(records, langex, C, model, embedder, *,
                          seed: int = 0) -> GroupByResult:
     lx = as_langex(langex)
     with accounting.track("sem_group_by") as st:
-        cand_labels, emb, centers, group_labels = _discover(
+        _, sims, group_labels = _discover(
             records, lx, model, embedder, C, label_sample=label_sample, seed=seed)
 
         # proxy: candidate-label similarity to the discovered centers
-        sims = emb @ centers.T                  # [N, C]
+        # (the [N, C] matrix _discover already scored)
         proxy_label = np.argmax(sims, axis=1)
         proxy_score = np.max(sims, axis=1)      # A(t_i, mu_j) = sim(t'_i, mu_j)
 

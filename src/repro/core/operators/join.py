@@ -19,6 +19,7 @@ from repro.core.langex import as_langex
 from repro.core.operators.filter import predicate_prompt
 from repro.core.optimizer import cascades, stats
 from repro.index.quantile import quantile_calibrate
+from repro.index.vector_index import VectorIndex
 
 PROJECT_INSTRUCTION = (
     "{rendered}\nPredict the most likely value of the missing right-hand "
@@ -69,10 +70,11 @@ def sem_join_cascade(left: list[dict], right: list[dict], langex, oracle,
         left_texts = _render_side(left, lfields)
         right_texts = _render_side(right, rfields)
 
-        # -- plan 1 proxy: raw embedding similarity -----------------------
+        # -- plan 1 proxy: raw embedding similarity (scored through the
+        # retrieval layer: proxy calibration needs the full exact matrix) ---
         emb_l = embedder.embed(left_texts)
-        emb_r = embedder.embed(right_texts)
-        a1 = quantile_calibrate(emb_l @ emb_r.T).ravel()
+        right_index = VectorIndex(embedder.embed(right_texts))
+        a1 = quantile_calibrate(right_index.pairwise(emb_l)).ravel()
 
         # -- plan 2 proxy: project left -> right-key space -----------------
         if project_fn is None:
@@ -83,7 +85,7 @@ def sem_join_cascade(left: list[dict], right: list[dict], langex, oracle,
         else:
             projected = project_fn(left)
         emb_p = embedder.embed(list(projected))
-        a2 = quantile_calibrate(emb_p @ emb_r.T).ravel()
+        a2 = quantile_calibrate(right_index.pairwise(emb_p)).ravel()
 
         # -- one oracle-labeled pair sample prices both plans --------------
         rng = np.random.default_rng(seed)

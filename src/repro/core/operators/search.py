@@ -1,24 +1,52 @@
 """sem_search, sem_sim_join, sem_index (§4.2): similarity-specialized
-operators served by the vector index (the equi-join analogues that expose
-vector-search optimization opportunities to the engine)."""
+operators served by the retrieval layer (the equi-join analogues that expose
+vector-search optimization opportunities to the engine).
+
+All three go through the `RetrievalBackend` interface: ``index="exact"``
+scans the full corpus (gold), ``index="ivf"`` prunes with the ANN inverted
+file (recall knob: ``nprobe`` / ``recall_target``), ``index="auto"`` lets
+the shared cost model decide.  Per-search retrieval cost (index kind,
+probed clusters, scored vectors) lands in the op's accounting ``details``
+so BENCH_*/serve metrics can attribute it.
+"""
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core import accounting
-from repro.index.vector_index import VectorIndex
+from repro.index.backend import RetrievalBackend, build_index, load_index
 
 
-def sem_index(texts: list[str], embedder, *, path: str | None = None) -> VectorIndex:
-    with accounting.track("sem_index"):
+def sem_index(texts: list[str], embedder, *, path: str | None = None,
+              index: str = "exact", **index_kw) -> RetrievalBackend:
+    """Embed ``texts`` and build a retrieval index over them.
+
+    ``index`` picks the backend ("exact" | "ivf" | "auto"); ``index_kw``
+    (n_clusters, nprobe, recall_target, ...) flows to the IVF build.  Both
+    formats persist to ``path`` and come back via :func:`load_sem_index`.
+    """
+    with accounting.track("sem_index") as st:
         vectors = embedder.embed(texts)
-        index = VectorIndex(vectors)
+        built = build_index(vectors, kind=index, **index_kw)
+        st.details.update(index=built.kind, **{
+            k: v for k, v in built.describe().items() if k != "kind"})
         if path:
-            index.save(path)
-        return index
+            built.save(path)
+        return built
 
 
-def sem_search(index: VectorIndex, query: str, embedder, *, k: int = 10,
+def load_sem_index(path: str) -> RetrievalBackend:
+    """Load a persisted sem_index of either format (kind in meta.json)."""
+    return load_index(path)
+
+
+def _record_retrieval(st, index: RetrievalBackend) -> None:
+    st.details.update(index=index.kind,
+                      scored_vectors=index.last_stats.get("scored_vectors", 0),
+                      probed_clusters=index.last_stats.get("probed_clusters", 0))
+
+
+def sem_search(index: RetrievalBackend, query: str, embedder, *, k: int = 10,
                n_rerank: int = 0, rerank_model=None, records=None,
                rerank_langex=None) -> tuple[list[int], dict]:
     """Top-k by embedding similarity; optional LLM re-ranking of the top-k
@@ -27,6 +55,8 @@ def sem_search(index: VectorIndex, query: str, embedder, *, k: int = 10,
         qv = embedder.embed([query])
         _, idx = index.search(qv, k)
         hits = [int(i) for i in idx[0]]
+        _record_retrieval(st, index)
+        n_rerank = min(n_rerank, k)  # can't re-rank more than we retrieved
         if n_rerank and rerank_model is not None and records is not None:
             from repro.core.operators.topk import sem_topk_quickselect
             sub = [records[i] for i in hits]
@@ -37,7 +67,7 @@ def sem_search(index: VectorIndex, query: str, embedder, *, k: int = 10,
         return hits, st.as_dict()
 
 
-def sem_sim_join(left_texts: list[str], right_index: VectorIndex, embedder,
+def sem_sim_join(left_texts: list[str], right_index: RetrievalBackend, embedder,
                  *, k: int = 1) -> tuple[np.ndarray, np.ndarray, dict]:
     """Left join: K most-similar right rows per left row (§4.2 Figure 4).
 
@@ -45,4 +75,5 @@ def sem_sim_join(left_texts: list[str], right_index: VectorIndex, embedder,
     with accounting.track("sem_sim_join") as st:
         emb_l = embedder.embed(left_texts)
         scores, idx = right_index.search(emb_l, k)
+        _record_retrieval(st, right_index)
         return scores, idx, st.as_dict()

@@ -31,7 +31,9 @@ from repro.core.plan.cache import BatchedModelCache
 class PlanExecutor:
     def __init__(self, session, *, stats_log: list | None = None,
                  use_cache: bool = False, oracle=None, proxy=None,
-                 embedder=None, stage_hook=None):
+                 embedder=None, stage_hook=None, index_registry=None,
+                 recall_target: float = 0.95,
+                 index_min_corpus: int | None = None):
         self.session = session
         self.stats_log = stats_log if stats_log is not None else []
         if oracle is None:
@@ -44,6 +46,39 @@ class PlanExecutor:
         # called before every node dispatch — the serving gateway's yield
         # point for cancellation / deadline checks between pipeline stages
         self.stage_hook = stage_hook
+        # process-wide index sharing (the serving gateway passes one
+        # IndexRegistry so concurrent sessions over the same corpus build
+        # and embed once); None -> build per call (eager/lazy single-query)
+        self.index_registry = index_registry
+        # retrieval knobs for "auto" builds the optimizer didn't annotate
+        # (e.g. the join sim-prefilter): recall_target=1.0 must force exact
+        # everywhere for the record-identical contract to hold
+        self.recall_target = recall_target
+        self.index_min_corpus = index_min_corpus
+
+    # -- retrieval plumbing ------------------------------------------------
+    def _build_index(self, texts: list[str], *, kind: str = "auto",
+                     nprobe: int | None = None, n_queries: int = 1):
+        """Embed + index ``texts`` through the RetrievalBackend layer,
+        consulting the shared IndexRegistry when one is installed."""
+        from repro.index.backend import IVF_MIN_CORPUS, choose_backend
+        if kind == "auto":
+            # a registry amortizes the IVF build across sessions; without
+            # one the index dies with this call, so the build must pay for
+            # itself against a single exact scan
+            kind, auto_probe = choose_backend(
+                len(texts), max(n_queries, 1),
+                recall_target=self.recall_target,
+                min_corpus=self.index_min_corpus or IVF_MIN_CORPUS,
+                shared=self.index_registry is not None)
+            nprobe = nprobe if nprobe is not None else auto_probe
+        kw = {"nprobe": nprobe} if (kind == "ivf" and nprobe) else {}
+        if self.index_registry is None:
+            return _search.sem_index(texts, self.embedder, index=kind, **kw)
+        return self.index_registry.get_or_build(
+            texts, self.embedder, kind=kind, params=kw,
+            builder=lambda: _search.sem_index(texts, self.embedder,
+                                              index=kind, **kw))
 
     # -- plumbing ---------------------------------------------------------
     def _log(self, stats: dict) -> dict:
@@ -116,22 +151,28 @@ class PlanExecutor:
         (the optimizer-injected sem_sim_join prefilter; trades a recall tail
         for an n1*k instead of n1*n2 oracle bill)."""
         lx = node.langex
-        emb = self.embedder
         with accounting.track("sem_join_prefiltered") as st:
             n1, n2 = len(left), len(right)
             k = min(node.prefilter_k, n2)
             lfields = [f for f in lx.fields if f.side != "right"]
             rfields = [f for f in lx.fields if f.side == "right"]
-            emb_l = emb.embed(_join._render_side(left, lfields))
-            emb_r = emb.embed(_join._render_side(right, rfields))
-            cand = np.argsort(-(emb_l @ emb_r.T), axis=1)[:, :k]
+            # candidate retrieval rides the RetrievalBackend layer (shared
+            # with sem_sim_join: exact or IVF by the cost model / registry)
+            right_index = self._build_index(
+                _join._render_side(right, rfields), n_queries=n1)
+            emb_l = self.embedder.embed(_join._render_side(left, lfields))
+            _, cand = right_index.search(emb_l, k)
             pairs = [(i, int(j)) for i in range(n1) for j in cand[i]]
             passed, _ = self.oracle.predicate(_join._pair_prompts(lx, left, right, pairs))
             mask = np.zeros((n1, n2), bool)
             for (i, j), p in zip(pairs, passed):
                 mask[i, j] = p
             st.details.update(prefilter_k=k, candidate_pairs=len(pairs),
-                              pruned_pairs=n1 * n2 - len(pairs))
+                              pruned_pairs=n1 * n2 - len(pairs),
+                              index=right_index.kind,
+                              **{f"index_{kk}": v for kk, v in
+                                 right_index.last_stats.items()
+                                 if kk in ("scored_vectors", "probed_clusters")})
             return mask, st.as_dict()
 
     # -- topk --------------------------------------------------------------
@@ -150,10 +191,12 @@ class PlanExecutor:
         s = self.session
         pivot_scores = None
         if node.pivot_query is not None and self.embedder is not None:
-            texts = [node.langex.render(t) for t in recs]
-            emb = self.embedder.embed(texts)
-            qv = self.embedder.embed([node.pivot_query])[0]
-            pivot_scores = emb @ qv
+            # pivot selection rides the retrieval layer: the corpus index is
+            # registry-shared, so concurrent sessions embed the texts once
+            index = self._build_index([node.langex.render(t) for t in recs],
+                                      kind="exact")
+            qv = self.embedder.embed([node.pivot_query])
+            pivot_scores = index.pairwise(qv)[0]
         fn = {"quickselect": _topk.sem_topk_quickselect,
               "quadratic": _topk.sem_topk_quadratic,
               "heap": _topk.sem_topk_heap}[node.algorithm]
@@ -229,8 +272,9 @@ class PlanExecutor:
     # -- similarity family -------------------------------------------------
     def _run_search(self, node: N.Search) -> list[dict]:
         recs = self.run(node.child)
-        index = node.index or _search.sem_index(
-            [str(t[node.column]) for t in recs], self.embedder)
+        index = node.index or self._build_index(
+            [str(t[node.column]) for t in recs],
+            kind=node.index_kind, nprobe=node.nprobe)
         hits, stats = _search.sem_search(
             index, node.query, self.embedder, k=node.k, n_rerank=node.n_rerank,
             rerank_model=self.oracle if node.n_rerank else None,
@@ -241,8 +285,9 @@ class PlanExecutor:
     def _run_simjoin(self, node: N.SimJoin) -> list[dict]:
         left = self.run(node.left)
         right = self.run(node.right)
-        index = _search.sem_index([str(t[node.right_col]) for t in right],
-                                  self.embedder)
+        index = self._build_index([str(t[node.right_col]) for t in right],
+                                  kind=node.index_kind, nprobe=node.nprobe,
+                                  n_queries=len(left))
         scores, idx, stats = _search.sem_sim_join(
             [str(t[node.left_col]) for t in left], index, self.embedder, k=node.k)
         self._log(stats)

@@ -215,6 +215,12 @@ class Extract(LogicalNode):
         return f"Extract[{self.source_field}->{self.out_column}] {self.langex.template!r}"
 
 
+def _index_tag(index_kind: str, nprobe) -> str:
+    if index_kind == "ivf":
+        return f", ivf(nprobe={nprobe})" if nprobe else ", ivf"
+    return f", {index_kind}" if index_kind != "auto" else ""
+
+
 @dataclasses.dataclass
 class Search(LogicalNode):
     child: LogicalNode
@@ -224,12 +230,15 @@ class Search(LogicalNode):
     n_rerank: int = 0
     rerank_langex: Any = None
     index: Any = None
+    index_kind: str = "auto"   # "exact" | "ivf" | "auto" (optimizer decides)
+    nprobe: int | None = None  # IVF recall knob, installed by the optimizer
 
     def columns(self) -> set[str]:
         return self.child.columns()
 
     def label(self) -> str:
-        return f"Search[k={self.k}] {self.column}~{self.query!r}"
+        return (f"Search[k={self.k}{_index_tag(self.index_kind, self.nprobe)}] "
+                f"{self.column}~{self.query!r}")
 
 
 @dataclasses.dataclass
@@ -239,10 +248,13 @@ class SimJoin(LogicalNode):
     left_col: str
     right_col: str
     k: int = 1
+    index_kind: str = "auto"
+    nprobe: int | None = None
 
     def columns(self) -> set[str]:
         return (self.left.columns()
                 | {f"right_{c}" for c in self.right.columns()} | {"sim_score"})
 
     def label(self) -> str:
-        return f"SimJoin[k={self.k}] {self.left_col}~{self.right_col}"
+        return (f"SimJoin[k={self.k}{_index_tag(self.index_kind, self.nprobe)}] "
+                f"{self.left_col}~{self.right_col}")

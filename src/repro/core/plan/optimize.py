@@ -1,8 +1,8 @@
 """Rule-based plan optimizer over the logical IR.
 
-Four rewrites, applied in a fixed order (each is semantics-preserving wrt
-the gold algorithms except the last, which trades a bounded recall tail for
-an n1*k oracle bill and only fires on high-fanout joins):
+Five rewrites, applied in a fixed order (each is semantics-preserving wrt
+the gold algorithms except 4-5, which trade a bounded recall tail for a
+smaller bill and only fire when the cost model says so):
 
   1. ``fuse_maps``            — consecutive independent sem_maps collapse
                                 into one FusedMap prompt pass (N calls, not
@@ -24,6 +24,14 @@ an n1*k oracle bill and only fires on high-fanout joins):
                                 sem_sim_join candidate prefilter (top
                                 ``prefilter_frac`` of right rows per left
                                 row) when the session has an embedder.
+  5. ``choose_retrieval``     — every Search/SimJoin node with
+                                ``index_kind="auto"`` gets an exact or IVF
+                                retrieval backend by FLOP cost (build cost
+                                amortized over expected probes vs exact scan;
+                                ``repro.index.backend.choose_backend``) at
+                                the optimizer's ``recall_target``; the choice
+                                (and the IVF ``nprobe`` knob) is installed on
+                                the node and shows up in ``explain_plan``.
 
 ``explain_plan`` renders a plan tree with per-node cardinality and
 oracle-call estimates; ``LazySemFrame.explain()`` shows before/after plus
@@ -40,6 +48,7 @@ import numpy as np
 from repro.core.operators.filter import predicate_prompt
 from repro.core.optimizer import stats
 from repro.core.plan import nodes as N
+from repro.index.backend import IVF_MIN_CORPUS, choose_backend, retrieval_costs
 
 # per-tuple oracle-equivalent unit costs (cascades mostly pay the proxy)
 GOLD_FILTER_COST = 1.0
@@ -140,7 +149,9 @@ def explain_plan(node: N.LogicalNode, *, indent: str = "") -> str:
 class PlanOptimizer:
     def __init__(self, session, *, oracle=None, proxy=None, sample_size: int = 32,
                  seed: int = 0, prefilter_threshold: int = 20_000,
-                 prefilter_frac: float = 0.25):
+                 prefilter_frac: float = 0.25, recall_target: float = 0.95,
+                 index_min_corpus: int = IVF_MIN_CORPUS,
+                 index_shared: bool = False):
         self.session = session
         # probe through the executor's cache so sample labels are reused
         self.oracle = oracle if oracle is not None else session.oracle
@@ -149,6 +160,12 @@ class PlanOptimizer:
         self.seed = seed
         self.prefilter_threshold = prefilter_threshold
         self.prefilter_frac = prefilter_frac
+        self.recall_target = recall_target          # ANN retrieval knob
+        self.index_min_corpus = index_min_corpus
+        # True when an IndexRegistry shares builds across sessions (the
+        # serving gateway sets it): the cost model then amortizes the IVF
+        # build over serving traffic instead of charging it to one plan
+        self.index_shared = index_shared
         self.applied: list[AppliedRewrite] = []
         self._sel_memo: dict[tuple, float] = {}
 
@@ -169,6 +186,7 @@ class PlanOptimizer:
                 break
         plan = self._reorder_filters(plan)
         plan = self._transform(plan, self._inject_sim_prefilter)
+        plan = self._transform(plan, self._choose_retrieval)
         return plan
 
     # -- rule 1: map fusion ------------------------------------------------
@@ -288,6 +306,36 @@ class PlanOptimizer:
                 f"{len(chain)}-filter chain reordered by cost x selectivity "
                 f"(sel={', '.join(f'{s:.2f}' for s in sels)})"))
         return rebuilt
+
+    # -- rule 5: cost-based exact vs IVF retrieval -------------------------
+    def _choose_retrieval(self, node):
+        if isinstance(node, N.Search):
+            if node.index is not None or node.index_kind != "auto":
+                return None  # user pinned an index or a kind
+            n_corpus = estimate_cardinality(node.child)
+            n_queries = 1.0
+        elif isinstance(node, N.SimJoin):
+            if node.index_kind != "auto":
+                return None
+            n_corpus = estimate_cardinality(node.right)
+            n_queries = estimate_cardinality(node.left)
+        else:
+            return None
+        kind, nprobe = choose_backend(
+            int(n_corpus), max(int(n_queries), 1),
+            recall_target=self.recall_target, min_corpus=self.index_min_corpus,
+            shared=self.index_shared)
+        if kind == "ivf":
+            c = retrieval_costs(int(n_corpus), max(int(n_queries), 1),
+                                recall_target=self.recall_target,
+                                shared=self.index_shared)
+            self.applied.append(AppliedRewrite(
+                "choose_retrieval",
+                f"{type(node).__name__.lower()} over ~{n_corpus:.0f} rows -> "
+                f"IVF (nprobe={nprobe}/{c['n_clusters']} clusters, "
+                f"recall_target={self.recall_target}; est. scan units "
+                f"{c['ivf']:.0f} vs exact {c['exact']:.0f})"))
+        return dataclasses.replace(node, index_kind=kind, nprobe=nprobe)
 
     # -- rule 4: sim-join prefilter ----------------------------------------
     def _inject_sim_prefilter(self, node):

@@ -25,7 +25,15 @@ from repro.models.transformer import layer_layout
 
 
 class PageAllocator:
-    """Host-side free-list page allocator + per-slot page tables."""
+    """Host-side free-list page allocator + per-slot page tables.
+
+    ``table`` is copy-on-write: callers hand it to async-dispatched jitted
+    steps (``jnp.asarray(alloc.table)``), and JAX CPU may read the host
+    buffer *after* the call returns — mutating it in place between steps
+    races that deferred read and produces nondeterministically corrupt page
+    tables (observed as run-to-run divergent decode logits under load).
+    Every mutation therefore replaces ``table`` with a fresh array.
+    """
 
     def __init__(self, num_pages: int, page_size: int, max_slots: int, max_pages_per_slot: int):
         self.page_size = page_size
@@ -35,17 +43,24 @@ class PageAllocator:
 
     def ensure(self, slot: int, n_tokens: int) -> None:
         need = (n_tokens + self.page_size - 1) // self.page_size
-        while len(self.pages_used[slot]) < need:
-            if not self.free:
-                raise MemoryError("out of KV pages")
+        used = self.pages_used[slot]
+        if len(used) >= need:
+            return
+        if len(self.free) < need - len(used):  # check upfront: the update
+            raise MemoryError("out of KV pages")  # below must be atomic
+        table = self.table.copy()
+        while len(used) < need:
             p = self.free.pop()
-            self.table[slot, len(self.pages_used[slot])] = p
-            self.pages_used[slot].append(p)
+            table[slot, len(used)] = p
+            used.append(p)
+        self.table = table
 
     def release(self, slot: int) -> None:
         self.free.extend(reversed(self.pages_used[slot]))
         self.pages_used[slot] = []
-        self.table[slot] = 0
+        table = self.table.copy()
+        table[slot] = 0
+        self.table = table
 
 
 def init_pages(cfg: ModelConfig, num_pages: int, page_size: int):

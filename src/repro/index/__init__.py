@@ -1,0 +1,24 @@
+"""Retrieval layer: one RetrievalBackend interface, two implementations.
+
+    build_index(vectors, kind="exact"|"ivf"|"auto")   construction
+    load_index(path)                                  persistence dispatch
+    choose_backend(n_corpus, n_queries, ...)          shared cost model
+
+`VectorIndex` is the exact gold reference; `IVFIndex` prunes with spherical
+k-means inverted lists and a Pallas cluster-scan kernel (see
+`repro.kernels.ivf_scan`).  All similarity consumers — sem_search,
+sem_sim_join, the join sim-prefilter, sem_group_by center scoring, sem_topk
+pivot selection — go through this interface.
+"""
+from repro.index.backend import (RetrievalBackend, build_index, choose_backend,
+                                 corpus_fingerprint, embedder_key, load_index,
+                                 nprobe_for_recall, retrieval_costs)
+from repro.index.ivf_index import IVFIndex
+from repro.index.kmeans import kmeans
+from repro.index.vector_index import VectorIndex
+
+__all__ = [
+    "IVFIndex", "RetrievalBackend", "VectorIndex", "build_index",
+    "choose_backend", "corpus_fingerprint", "embedder_key", "kmeans",
+    "load_index", "nprobe_for_recall", "retrieval_costs",
+]

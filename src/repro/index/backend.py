@@ -1,0 +1,223 @@
+"""RetrievalBackend: the one interface every similarity consumer goes
+through (§4.2 — sim-search operators are where vector-search optimizations
+plug into the engine).
+
+Two implementations:
+
+  * ``VectorIndex`` (``index/vector_index.py``) — exact brute-force scan,
+    the gold reference; scores every corpus vector per query.
+  * ``IVFIndex``    (``index/ivf_index.py``)    — spherical-k-means inverted
+    file with ``nprobe`` cluster pruning; scores only the probed clusters'
+    vectors through the Pallas cluster-scan kernel.
+
+Consumers (sem_search / sem_sim_join / the join sim-prefilter / sem_group_by
+center scoring / sem_topk pivot selection) never touch vectors directly:
+they ``build_index(...)`` (or receive one from the plan layer / the serving
+``IndexRegistry``) and call ``search``/``pairwise``.  ``last_stats`` exposes
+per-search accounting (scored vectors, probed clusters) so operators can
+attribute retrieval cost, and ``choose_backend`` is the shared cost model
+the plan optimizer and the executor use to pick exact vs IVF per node.
+"""
+from __future__ import annotations
+
+import abc
+import hashlib
+import json
+import math
+import os
+import threading
+
+import numpy as np
+
+# cost-model constants (FLOP-proportional units: one unit = scoring one
+# corpus vector against one query)
+IVF_MIN_CORPUS = 2048        # below this an exact scan is always cheaper
+IVF_BUILD_ITERS = 10         # k-means sweeps priced into the build
+IVF_TRAIN_PER_CLUSTER = 64   # quantizer trains on <= this many points/cluster
+IVF_BUILD_QUERIES = 10_000   # queries a built index amortizes over (the
+                             # registry shares builds across serve sessions,
+                             # so serving traffic, not one call, pays it)
+MIN_PROBE_FRAC = 0.02        # recall floor: never probe fewer clusters
+
+# score written to masked padding lanes / unfilled slots (finite: TPU-safe).
+# Canonical home is here (numpy-only module) so the IVF index and the
+# operator layer never pay a jax import just to read the constant; the
+# Pallas/jnp kernels (repro.kernels.ref / ivf_scan) import it from here.
+MASKED_SCORE = -1e30
+
+
+def train_sample_size(n_corpus: int, n_clusters: int) -> int:
+    """Quantizer training subsample (FAISS-style): k-means sees at most
+    ``IVF_TRAIN_PER_CLUSTER`` points per centroid; the full corpus is only
+    assigned once afterwards."""
+    return min(n_corpus, max(2048, IVF_TRAIN_PER_CLUSTER * n_clusters))
+
+
+class RetrievalBackend(abc.ABC):
+    """Uniform search surface over an embedded corpus."""
+
+    kind: str = "abstract"
+
+    def __init__(self, vectors: np.ndarray, ids: list | None = None):
+        self.vectors = np.asarray(vectors, np.float32)
+        self.ids = list(range(len(self.vectors))) if ids is None else list(ids)
+        self._tls = threading.local()
+
+    @property
+    def last_stats(self) -> dict:
+        """Per-search accounting ({"index", "scored_vectors",
+        "probed_clusters", ...}), read by operators right after search().
+        Thread-local: registry-shared indexes are searched concurrently by
+        many serve sessions and each must see its own numbers."""
+        return getattr(self._tls, "stats", {})
+
+    @last_stats.setter
+    def last_stats(self, value: dict) -> None:
+        self._tls.stats = value
+
+    def __len__(self) -> int:
+        return len(self.vectors)
+
+    @abc.abstractmethod
+    def search(self, queries: np.ndarray, k: int) -> tuple[np.ndarray, np.ndarray]:
+        """-> (scores [nq, k], indices [nq, k]) by inner product, descending."""
+
+    @abc.abstractmethod
+    def pairwise(self, queries: np.ndarray) -> np.ndarray:
+        """Exact full score matrix [nq, nc] (proxy-scoring consumers)."""
+
+    def describe(self) -> dict:
+        return {"kind": self.kind, "size": len(self),
+                "dim": int(self.vectors.shape[1]) if self.vectors.size else 0}
+
+    @abc.abstractmethod
+    def save(self, path: str) -> None: ...
+
+
+# ---------------------------------------------------------------------------
+# Construction / persistence dispatch
+# ---------------------------------------------------------------------------
+
+
+def build_index(vectors: np.ndarray, ids: list | None = None, *,
+                kind: str = "exact", **kw) -> RetrievalBackend:
+    from repro.index.ivf_index import IVFIndex
+    from repro.index.vector_index import VectorIndex
+    if kind == "auto":
+        # an explicitly built index (sem_index) exists to be searched many
+        # times / persisted, so price the build amortized over its lifetime
+        kind, nprobe = choose_backend(len(vectors), n_queries=1, shared=True)
+        if kind == "ivf":
+            kw.setdefault("nprobe", nprobe)
+    if kind == "exact":
+        return VectorIndex(vectors, ids)
+    if kind == "ivf":
+        return IVFIndex(vectors, ids, **kw)
+    raise ValueError(f"unknown index kind {kind!r} (expected 'exact'|'ivf'|'auto')")
+
+
+def load_index(path: str) -> RetrievalBackend:
+    """Load a persisted index of either format (meta.json carries the kind;
+    pre-RetrievalBackend directories without one are exact)."""
+    from repro.index.ivf_index import IVFIndex
+    from repro.index.vector_index import VectorIndex
+    with open(os.path.join(path, "meta.json")) as f:
+        kind = json.load(f).get("kind", "exact")
+    return {"exact": VectorIndex, "ivf": IVFIndex}[kind].load(path)
+
+
+# ---------------------------------------------------------------------------
+# Cost model (shared by the plan optimizer and the executor's "auto" path)
+# ---------------------------------------------------------------------------
+
+
+def default_n_clusters(n_corpus: int) -> int:
+    """FAISS-style sqrt(n) coarse quantizer size."""
+    return int(min(max(8, round(math.sqrt(max(n_corpus, 1)))), 4096))
+
+
+# empirical recall@k -> probe-fraction curve on clustered corpora; strongly
+# concave (the last few points of recall cost most of the clusters), tuned
+# against benchmarks/index_bench.py and verified there at every run
+_RECALL_FRAC = ((0.80, 0.02), (0.90, 0.05), (0.95, 0.10),
+                (0.99, 0.20), (1.00, 0.50))
+
+
+def nprobe_for_recall(n_clusters: int, recall_target: float) -> int:
+    """Map the recall knob onto a probed-cluster count;
+    ``recall_target=1.0`` demands every cluster (exact-identical results)."""
+    if recall_target >= 1.0:
+        return n_clusters
+    frac = MIN_PROBE_FRAC
+    for r, f in _RECALL_FRAC:
+        if recall_target <= r:
+            frac = f
+            break
+    else:
+        frac = _RECALL_FRAC[-1][1]
+    return max(1, min(n_clusters, math.ceil(frac * n_clusters)))
+
+
+def retrieval_costs(n_corpus: int, n_queries: int, *,
+                    recall_target: float = 0.95, shared: bool = False) -> dict:
+    """FLOP-proportional costs of serving ``n_queries`` over ``n_corpus``:
+    exact scan vs IVF build (subsampled k-means + one full assignment pass)
+    plus centroid scoring plus the probed-cluster scan.
+
+    ``shared=True`` models a registry-backed build reused across sessions:
+    this batch is charged its per-query share of the build assuming
+    ``IVF_BUILD_QUERIES`` lifetime queries.  ``shared=False`` (no registry:
+    the index dies with the call) charges the whole build to this batch."""
+    kc = default_n_clusters(n_corpus)
+    nprobe = nprobe_for_recall(kc, recall_target)
+    avg_cluster = n_corpus / max(kc, 1)
+    exact = float(n_queries * n_corpus)
+    train = train_sample_size(n_corpus, kc)
+    build = float(train * kc * IVF_BUILD_ITERS + n_corpus * kc)
+    if shared:
+        build *= n_queries / IVF_BUILD_QUERIES
+    scan = n_queries * (kc + nprobe * avg_cluster)
+    return {"exact": exact, "ivf": build + scan, "n_clusters": kc,
+            "nprobe": nprobe}
+
+
+def choose_backend(n_corpus: int, n_queries: int, *,
+                   recall_target: float = 0.95,
+                   min_corpus: int = IVF_MIN_CORPUS,
+                   shared: bool = False) -> tuple[str, int | None]:
+    """-> ("exact", None) or ("ivf", nprobe)."""
+    if n_corpus < min_corpus or recall_target >= 1.0:
+        return "exact", None
+    c = retrieval_costs(n_corpus, n_queries, recall_target=recall_target,
+                        shared=shared)
+    if c["ivf"] < c["exact"]:
+        return "ivf", c["nprobe"]
+    return "exact", None
+
+
+# ---------------------------------------------------------------------------
+# Fingerprinting (cross-session index sharing keys)
+# ---------------------------------------------------------------------------
+
+
+def embedder_key(embedder) -> str:
+    """Stable identity of the *backend* embedding model, unwrapping the
+    per-session accounting/dispatch layers so two serve sessions over the
+    same model share one index."""
+    key = getattr(embedder, "index_key", None)
+    if key is not None:
+        return key
+    return f"{type(embedder).__name__}@{id(embedder):x}"
+
+
+def corpus_fingerprint(texts, embedder) -> str:
+    h = hashlib.sha1()
+    h.update(embedder_key(embedder).encode())
+    for t in texts:
+        b = str(t).encode("utf-8", "replace")
+        # length prefix, not a separator: ["a\x1fb"] must not collide
+        # with ["a", "b"] (an aliased registry key would silently serve a
+        # different corpus's index)
+        h.update(f"{len(b)}:".encode())
+        h.update(b)
+    return h.hexdigest()

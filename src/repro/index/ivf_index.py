@@ -1,0 +1,229 @@
+"""IVF (inverted-file) ANN index: the pruned RetrievalBackend.
+
+Build: spherical k-means (`index/kmeans.py`) coarse-quantizes the corpus
+into ``n_clusters`` inverted lists, laid out as padded per-cluster tiles
+``store [kc, L, d]`` (L = max cluster size rounded up to the 128-lane
+width) with a validity mask — the static-shape layout the Pallas cluster
+scan (`kernels/ivf_scan.py`) gathers from.
+
+Search: every query is scored against its top-``nprobe`` clusters (by
+centroid score) — work is O(sum of probed cluster sizes) instead of
+O(corpus).  Queries are processed in blocks of ``block_q``; a block scans
+the concatenation of its queries' probe lists, so each query additionally
+sees its blockmates' clusters (recall can only improve; ``last_stats``
+counts the unique clusters actually scanned).  ``nprobe`` is the recall
+knob: the recall@k-vs-exact contract is measured (tests/test_index.py,
+benchmarks/index_bench.py), and ``nprobe = n_clusters`` degenerates to
+exact-identical results.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.index.backend import (MASKED_SCORE, RetrievalBackend,
+                                 default_n_clusters, nprobe_for_recall,
+                                 train_sample_size)
+from repro.index.kmeans import kmeans
+
+_LANE = 128        # pad L to the TPU lane width so MXU tiles stay aligned
+_BALANCE_FACTOR = 4  # cap cluster size at this multiple of the mean: every
+                     # tile is padded to the LARGEST cluster, so one skewed
+                     # list would otherwise inflate the whole store
+
+
+class IVFIndex(RetrievalBackend):
+    kind = "ivf"
+
+    def __init__(self, vectors: np.ndarray, ids: list | None = None, *,
+                 n_clusters: int | None = None, nprobe: int | None = None,
+                 recall_target: float = 0.95, kmeans_iters: int = 10,
+                 block_q: int = 8, seed: int = 0,
+                 _centroids: np.ndarray | None = None,
+                 _assign: np.ndarray | None = None):
+        super().__init__(vectors, ids)
+        norms = np.linalg.norm(self.vectors, axis=1, keepdims=True)
+        unit = self.vectors / np.maximum(norms, 1e-9)
+        n = len(unit)
+        self.n_clusters = min(n_clusters or default_n_clusters(n), max(n, 1))
+        self.block_q = int(block_q)
+        self.seed = seed
+        self.kmeans_iters = kmeans_iters
+        if _centroids is not None and _assign is not None:  # load() fast path
+            self.centroids, self.assign = _centroids, _assign
+        else:
+            # FAISS-style: train the quantizer on a subsample, then assign
+            # the full corpus in one pass (the cost model prices exactly this)
+            train_n = train_sample_size(n, self.n_clusters)
+            if train_n < n:
+                rng = np.random.default_rng(seed)
+                sample = unit[rng.choice(n, size=train_n, replace=False)]
+                self.centroids, _ = kmeans(sample, self.n_clusters,
+                                           iters=kmeans_iters, seed=seed)
+                self.assign = self._assign_all(unit)
+            else:
+                self.centroids, self.assign = kmeans(
+                    unit, self.n_clusters, iters=kmeans_iters, seed=seed)
+        self.n_clusters = len(self.centroids)
+        self.nprobe = int(nprobe if nprobe is not None
+                          else nprobe_for_recall(self.n_clusters, recall_target))
+        self._build_store(unit)
+
+    def _assign_all(self, unit: np.ndarray, chunk: int = 8192) -> np.ndarray:
+        out = np.empty(len(unit), np.int64)
+        for s in range(0, len(unit), chunk):
+            out[s:s + chunk] = np.argmax(unit[s:s + chunk] @ self.centroids.T,
+                                         axis=1)
+        return out
+
+    def _cluster_cap(self, n: int) -> int:
+        kc = max(self.n_clusters, 1)
+        return max(_LANE, int(np.ceil(_BALANCE_FACTOR * n / kc)))
+
+    def _rebalance(self, unit: np.ndarray, cap: int) -> None:
+        """Bounded-capacity repair: move an oversized cluster's lowest-
+        affinity members to their next-best centroid with room.  Every
+        vector stays in exactly one list (the degenerate nprobe=all contract
+        is untouched); only the inverted-list layout changes."""
+        sizes = np.bincount(self.assign, minlength=self.n_clusters)
+        overflow: list[int] = []
+        for j in np.flatnonzero(sizes > cap):
+            m = np.flatnonzero(self.assign == j)
+            order = np.argsort(-(unit[m] @ self.centroids[j]))
+            overflow.extend(m[order[cap:]].tolist())
+            sizes[j] = cap
+        for i in overflow:
+            prefs = np.argsort(-(unit[i] @ self.centroids.T))
+            dest = next(int(c) for c in prefs if sizes[c] < cap)
+            self.assign[i] = dest
+            sizes[dest] += 1
+
+    def _build_store(self, unit: np.ndarray) -> None:
+        kc = self.n_clusters
+        cap = self._cluster_cap(len(unit))
+        if len(unit) and np.bincount(self.assign, minlength=kc).max() > cap:
+            self._rebalance(unit, cap)
+        members = [np.flatnonzero(self.assign == j) for j in range(kc)]
+        self.cluster_sizes = np.asarray([len(m) for m in members], np.int64)
+        L = int(max(self.cluster_sizes.max(initial=1), 1))
+        L = -(-L // _LANE) * _LANE
+        d = unit.shape[1] if unit.ndim == 2 else 0
+        self.store = np.zeros((kc, L, d), np.float32)
+        self.store_mask = np.zeros((kc, L), np.float32)
+        self.store_ids = np.full((kc, L), -1, np.int32)
+        for j, m in enumerate(members):
+            self.store[j, : len(m)] = unit[m]
+            self.store_mask[j, : len(m)] = 1.0
+            self.store_ids[j, : len(m)] = m
+        # worst-case probe floor: any m probed clusters hold at least the sum
+        # of the m smallest lists, so k results need at most this many probes
+        self._size_cumsum = np.cumsum(np.sort(self.cluster_sizes))
+
+    def _min_probes(self, k: int) -> int:
+        need = min(k, int(self._size_cumsum[-1]) if len(self._size_cumsum) else 0)
+        if need <= 0:
+            return 1
+        return int(np.searchsorted(self._size_cumsum, need) + 1)
+
+    # -- search ------------------------------------------------------------
+    def search(self, queries: np.ndarray, k: int, *, nprobe: int | None = None
+               ) -> tuple[np.ndarray, np.ndarray]:
+        from repro.kernels import ops as kops
+        q = np.atleast_2d(np.asarray(queries, np.float32))
+        nq = len(q)
+        k = min(k, len(self))
+        if nq == 0:  # an upstream operator emptied the query side
+            self.last_stats = {"index": self.kind, "scored_vectors": 0,
+                               "probed_clusters": 0, "nprobe": 0,
+                               "n_clusters": int(self.n_clusters)}
+            return np.zeros((0, k), np.float32), np.zeros((0, k), np.int64)
+        nprobe_eff = min(max(nprobe or self.nprobe, self._min_probes(k)),
+                         self.n_clusters)
+        scores, probe_blocks = kops.ivf_search(
+            q, self.centroids, self.store, self.store_mask,
+            nprobe=nprobe_eff, block_q=self.block_q)
+        # candidate ids per block, broadcast to every query row in the block
+        cand_ids = self.store_ids[probe_blocks].reshape(len(probe_blocks), -1)
+        out_s, out_i = self._topk_unique(scores, cand_ids, k)
+
+        scored = 0
+        probed_unique = 0
+        for b in range(len(probe_blocks)):
+            real_q = min(nq - b * self.block_q, self.block_q)
+            uniq = np.unique(probe_blocks[b])
+            probed_unique += len(uniq)
+            scored += real_q * int(self.cluster_sizes[uniq].sum())
+        self.last_stats = {"index": self.kind, "scored_vectors": scored,
+                           "probed_clusters": int(probed_unique),
+                           "nprobe": int(nprobe_eff),
+                           "n_clusters": int(self.n_clusters)}
+        return out_s, out_i
+
+    def _topk_unique(self, scores: np.ndarray, cand_ids: np.ndarray, k: int
+                     ) -> tuple[np.ndarray, np.ndarray]:
+        """Per-query top-k over the scanned candidates, deduplicating rows a
+        block scanned more than once (identical scores, so dedup is safe).
+        ``scores`` has one row per query, ``cand_ids`` one row per block."""
+        nq = len(scores)
+        out_s = np.full((nq, k), MASKED_SCORE, np.float32)
+        out_i = np.zeros((nq, k), np.int64)
+        # a candidate id repeats at most block_q times (once per blockmate's
+        # probe list), so the top k*block_q scores are guaranteed to hold k
+        # unique ids — argpartition to that bound instead of sorting the
+        # whole slots*L row (which can exceed the corpus size)
+        for r in range(nq):
+            row = scores[r]
+            row_ids = cand_ids[r // self.block_q]
+            bound = min(len(row), k * self.block_q)
+            part = np.argpartition(-row, bound - 1)[:bound] \
+                if bound < len(row) else np.arange(len(row))
+            order = part[np.argsort(-row[part], kind="stable")]
+            seen: set[int] = set()
+            c = 0
+            for t in order:
+                i = int(row_ids[t])
+                if i < 0 or i in seen:
+                    continue
+                seen.add(i)
+                out_s[r, c] = row[t]
+                out_i[r, c] = i
+                c += 1
+                if c == k:
+                    break
+        return out_s, out_i
+
+    def pairwise(self, queries: np.ndarray) -> np.ndarray:
+        """Exact full matrix (proxy-calibration consumers need every score)."""
+        from repro.kernels import ops as kops
+        return kops.similarity(np.asarray(queries, np.float32), self.vectors)
+
+    def describe(self) -> dict:
+        return {**super().describe(), "n_clusters": int(self.n_clusters),
+                "nprobe": int(self.nprobe), "block_q": self.block_q}
+
+    # -- persistence -------------------------------------------------------
+    def save(self, path: str) -> None:
+        os.makedirs(path, exist_ok=True)
+        np.save(os.path.join(path, "vectors.npy"), self.vectors)
+        np.save(os.path.join(path, "centroids.npy"), self.centroids)
+        np.save(os.path.join(path, "assign.npy"), self.assign.astype(np.int32))
+        with open(os.path.join(path, "meta.json"), "w") as f:
+            json.dump({"kind": self.kind, "ids": self.ids,
+                       "dim": int(self.vectors.shape[1]),
+                       "n_clusters": int(self.n_clusters),
+                       "nprobe": int(self.nprobe), "block_q": self.block_q,
+                       "seed": self.seed}, f)
+
+    @classmethod
+    def load(cls, path: str) -> "IVFIndex":
+        vectors = np.load(os.path.join(path, "vectors.npy"))
+        centroids = np.load(os.path.join(path, "centroids.npy"))
+        assign = np.load(os.path.join(path, "assign.npy")).astype(np.int64)
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        return cls(vectors, meta["ids"], n_clusters=meta["n_clusters"],
+                   nprobe=meta["nprobe"], block_q=meta["block_q"],
+                   seed=meta.get("seed", 0), _centroids=centroids,
+                   _assign=assign)

@@ -1,4 +1,5 @@
-"""Spherical k-means over unit vectors (sem_group_by clustering stage)."""
+"""Spherical k-means over unit vectors (sem_group_by clustering stage and
+the IVF coarse quantizer: `repro.index.ivf_index`)."""
 from __future__ import annotations
 
 import numpy as np
@@ -20,19 +21,24 @@ def kmeans(vectors: np.ndarray, k: int, *, iters: int = 25, seed: int = 0
         centers.append(x[rng.choice(n, p=d / d.sum())])
     c = np.stack(centers)
 
-    assign = np.zeros(n, np.int64)
-    for _ in range(iters):
+    assign = np.full(n, -1, np.int64)  # sentinel: nothing assigned yet
+    for it in range(iters):
         sims = x @ c.T
         new_assign = np.argmax(sims, axis=1)
-        if np.array_equal(new_assign, assign) and _ > 0:
+        if it > 0 and np.array_equal(new_assign, assign):
             break
         assign = new_assign
+        reseeded: set[int] = set()
         for j in range(k):
             m = assign == j
             if m.any():
                 v = x[m].mean(axis=0)
                 c[j] = v / max(np.linalg.norm(v), 1e-9)
             else:  # re-seed empty cluster at the worst-assigned point
-                worst = np.argmin(np.max(x @ c.T, axis=1))
-                c[j] = x[worst]
+                worst_order = np.argsort(np.max(x @ c.T, axis=1))
+                # two empty clusters in one sweep must not grab the same point
+                pick = next((int(w) for w in worst_order if int(w) not in reseeded),
+                            int(worst_order[0]))
+                reseeded.add(pick)
+                c[j] = x[pick]
     return c, assign

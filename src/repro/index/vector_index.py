@@ -1,8 +1,9 @@
-"""Exact brute-force vector index (the FAISS analogue, §4: sem_index).
+"""Exact brute-force vector index (the FAISS flat analogue, §4: sem_index).
 
-Embeddings are unit vectors; scores are inner products computed with the
-Pallas similarity kernel on TPU (`repro.kernels.similarity`) and its jnp
-reference elsewhere.  Indices persist to disk (sem_index / load_sem_index).
+The gold RetrievalBackend: scores the full corpus per query.  Embeddings are
+unit vectors; scores are inner products computed with the Pallas similarity
+kernel on TPU (`repro.kernels.similarity`) and its jnp reference elsewhere.
+Indices persist to disk (sem_index / load_sem_index).
 """
 from __future__ import annotations
 
@@ -11,19 +12,16 @@ import os
 
 import numpy as np
 
+from repro.index.backend import RetrievalBackend
+
 
 def _similarity(queries: np.ndarray, corpus: np.ndarray) -> np.ndarray:
     from repro.kernels import ops as kops
     return kops.similarity(queries, corpus)
 
 
-class VectorIndex:
-    def __init__(self, vectors: np.ndarray, ids: list | None = None):
-        self.vectors = np.asarray(vectors, np.float32)
-        self.ids = list(range(len(vectors))) if ids is None else list(ids)
-
-    def __len__(self) -> int:
-        return len(self.vectors)
+class VectorIndex(RetrievalBackend):
+    kind = "exact"
 
     def search(self, queries: np.ndarray, k: int) -> tuple[np.ndarray, np.ndarray]:
         """-> (scores [nq, k], indices [nq, k]) by inner product."""
@@ -33,6 +31,9 @@ class VectorIndex:
         psims = np.take_along_axis(sims, part, axis=1)
         order = np.argsort(-psims, axis=1)
         idx = np.take_along_axis(part, order, axis=1)
+        self.last_stats = {"index": self.kind,
+                           "scored_vectors": int(sims.shape[0] * sims.shape[1]),
+                           "probed_clusters": 0}
         return np.take_along_axis(sims, idx, axis=1), idx
 
     def pairwise(self, queries: np.ndarray) -> np.ndarray:
@@ -43,7 +44,8 @@ class VectorIndex:
         os.makedirs(path, exist_ok=True)
         np.save(os.path.join(path, "vectors.npy"), self.vectors)
         with open(os.path.join(path, "meta.json"), "w") as f:
-            json.dump({"ids": self.ids, "dim": int(self.vectors.shape[1])}, f)
+            json.dump({"kind": self.kind, "ids": self.ids,
+                       "dim": int(self.vectors.shape[1])}, f)
 
     @classmethod
     def load(cls, path: str) -> "VectorIndex":

@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.kernels import decode_attention as _da
 from repro.kernels import flash_attention as _fa
+from repro.kernels import ivf_scan as _ivf
 from repro.kernels import ref
 from repro.kernels import rmsnorm as _rn
 from repro.kernels import similarity as _sim
@@ -65,6 +66,25 @@ def similarity(queries, corpus, *, normalize: bool = True,
                                        normalize=normalize))
     return np.asarray(_sim.similarity(queries, corpus, normalize=normalize,
                                       interpret=(mode == "interpret"), **kw))
+
+
+def ivf_search(queries, centroids, store, mask, *, nprobe: int,
+               block_q: int = 8, impl: str | None = None
+               ) -> tuple[np.ndarray, np.ndarray]:
+    """Fused IVF retrieval: centroid scoring + per-query top-``nprobe``
+    probe selection + masked cluster scan over the padded inverted file.
+
+    -> (scores [nq, block_q*nprobe*L] f32, probe_blocks [nb, block_q*nprobe]);
+    masked/padded candidates score ``ref.MASKED_SCORE``."""
+    mode = _resolve(impl)
+    if mode == "ref":
+        s, p = ref.ivf_search_ref(jnp.asarray(queries), jnp.asarray(centroids),
+                                  jnp.asarray(store), jnp.asarray(mask),
+                                  nprobe=nprobe, block_q=block_q)
+    else:
+        s, p = _ivf.ivf_search(queries, centroids, store, mask, nprobe=nprobe,
+                               block_q=block_q, interpret=(mode == "interpret"))
+    return np.asarray(s), np.asarray(p)
 
 
 def rmsnorm(x, scale, *, eps: float = 1e-5, impl: str | None = None, **kw):

@@ -7,6 +7,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.index.backend import MASKED_SCORE  # canonical, numpy-only home
+
 NEG_INF = -1e30
 
 
@@ -54,6 +56,64 @@ def similarity_ref(queries, corpus, *, normalize: bool = True):
         q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-9)
         c = c / jnp.maximum(jnp.linalg.norm(c, axis=-1, keepdims=True), 1e-9)
     return q @ c.T
+
+
+# -- IVF cluster scan (shared helpers + jnp reference) ----------------------
+
+
+def _unitize(q):
+    return q * jax.lax.rsqrt(jnp.maximum(jnp.sum(q * q, -1, keepdims=True), 1e-18))
+
+
+def pad_queries(q, block_q: int):
+    """Pad [nq, d] -> [nb*block_q, d] by edge replication (replicated rows
+    probe the same clusters as the last real query, so padding never drags
+    unrelated clusters into a block's scan).  -> (padded, nb)."""
+    nq = q.shape[0]
+    nb = max(1, -(-nq // block_q))
+    pad = nb * block_q - nq
+    if pad:
+        q = jnp.concatenate([q, jnp.repeat(q[-1:], pad, axis=0)], axis=0)
+    return q, nb
+
+
+def ivf_probes(q, centroids, nprobe: int, block_q: int):
+    """Per-query top-``nprobe`` clusters by centroid score, concatenated per
+    query block -> [nb, block_q*nprobe] int32.  Shared verbatim by the Pallas
+    path and the jnp reference so probe selection can never diverge."""
+    cs = jnp.asarray(q, jnp.float32) @ jnp.asarray(centroids, jnp.float32).T
+    _, probe = jax.lax.top_k(cs, nprobe)                    # [nb*bq, nprobe]
+    return probe.astype(jnp.int32).reshape(-1, block_q * nprobe)
+
+
+def ivf_scan_ref(queries, store, mask, probe_blocks, *, block_q: int = 8,
+                 normalize: bool = True):
+    """Reference masked gather-scan: queries [nb*bq, d], store [kc, L, d],
+    mask [kc, L], probe_blocks [nb, slots] -> [nb*bq, slots*L]."""
+    q = jnp.asarray(queries, jnp.float32)
+    if normalize:
+        q = _unitize(q)
+    nb, slots = probe_blocks.shape
+    L = store.shape[1]
+    qb = q.reshape(nb, block_q, -1)
+    v = jnp.asarray(store)[probe_blocks]                    # [nb, slots, L, d]
+    s = jnp.einsum("bqd,bsld->bqsl", qb, v.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    m = jnp.asarray(mask)[probe_blocks]                     # [nb, slots, L]
+    s = jnp.where(m[:, None] > 0, s, MASKED_SCORE)
+    return s.reshape(nb * block_q, slots * L)
+
+
+def ivf_search_ref(queries, centroids, store, mask, *, nprobe: int,
+                   block_q: int = 8):
+    """jnp reference for `repro.kernels.ivf_scan.ivf_search` (same pipeline:
+    centroid scoring -> per-query probes -> masked cluster scan)."""
+    q, _ = pad_queries(jnp.asarray(queries, jnp.float32), block_q)
+    q = _unitize(q)
+    probe_blocks = ivf_probes(q, centroids, nprobe, block_q)
+    scores = ivf_scan_ref(q, store, mask, probe_blocks, block_q=block_q,
+                          normalize=False)
+    return scores[: len(queries)], probe_blocks
 
 
 def rmsnorm_ref(x, scale, *, eps: float = 1e-5):

@@ -17,7 +17,10 @@ package makes *many concurrent* pipelines cheap by sharing work across them:
                    FIFO-with-fairness) plus the worker pool that executes
                    plans through the shared runtime;
   * ``metrics``  — gateway-level throughput / latency tails / cross-query
-                   cache hit rate.
+                   cache hit rate;
+  * ``index_registry`` — :class:`IndexRegistry`, process-wide retrieval-index
+                   sharing: concurrent sessions over the same corpus trigger
+                   exactly one embed+build (exact or IVF).
 
     gw = Gateway(session, max_inflight=4, cache_ttl_s=600)
     handles = [gw.submit(sf.lazy().sem_filter(...)) for sf in frames]
@@ -27,6 +30,7 @@ package makes *many concurrent* pipelines cheap by sharing work across them:
 from repro.serve.dispatch import (DispatchedEmbedder, DispatchedModel,
                                   DispatchError, MicroBatchDispatcher)
 from repro.serve.gateway import AdmissionError, Gateway
+from repro.serve.index_registry import IndexRegistry
 from repro.serve.metrics import GatewayMetrics
 from repro.serve.session import (ServeSession, SessionCancelled,
                                  SessionDeadlineExceeded)
@@ -34,7 +38,7 @@ from repro.serve.store import SharedSemanticCache
 
 __all__ = [
     "AdmissionError", "DispatchError", "DispatchedEmbedder",
-    "DispatchedModel", "Gateway", "GatewayMetrics", "MicroBatchDispatcher",
-    "ServeSession", "SessionCancelled", "SessionDeadlineExceeded",
-    "SharedSemanticCache",
+    "DispatchedModel", "Gateway", "GatewayMetrics", "IndexRegistry",
+    "MicroBatchDispatcher", "ServeSession", "SessionCancelled",
+    "SessionDeadlineExceeded", "SharedSemanticCache",
 ]

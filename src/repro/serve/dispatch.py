@@ -273,6 +273,13 @@ class DispatchedEmbedder:
     def dim(self):
         return self._d._backends["embed"].dim
 
+    @property
+    def index_key(self):
+        """Identity of the shared backend embedder, not this per-session
+        handle — serve sessions must land on the same registry key."""
+        from repro.index.backend import embedder_key
+        return embedder_key(self._d._backends["embed"])
+
     def embed(self, texts):
         call = self._d.submit("embed", "embed", texts, tag=self.tag)
         accounting.record("embed", call.owned)

@@ -34,6 +34,7 @@ from repro.core.plan.nodes import LogicalNode
 from repro.core.plan.optimize import PlanOptimizer
 from repro.serve.dispatch import (DispatchedEmbedder, DispatchedModel,
                                   MicroBatchDispatcher)
+from repro.serve.index_registry import IndexRegistry
 from repro.serve.metrics import GatewayMetrics
 from repro.serve.session import (CANCELLED, DONE, EXPIRED, FAILED, RUNNING,
                                  ServeSession, SessionCancelled,
@@ -58,11 +59,16 @@ class Gateway:
                  cache_capacity: int = 100_000, cache_ttl_s: float | None = None,
                  persist_path: str | None = None,
                  optimizer_kw: dict | None = None,
-                 history_limit: int = 1024):
+                 history_limit: int = 1024,
+                 index_registry: IndexRegistry | None = None):
         self.session = session
         self.store = store if store is not None else SharedSemanticCache(
             capacity=cache_capacity, ttl_s=cache_ttl_s,
             persist_path=persist_path)
+        # one retrieval index per (corpus, embedder, config) across ALL
+        # sessions: concurrent pipelines over the same corpus build once
+        self.index_registry = index_registry if index_registry is not None \
+            else IndexRegistry()
         self.dispatcher = MicroBatchDispatcher(
             oracle=_raw(session.oracle),
             proxy=_raw(session.proxy) if session.proxy is not None else None,
@@ -181,18 +187,25 @@ class Gateway:
         sess.status = RUNNING
         sess.started_at = time.monotonic()
         oracle, proxy, embedder = self._handles(sess.sid)
+        exec_kw = {k: self.optimizer_kw[k]
+                   for k in ("recall_target", "index_min_corpus")
+                   if k in self.optimizer_kw}
         executor = PlanExecutor(
             self.session, stats_log=sess.stats_log, oracle=oracle,
             proxy=proxy, embedder=embedder,
-            stage_hook=lambda node: sess.check())
+            stage_hook=lambda node: sess.check(),
+            index_registry=self.index_registry, **exec_kw)
         try:
             with accounting.session_scope(sess.sid) as st:
                 sess.stats = st
                 plan = sess.plan
                 if sess.optimize:
+                    # the registry shares builds across sessions, so the
+                    # optimizer may amortize IVF build cost over traffic
                     optimizer = PlanOptimizer(
                         self.session, oracle=oracle, proxy=proxy,
-                        seed=self.session.seed, **self.optimizer_kw)
+                        seed=self.session.seed,
+                        **{"index_shared": True, **self.optimizer_kw})
                     with accounting.track("plan_optimize") as opt_st:
                         plan = optimizer.optimize(plan)
                     opt_st.details.update(
@@ -221,8 +234,10 @@ class Gateway:
         return True
 
     def snapshot(self) -> dict:
-        return self.metrics.snapshot(store=self.store,
+        snap = self.metrics.snapshot(store=self.store,
                                      dispatcher=self.dispatcher)
+        snap.update(self.index_registry.metrics())
+        return snap
 
     def close(self) -> None:
         with self._cv:

@@ -1,0 +1,89 @@
+"""IndexRegistry: process-wide retrieval-index sharing across serve sessions.
+
+Every embedding-backed operator in a plan (sem_search, sem_sim_join, the
+join sim-prefilter, topk pivot selection) needs an index over some corpus.
+Without sharing, N concurrent gateway sessions over the same corpus embed
+and build N times.  The registry keys built indexes by
+``(corpus-fingerprint, embedder identity, kind, build params)`` —
+``repro.index.backend.corpus_fingerprint`` unwraps the per-session
+accounting/dispatch wrappers so sessions land on the same key — and
+guarantees *exactly one build per key* under concurrency: losers of the
+build race block on the winner's per-key latch instead of re-building.
+
+LRU capacity bounds a long-lived gateway's memory; ``metrics()`` reports
+builds / shared hits / evictions so benchmarks and the gateway snapshot can
+attribute cross-session index reuse.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+
+from repro.index.backend import RetrievalBackend, corpus_fingerprint
+
+
+class IndexRegistry:
+    def __init__(self, *, capacity: int = 32):
+        self.capacity = capacity
+        self._lock = threading.Lock()
+        self._indexes: OrderedDict[str, RetrievalBackend] = OrderedDict()
+        # keys embed the backend embedder's id(); pinning the embedder (the
+        # wrapper chain holds the backend) for the entry's lifetime stops a
+        # GC'd embedder's address being reused by a *different* model, which
+        # would silently alias its key onto a stale index
+        self._pins: dict[str, object] = {}
+        self._building: dict[str, threading.Event] = {}
+        self.builds = 0
+        self.hits = 0
+        self.evictions = 0
+
+    @staticmethod
+    def key_for(texts, embedder, *, kind: str, params: dict | None = None) -> str:
+        extras = "|".join(f"{k}={v}" for k, v in sorted((params or {}).items()))
+        return f"{corpus_fingerprint(texts, embedder)}:{kind}:{extras}"
+
+    def get_or_build(self, texts, embedder, *, kind: str, builder,
+                     params: dict | None = None) -> RetrievalBackend:
+        """Return the shared index for this corpus+embedder+config, building
+        it at most once process-wide (concurrent callers wait on the
+        winner's latch)."""
+        key = self.key_for(texts, embedder, kind=kind, params=params)
+        while True:
+            with self._lock:
+                idx = self._indexes.get(key)
+                if idx is not None:
+                    self._indexes.move_to_end(key)
+                    self.hits += 1
+                    return idx
+                latch = self._building.get(key)
+                if latch is None:           # we won the build race
+                    latch = self._building[key] = threading.Event()
+                    break
+            latch.wait()                    # loser: winner is building
+
+        try:
+            built = builder()
+            with self._lock:
+                self._indexes[key] = built
+                self._pins[key] = embedder
+                self.builds += 1
+                while len(self._indexes) > self.capacity:
+                    old_key, _ = self._indexes.popitem(last=False)
+                    self._pins.pop(old_key, None)
+                    self.evictions += 1
+            return built
+        finally:
+            with self._lock:
+                self._building.pop(key, None)
+            latch.set()
+
+    def metrics(self) -> dict:
+        with self._lock:
+            return {"index_builds": self.builds, "index_hits": self.hits,
+                    "index_evictions": self.evictions,
+                    "indexes_resident": len(self._indexes)}
+
+    def clear(self) -> None:
+        with self._lock:
+            self._indexes.clear()
+            self._pins.clear()

@@ -29,7 +29,7 @@ def _seq_generate(cfg, params, prompt_tokens, n, max_seq=128):
     for _ in range(n - 1):
         logits = r.decode(np.asarray([out[-1]], np.int32), lens)
         out.append(int(np.argmax(logits[0])))
-        lens += 1
+        lens = lens + 1  # fresh array: async dispatch may still read the old one
     return out
 
 
@@ -96,7 +96,7 @@ def test_paged_decode_matches_contiguous():
             alloc.ensure(s, t + 1)
         logits, pages = step(params, jnp.asarray(toks[:, t:t+1]), pages,
                              jnp.asarray(alloc.table), jnp.asarray(lens))
-        lens += 1
+        lens = lens + 1  # fresh array: async dispatch may still read the old one
     np.testing.assert_allclose(np.asarray(logits), np.asarray(logits_ref), atol=1e-4)
 
 

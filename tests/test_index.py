@@ -1,0 +1,349 @@
+"""Retrieval layer: RetrievalBackend interface, IVF recall/degenerate
+contracts, Pallas cluster-scan kernel vs jnp reference, k-means fixes, the
+exact-vs-IVF cost model, and cross-session index sharing (IndexRegistry)."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.backends import synth
+from repro.core.frame import SemFrame, Session
+from repro.index import (IVFIndex, VectorIndex, build_index, choose_backend,
+                         kmeans, load_index, nprobe_for_recall)
+from repro.kernels import ops as kops
+from repro.serve import Gateway, IndexRegistry
+
+
+def _clustered(n, d=32, n_centers=20, noise=0.15, seed=0):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(n_centers, d))
+    centers /= np.linalg.norm(centers, axis=1, keepdims=True)
+    lab = rng.integers(n_centers, size=n)
+    x = centers[lab] + noise * rng.normal(size=(n, d))
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    return np.asarray(x, np.float32), centers
+
+
+def _recall(exact_idx, ann_idx):
+    k = exact_idx.shape[1]
+    return np.mean([len(set(exact_idx[i]) & set(ann_idx[i])) / k
+                    for i in range(len(exact_idx))])
+
+
+# ---------------------------------------------------------------------------
+# k-means satellite fixes
+# ---------------------------------------------------------------------------
+
+
+def test_kmeans_converges_and_is_deterministic():
+    x, _ = _clustered(300, seed=1)
+    c1, a1 = kmeans(x, 8, seed=3)
+    c2, a2 = kmeans(x, 8, seed=3)
+    np.testing.assert_array_equal(a1, a2)
+    np.testing.assert_allclose(c1, c2)
+    assert a1.min() >= 0 and a1.max() < 8         # every point truly assigned
+    # k > n clamps
+    c3, a3 = kmeans(x[:5], 12, seed=0)
+    assert len(c3) == 5 and len(a3) == 5
+
+
+def test_kmeans_converges_on_first_iteration_stable_data():
+    """The old loop compared iteration 0's assignment against the zero-init
+    array (and leaned on `_` as the counter): with one tight cluster whose
+    points all argmax to center 0, that spuriously 'converged' before any
+    center update.  The fix must still run the update sweep."""
+    rng = np.random.default_rng(0)
+    base = rng.normal(size=16)
+    base /= np.linalg.norm(base)
+    x = np.stack([base + 1e-3 * rng.normal(size=16) for _ in range(20)])
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    centers, assign = kmeans(x, 1, seed=0)
+    # the single center must be the (updated) mean direction, not the raw seed
+    mean = x.mean(axis=0)
+    mean /= np.linalg.norm(mean)
+    np.testing.assert_allclose(centers[0], mean, atol=1e-5)
+    assert (assign == 0).all()
+
+
+def test_kmeans_empty_cluster_reseed_picks_distinct_points():
+    """Several empty clusters in one sweep must not all grab the same worst
+    point (which left duplicate centers behind)."""
+    rng = np.random.default_rng(2)
+    tight = rng.normal(size=16)
+    tight /= np.linalg.norm(tight)
+    x = np.stack([tight + 1e-4 * rng.normal(size=16) for _ in range(30)]
+                 + [-tight + 0.3 * rng.normal(size=16) for _ in range(3)])
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    centers, assign = kmeans(x, 6, iters=8, seed=5)
+    # no two centers may be numerically identical
+    pair_sims = centers @ centers.T
+    off_diag = pair_sims[~np.eye(len(centers), dtype=bool)]
+    assert not np.any(np.isclose(off_diag, 1.0, atol=1e-12)) or \
+        len(np.unique(np.round(centers, 10), axis=0)) == len(centers)
+
+
+# ---------------------------------------------------------------------------
+# IVF correctness contracts
+# ---------------------------------------------------------------------------
+
+
+def test_ivf_recall_meets_target_on_clustered_data():
+    x, centers = _clustered(3000, seed=4)
+    rng = np.random.default_rng(7)
+    q = centers[rng.integers(len(centers), size=24)] \
+        + 0.15 * rng.normal(size=(24, 32))
+    exact = VectorIndex(x)
+    _, ei = exact.search(q, 10)
+    ivf = IVFIndex(x, recall_target=0.9, seed=1)
+    _, vi = ivf.search(q, 10)
+    assert _recall(ei, vi) >= 0.9
+    st = ivf.last_stats
+    assert st["index"] == "ivf" and st["probed_clusters"] > 0
+    assert st["scored_vectors"] < 24 * len(x)      # genuinely pruned
+
+
+def test_ivf_nprobe_all_clusters_degenerates_to_exact():
+    x, _ = _clustered(800, seed=5)
+    q = x[::97][:9] + 0.01  # off-corpus queries, no exact ties
+    exact = VectorIndex(x)
+    es, ei = exact.search(q, 7)
+    ivf = IVFIndex(x, n_clusters=16, seed=2)
+    vs, vi = ivf.search(q, 7, nprobe=ivf.n_clusters)
+    np.testing.assert_array_equal(vi, ei)
+    np.testing.assert_allclose(vs, es, atol=1e-5)
+
+
+def test_ivf_search_returns_k_even_with_tiny_nprobe():
+    """nprobe=1 with small clusters: the min-probe floor must widen the scan
+    so k unique results always come back."""
+    x, _ = _clustered(200, seed=6)
+    ivf = IVFIndex(x, n_clusters=50, nprobe=1, seed=3)
+    scores, idx = ivf.search(x[:3], 20)
+    assert idx.shape == (3, 20)
+    assert all(len(set(row.tolist())) == 20 for row in idx)
+    assert (scores > -1e29).all()                 # no masked filler leaked
+
+
+def test_ivf_search_with_empty_query_set():
+    """An upstream filter can empty the query side of a sim-join; the ANN
+    path must return empty results like the exact path, not crash."""
+    x, _ = _clustered(300, seed=16)
+    empty = np.zeros((0, 32), np.float32)
+    es, ei = VectorIndex(x).search(empty, 5)
+    vs, vi = IVFIndex(x, n_clusters=8, seed=1).search(empty, 5)
+    assert es.shape == vs.shape == (0, 5)
+    assert ei.shape == vi.shape == (0, 5)
+
+
+def test_ivf_skewed_clusters_rebalanced_and_still_exact_at_full_probe():
+    """One dominant cluster must not inflate every padded tile (the store
+    pads to the largest list); the bounded-capacity repair keeps L near the
+    mean while preserving the degenerate nprobe=all exactness contract."""
+    rng = np.random.default_rng(20)
+    dominant = rng.normal(size=32)
+    dominant /= np.linalg.norm(dominant)
+    x = np.concatenate([
+        dominant + 0.02 * rng.normal(size=(1500, 32)),   # ~94% in one mode
+        rng.normal(size=(100, 32)),
+    ])
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    x = np.asarray(x, np.float32)
+    ivf = IVFIndex(x, n_clusters=16, seed=6)
+    cap = ivf._cluster_cap(len(x))
+    assert ivf.cluster_sizes.max() <= cap              # no runaway tile
+    assert ivf.store.shape[1] <= -(-cap // 128) * 128  # L stays bounded
+    q = np.asarray(x[::211][:6] + 0.01, np.float32)
+    _, ei = VectorIndex(x).search(q, 8)
+    _, vi = ivf.search(q, 8, nprobe=ivf.n_clusters)
+    np.testing.assert_array_equal(vi, ei)              # every vector reachable
+
+
+def test_executor_auto_build_honors_recall_target():
+    """The join sim-prefilter's 'auto' index builds must obey the session's
+    recall knob: recall_target=1.0 forces exact even when a registry would
+    amortize an IVF build (the record-identical contract)."""
+    from repro.core.plan.execute import PlanExecutor
+    records, world, *_ = synth.make_filter_world(2500, seed=17)
+    sess = Session(oracle=synth.SimulatedModel(world, "oracle"),
+                   embedder=synth.SimulatedEmbedder(world))
+    texts = [t["claim"] for t in records]
+    reg = IndexRegistry()
+    ex = PlanExecutor(sess, index_registry=reg, recall_target=0.95,
+                      index_min_corpus=500)
+    assert ex._build_index(texts, n_queries=4).kind == "ivf"
+    ex_exact = PlanExecutor(sess, index_registry=reg, recall_target=1.0,
+                            index_min_corpus=500)
+    assert ex_exact._build_index(texts, n_queries=4).kind == "exact"
+
+
+def test_save_load_roundtrip_both_formats(tmp_path):
+    x, _ = _clustered(500, seed=8)
+    q = x[:5]
+    for built in (VectorIndex(x, ids=[f"r{i}" for i in range(len(x))]),
+                  IVFIndex(x, n_clusters=12, seed=4)):
+        p = str(tmp_path / built.kind)
+        built.save(p)
+        loaded = load_index(p)
+        assert loaded.kind == built.kind and loaded.ids == built.ids
+        s0, i0 = built.search(q, 5)
+        s1, i1 = loaded.search(q, 5)
+        np.testing.assert_array_equal(i0, i1)
+        np.testing.assert_allclose(s0, s1, atol=1e-6)
+
+
+def test_build_index_dispatch_and_auto():
+    x, _ = _clustered(300, seed=9)
+    assert build_index(x, kind="exact").kind == "exact"
+    assert build_index(x, kind="ivf", n_clusters=8).kind == "ivf"
+    assert build_index(x, kind="auto").kind == "exact"   # small corpus
+    with pytest.raises(ValueError):
+        build_index(x, kind="nope")
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel vs jnp reference
+# ---------------------------------------------------------------------------
+
+
+def test_ivf_kernel_interpret_matches_ref():
+    x, centers = _clustered(600, seed=10)
+    ivf = IVFIndex(x, n_clusters=10, seed=5)
+    q = np.asarray(centers[:13], np.float32)
+    s_ref, p_ref = kops.ivf_search(q, ivf.centroids, ivf.store,
+                                   ivf.store_mask, nprobe=3, impl="ref")
+    s_int, p_int = kops.ivf_search(q, ivf.centroids, ivf.store,
+                                   ivf.store_mask, nprobe=3, impl="interpret")
+    np.testing.assert_array_equal(p_ref, p_int)    # shared probe selection
+    np.testing.assert_allclose(s_ref, s_int, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Cost model
+# ---------------------------------------------------------------------------
+
+
+def test_choose_backend_cost_model():
+    assert choose_backend(500, 1) == ("exact", None)          # small corpus
+    # without a registry the build dies with the call: one query never pays
+    assert choose_backend(50_000, 1)[0] == "exact"
+    # a registry amortizes the build over serving traffic -> IVF wins
+    kind, nprobe = choose_backend(50_000, 64, shared=True)
+    assert kind == "ivf" and 0 < nprobe < 224
+    # a big enough un-shared batch pays for its own build
+    assert choose_backend(50_000, 20_000)[0] == "ivf"
+    assert choose_backend(50_000, 64, recall_target=1.0, shared=True)[0] == "exact"
+    # probe count grows with the recall target, up to every cluster
+    probes = [nprobe_for_recall(200, r) for r in (0.8, 0.9, 0.95, 0.99, 1.0)]
+    assert probes == sorted(probes) and probes[-1] == 200
+
+
+def test_optimizer_installs_retrieval_choice():
+    records, world, *_ = synth.make_filter_world(260, seed=11)
+    sess = Session(oracle=synth.SimulatedModel(world, "oracle"),
+                   embedder=synth.SimulatedEmbedder(world))
+    lz = SemFrame(records, sess).lazy().sem_search("claim", "claim text 7", k=5)
+    txt = lz.explain(index_min_corpus=50, index_shared=True)
+    assert "choose_retrieval" in txt and "ivf(nprobe=" in txt
+    out = lz.collect(index_min_corpus=50, index_shared=True)
+    assert len(out.records) == 5
+    st = next(s for s in out.stats_log if s["operator"] == "sem_search")
+    assert st["index"] == "ivf" and st["scored_vectors"] > 0
+    # default threshold: small corpora stay exact (no rewrite noise)
+    lz2 = SemFrame(records, sess).lazy().sem_search("claim", "claim text 7", k=5)
+    assert "choose_retrieval" not in lz2.explain()
+
+
+def test_ivf_operator_path_record_identical_at_full_probe():
+    """recall_target=1.0 / nprobe=all: the optimized ANN surface must be
+    record-identical to the exact path (acceptance criterion)."""
+    records, world, *_ = synth.make_filter_world(150, seed=12)
+    sess = Session(oracle=synth.SimulatedModel(world, "oracle"),
+                   embedder=synth.SimulatedEmbedder(world))
+    sf = SemFrame(records, sess)
+    exact = sf.sem_search("claim", "claim text 3", k=6, index_kind="exact")
+    full_ivf = sf.sem_search("claim", "claim text 3", k=6, index_kind="ivf",
+                             nprobe=10_000)
+    assert full_ivf.records == exact.records
+    ej = sf.sem_sim_join(records[:20], "claim", "claim", k=2,
+                         index_kind="exact")
+    vj = sf.sem_sim_join(records[:20], "claim", "claim", k=2,
+                         index_kind="ivf", nprobe=10_000)
+    strip = lambda rows: [{k: v for k, v in t.items() if k != "sim_score"}
+                          for t in rows]
+    assert strip(vj.records) == strip(ej.records)  # same rows, same order
+    np.testing.assert_allclose([t["sim_score"] for t in vj.records],
+                               [t["sim_score"] for t in ej.records], atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# sem_search satellite: rerank clamp + retrieval accounting
+# ---------------------------------------------------------------------------
+
+
+def test_sem_search_clamps_rerank_and_records_retrieval_details():
+    records, world, *_ = synth.make_filter_world(60, seed=13)
+    sess = Session(oracle=synth.SimulatedModel(world, "oracle"),
+                   embedder=synth.SimulatedEmbedder(world))
+    sf = SemFrame(records, sess)
+    out = sf.sem_search("claim", "claim text 9", k=4, n_rerank=99,
+                        rerank_langex="most relevant: {claim}")
+    assert len(out.records) == 4                   # clamped to k, no blowup
+    st = next(s for s in out.stats_log if s["operator"] == "sem_search")
+    assert st["reranked"] == 4
+    assert st["index"] == "exact"
+    assert st["scored_vectors"] == 60              # one query x full corpus
+
+
+# ---------------------------------------------------------------------------
+# IndexRegistry: cross-session sharing
+# ---------------------------------------------------------------------------
+
+
+def test_registry_builds_once_under_concurrency():
+    reg = IndexRegistry()
+    x, _ = _clustered(100, seed=14)
+    calls = []
+    gate = threading.Event()
+
+    class FakeEmbedder:
+        index_key = "fake@1"
+
+    def builder():
+        gate.wait(2.0)                             # hold every racer at the latch
+        calls.append(1)
+        return VectorIndex(x)
+
+    texts = [f"t{i}" for i in range(100)]
+    results = [None] * 6
+
+    def worker(i):
+        results[i] = reg.get_or_build(texts, FakeEmbedder(), kind="exact",
+                                      builder=builder)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(6)]
+    for t in threads:
+        t.start()
+    gate.set()
+    for t in threads:
+        t.join()
+    assert len(calls) == 1                         # exactly one build
+    assert all(r is results[0] for r in results)   # same shared object
+    m = reg.metrics()
+    assert m["index_builds"] == 1 and m["index_hits"] == 5
+
+
+def test_gateway_concurrent_sessions_share_one_index_build():
+    records, world, *_ = synth.make_filter_world(200, seed=15)
+    sess = Session(oracle=synth.SimulatedModel(world, "oracle"),
+                   embedder=synth.SimulatedEmbedder(world))
+    sf = SemFrame(records, sess)
+    with Gateway(sess, max_inflight=2) as gw:
+        h1 = gw.submit(sf.lazy().sem_search("claim", "claim text 5", k=3),
+                       tenant="a")
+        h2 = gw.submit(sf.lazy().sem_search("claim", "claim text 11", k=3),
+                       tenant="b")
+        r1, r2 = h1.result(), h2.result()
+        snap = gw.snapshot()
+    assert len(r1) == 3 and len(r2) == 3
+    assert snap["index_builds"] == 1               # one corpus -> one build
+    assert snap["index_hits"] >= 1
