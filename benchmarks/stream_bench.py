@@ -1,0 +1,234 @@
+"""Streaming-layer benchmark: incremental index maintenance + continuous
+queries, against the frozen-corpus baseline that rebuilds everything.
+
+Three sections:
+
+  * **delta indexing** — a 50k-row corpus in a ``CorpusTable`` gets a 10%
+    append.  The versioned ``IndexRegistry`` path must re-embed/index ONLY
+    the 5k delta rows (>= 5x fewer embed calls than the fingerprint-keyed
+    rebuild, which re-embeds all 55k) while the delta-merged IVF search
+    holds recall@10 >= 0.95 vs an exact scan of the appended corpus;
+  * **drift retrain** — a second append pushes the delta buffer past the
+    spill threshold: the drift detector folds it into a retrained quantizer
+    and recall holds with an empty buffer;
+  * **continuous query** — a pipeline subscribed through the gateway: after
+    an append, ONLY the delta rows reach the oracle (the shared semantic
+    cache covers every already-judged row) and the emitted records are
+    identical to a from-scratch run of the same pipeline.
+
+Writes ``BENCH_stream.json``.
+
+    PYTHONPATH=src python -m benchmarks.stream_bench
+"""
+import json
+import time
+
+import numpy as np
+
+from benchmarks._util import emit
+from repro.core.backends import synth
+from repro.core.backends.testing import CountingBackend
+from repro.core.frame import SemFrame, Session
+from repro.index import VectorIndex, build_index
+from repro.index.backend import default_n_clusters, nprobe_for_recall
+from repro.serve import Gateway, IndexRegistry
+from repro.stream import CorpusTable
+
+N_CORPUS = 50_000
+N_DELTA = 5_000            # the 10% append
+N_QUERIES = 64
+K = 10
+RECALL_TARGET = 0.95
+MIN_EMBED_SAVINGS = 5.0
+
+
+def _clustered(n, d=32, n_centers=64, noise=0.18, seed=0):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(n_centers, d))
+    centers /= np.linalg.norm(centers, axis=1, keepdims=True)
+    lab = rng.integers(n_centers, size=n)
+    x = centers[lab] + noise * rng.normal(size=(n, d))
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    return np.asarray(x, np.float32), centers
+
+
+class _LookupEmbedder:
+    """texts are integer strings indexing a fixed vector matrix — embeds
+    stay cheap so the benchmark measures maintenance, not hashing."""
+
+    index_key = "stream-bench-embedder"
+
+    def __init__(self, vectors):
+        self.vectors = vectors
+        self.calls = 0
+
+    @property
+    def dim(self):
+        return self.vectors.shape[1]
+
+    def embed(self, texts):
+        self.calls += len(texts)
+        return self.vectors[[int(t) for t in texts]]
+
+
+def run() -> None:
+    all_vecs, centers = _clustered(N_CORPUS + N_DELTA + N_DELTA // 2)
+    rng = np.random.default_rng(99)
+    queries = centers[rng.integers(len(centers), size=N_QUERIES)] \
+        + 0.18 * rng.normal(size=(N_QUERIES, 32))
+    queries = np.asarray(queries, np.float32)
+
+    kc = default_n_clusters(N_CORPUS)
+    nprobe = nprobe_for_recall(kc, RECALL_TARGET)
+    ivf_kw = dict(kind="ivf", nprobe=nprobe, block_q=1, seed=7,
+                  retrain="sync")     # deterministic wall-clock + results
+
+    emb = _LookupEmbedder(all_vecs)
+    table = CorpusTable([{"t": str(i)} for i in range(N_CORPUS)])
+    reg = IndexRegistry()
+
+    def builder(records):
+        return build_index(emb.embed([r["t"] for r in records]), **ivf_kw)
+
+    def updater(index, added):
+        index.add(emb.embed([r["t"] for r in added]))
+
+    # -- base build (v1) ---------------------------------------------------
+    t0 = time.monotonic()
+    reg.get_or_update(table, emb, kind="ivf", params={"nprobe": nprobe},
+                      builder=builder, updater=updater)
+    t_build = time.monotonic() - t0
+    base_embeds = emb.calls
+    emit("stream/base_build", 1e6 * t_build, embed_calls=base_embeds,
+         n_clusters=kc, nprobe=nprobe, wall_s=round(t_build, 3))
+
+    # -- the 10% append: delta path vs rebuild -----------------------------
+    table.append([{"t": str(i)} for i in range(N_CORPUS, N_CORPUS + N_DELTA)])
+    t0 = time.monotonic()
+    idx = reg.get_or_update(table, emb, kind="ivf", params={"nprobe": nprobe},
+                            builder=builder, updater=updater)
+    t_delta = time.monotonic() - t0
+    delta_embeds = emb.calls - base_embeds
+
+    # the frozen-corpus baseline: content fingerprint changed, re-embed +
+    # rebuild everything (what every pre-stream version of this repo did)
+    rebuild_emb = _LookupEmbedder(all_vecs)
+    t0 = time.monotonic()
+    build_index(rebuild_emb.embed([r["t"] for r in table.snapshot()]), **ivf_kw)
+    t_rebuild = time.monotonic() - t0
+    rebuild_embeds = rebuild_emb.calls
+    savings = rebuild_embeds / max(delta_embeds, 1)
+
+    n_now = N_CORPUS + N_DELTA
+    exact = VectorIndex(all_vecs[:n_now])
+    _, exact_idx = exact.search(queries, K)
+    t0 = time.monotonic()
+    _, ivf_idx = idx.search(queries, K)
+    t_search = time.monotonic() - t0
+    st = dict(idx.last_stats)
+    recall = float(np.mean([len(set(exact_idx[i]) & set(ivf_idx[i])) / K
+                            for i in range(N_QUERIES)]))
+    emit("stream/delta_append", 1e6 * t_delta,
+         delta_embed_calls=delta_embeds, rebuild_embed_calls=rebuild_embeds,
+         embed_savings=round(savings, 1), recall_at_10=round(recall, 4),
+         delta_rows=st["delta_rows"], scored_vectors=st["scored_vectors"],
+         search_us_per_q=round(1e6 * t_search / N_QUERIES, 1),
+         delta_wall_s=round(t_delta, 3), rebuild_wall_s=round(t_rebuild, 3))
+
+    # -- drift detector: spill past threshold -> retrain -------------------
+    table.append([{"t": str(i)} for i in range(n_now, len(all_vecs))])
+    t0 = time.monotonic()
+    idx = reg.get_or_update(table, emb, kind="ivf", params={"nprobe": nprobe},
+                            builder=builder, updater=updater)
+    t_retrain = time.monotonic() - t0
+    exact_all = VectorIndex(all_vecs)
+    _, exact_idx2 = exact_all.search(queries, K)
+    _, ivf_idx2 = idx.search(queries, K)
+    recall2 = float(np.mean([len(set(exact_idx2[i]) & set(ivf_idx2[i])) / K
+                             for i in range(N_QUERIES)]))
+    emit("stream/drift_retrain", 1e6 * t_retrain, retrains=idx.retrains,
+         delta_rows_left=idx.delta_rows, recall_at_10=round(recall2, 4),
+         wall_s=round(t_retrain, 3))
+    reg_metrics = reg.metrics()
+
+    # -- continuous query through the gateway ------------------------------
+    n_rows, n_new = 300, 30
+    records, world, *_ = synth.make_filter_world(n_rows, seed=21)
+    ctable = CorpusTable(records)
+    backend = CountingBackend(synth.SimulatedModel(world, "oracle"))
+    sess = Session(oracle=backend, embedder=synth.SimulatedEmbedder(world))
+    rng = np.random.default_rng(5)
+    new_rows = []
+    for i in range(n_rows, n_rows + n_new):
+        rid = f"claim{i}"
+        world.filter_truth[rid] = bool(rng.random() < 0.4)
+        new_rows.append({"id": rid, "claim": f"claim text {i} {synth.tag(rid)}"})
+
+    t0 = time.monotonic()
+    with Gateway(sess, max_inflight=2, max_batch=512) as gw:
+        sub = gw.subscribe(ctable.lazy(sess)
+                           .sem_filter("the {claim} is supported"))
+        em0 = sub.poll(timeout=300)
+        initial_prompts = backend.n_prompts
+        ctable.append(new_rows)
+        em1 = sub.poll(timeout=300)
+        delta_prompts = backend.n_prompts - initial_prompts
+        snap = gw.snapshot()
+    t_cq = time.monotonic() - t0
+
+    fresh_sess = Session(oracle=synth.SimulatedModel(world, "oracle"),
+                         embedder=synth.SimulatedEmbedder(world))
+    fresh = SemFrame(ctable.snapshot(), fresh_sess).sem_filter(
+        "the {claim} is supported")
+    identical = em1.records == fresh.records
+    new_tags = {synth.tag(f"claim{i}") for i in range(n_rows, n_rows + n_new)}
+    delta_only = all(any(t in p for t in new_tags)
+                     for b in backend.batches[1:] for p in b)
+    emit("stream/continuous", 1e6 * t_cq,
+         initial_prompts=initial_prompts, delta_prompts=delta_prompts,
+         delta_only_oracle=delta_only, identical_records=identical,
+         emissions=snap["emissions"], added_rows=len(em1.added),
+         wall_s=round(t_cq, 3))
+
+    with open("BENCH_stream.json", "w") as fh:
+        json.dump({
+            "corpus": N_CORPUS, "delta": N_DELTA, "queries": N_QUERIES,
+            "k": K, "recall_target": RECALL_TARGET,
+            "delta_append": {
+                "delta_embed_calls": delta_embeds,
+                "rebuild_embed_calls": rebuild_embeds,
+                "embed_savings": round(savings, 2),
+                "recall_at_10": round(recall, 4),
+                "delta_wall_s": round(t_delta, 4),
+                "rebuild_wall_s": round(t_rebuild, 4),
+                "search_stats": {k_: v for k_, v in st.items()},
+            },
+            "drift_retrain": {"retrains": idx.retrains,
+                              "delta_rows_left": idx.delta_rows,
+                              "recall_at_10": round(recall2, 4),
+                              "wall_s": round(t_retrain, 4)},
+            "registry": reg_metrics,
+            "continuous": {"rows": n_rows, "appended": n_new,
+                           "initial_prompts": initial_prompts,
+                           "delta_prompts": delta_prompts,
+                           "delta_only_oracle": delta_only,
+                           "identical_records": identical,
+                           "emissions": snap["emissions"]},
+        }, fh, indent=2)
+
+    assert savings >= MIN_EMBED_SAVINGS, \
+        f"delta path embedded too much: {savings:.1f}x < {MIN_EMBED_SAVINGS}x"
+    assert recall >= RECALL_TARGET, \
+        f"delta-merged recall@{K} {recall:.3f} < {RECALL_TARGET}"
+    assert recall2 >= RECALL_TARGET, \
+        f"post-retrain recall@{K} {recall2:.3f} < {RECALL_TARGET}"
+    assert reg_metrics["index_builds"] == 1 and reg_metrics["index_updates"] == 2
+    assert em0.error is None and em1.error is None
+    assert delta_prompts == n_new, \
+        f"continuous query paid {delta_prompts} oracle prompts for {n_new} new rows"
+    assert delta_only, "an already-judged row reached the oracle after the append"
+    assert identical, "continuous emission diverged from a from-scratch run"
+
+
+if __name__ == "__main__":
+    run()

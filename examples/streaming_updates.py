@@ -1,0 +1,74 @@
+"""WALKTHROUGH: a live corpus under a standing semantic query.
+
+A fact-checking team keeps a claims corpus in a ``CorpusTable`` and
+subscribes a sem_filter pipeline through the gateway.  New claims stream in
+while the subscription is live: each append triggers a re-execution in
+which ONLY the new rows reach the oracle — the shared semantic cache
+already holds every earlier row's judgment — and the emission reports the
+delta (which records appeared).  A second gateway run over the same
+persistence file answers the whole corpus from disk without a single
+oracle call.
+
+    PYTHONPATH=src python examples/streaming_updates.py
+"""
+import os
+import tempfile
+
+import numpy as np
+
+from repro.core.backends import synth
+from repro.core.backends.testing import CountingBackend
+from repro.core.frame import Session
+from repro.serve import Gateway
+from repro.stream import CorpusTable
+
+# -- a live corpus with known ground truth ----------------------------------
+records, world, *_ = synth.make_filter_world(80, seed=11)
+table = CorpusTable(records, name="claims")
+rng = np.random.default_rng(7)
+
+
+def breaking_news(start, n):
+    rows = []
+    for i in range(start, start + n):
+        rid = f"claim{i}"
+        world.filter_truth[rid] = bool(rng.random() < 0.4)
+        rows.append({"id": rid, "claim": f"claim text {i} {synth.tag(rid)}"})
+    return rows
+
+
+persist = os.path.join(tempfile.mkdtemp(), "semantic_cache.jsonl")
+backend = CountingBackend(synth.SimulatedModel(world, "oracle"))
+session = Session(oracle=backend, embedder=synth.SimulatedEmbedder(world))
+
+# -- first run: subscribe, then watch appends flow through ------------------
+with Gateway(session, max_inflight=2, persist_path=persist) as gw:
+    sub = gw.subscribe(table.lazy(session)
+                       .sem_filter("the {claim} is supported"))
+
+    first = sub.poll(timeout=120)
+    print(f"v{first.version}: {len(first.records)} supported claims "
+          f"(oracle judged all {backend.n_prompts} rows)")
+
+    for batch in range(2):
+        before = backend.n_prompts
+        table.append(breaking_news(80 + 10 * batch, 10))
+        em = sub.poll(timeout=120)
+        print(f"v{em.version}: +{len(em.added)} new matches, "
+              f"{len(em.records)} total — oracle saw only "
+              f"{backend.n_prompts - before} prompts for 10 new rows")
+
+    snap = gw.snapshot()
+    print(f"emissions={snap['emissions']}, "
+          f"store entries={snap['cache']['entries']}")
+
+# -- second run: the persisted cache answers everything from disk -----------
+backend2 = CountingBackend(synth.SimulatedModel(world, "oracle"))
+session2 = Session(oracle=backend2, embedder=synth.SimulatedEmbedder(world))
+with Gateway(session2, max_inflight=1, persist_path=persist) as gw:
+    sub = gw.subscribe(table.lazy(session2)
+                       .sem_filter("the {claim} is supported"))
+    replay = sub.poll(timeout=120)
+    print(f"second run at v{replay.version}: {len(replay.records)} rows, "
+          f"{backend2.n_prompts} oracle prompts — the persisted cache "
+          f"answered every judgment from disk")

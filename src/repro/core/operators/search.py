@@ -14,7 +14,8 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import accounting
-from repro.index.backend import RetrievalBackend, build_index, load_index
+from repro.index.backend import (MASKED_SCORE, RetrievalBackend, build_index,
+                                 load_index)
 
 
 def sem_index(texts: list[str], embedder, *, path: str | None = None,
@@ -48,13 +49,19 @@ def _record_retrieval(st, index: RetrievalBackend) -> None:
 
 def sem_search(index: RetrievalBackend, query: str, embedder, *, k: int = 10,
                n_rerank: int = 0, rerank_model=None, records=None,
-               rerank_langex=None) -> tuple[list[int], dict]:
+               rerank_langex=None, max_pos: int | None = None
+               ) -> tuple[list[int], dict]:
     """Top-k by embedding similarity; optional LLM re-ranking of the top-k
-    down to ``n_rerank`` results (the advanced search path of §4.2)."""
+    down to ``n_rerank`` results (the advanced search path of §4.2).
+    ``max_pos`` bounds hits to index positions < max_pos (the snapshot
+    cutoff for version-pinned queries over a shared streaming index)."""
     with accounting.track("sem_search") as st:
         qv = embedder.embed([query])
-        _, idx = index.search(qv, k)
-        hits = [int(i) for i in idx[0]]
+        kw = {} if max_pos is None else {"max_pos": max_pos}
+        scores, idx = index.search(qv, k, **kw)
+        # unfilled slots (possible only under a max_pos cutoff racing a
+        # retrain) carry the masked sentinel: drop them
+        hits = [int(i) for i, s in zip(idx[0], scores[0]) if s > MASKED_SCORE / 2]
         _record_retrieval(st, index)
         n_rerank = min(n_rerank, k)  # can't re-rank more than we retrieved
         if n_rerank and rerank_model is not None and records is not None:
@@ -68,12 +75,16 @@ def sem_search(index: RetrievalBackend, query: str, embedder, *, k: int = 10,
 
 
 def sem_sim_join(left_texts: list[str], right_index: RetrievalBackend, embedder,
-                 *, k: int = 1) -> tuple[np.ndarray, np.ndarray, dict]:
+                 *, k: int = 1, max_pos: int | None = None
+                 ) -> tuple[np.ndarray, np.ndarray, dict]:
     """Left join: K most-similar right rows per left row (§4.2 Figure 4).
 
-    Returns (scores [n1,k], indices [n1,k], stats)."""
+    Returns (scores [n1,k], indices [n1,k], stats); slots carrying the
+    masked sentinel (possible only under a ``max_pos`` snapshot cutoff)
+    must be skipped by the consumer."""
     with accounting.track("sem_sim_join") as st:
         emb_l = embedder.embed(left_texts)
-        scores, idx = right_index.search(emb_l, k)
+        kw = {} if max_pos is None else {"max_pos": max_pos}
+        scores, idx = right_index.search(emb_l, k, **kw)
         _record_retrieval(st, right_index)
         return scores, idx, st.as_dict()

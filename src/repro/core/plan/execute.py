@@ -26,6 +26,7 @@ from repro.core.operators import search as _search
 from repro.core.operators import topk as _topk
 from repro.core.plan import nodes as N
 from repro.core.plan.cache import BatchedModelCache
+from repro.index.backend import MASKED_SCORE
 
 
 class PlanExecutor:
@@ -80,6 +81,62 @@ class PlanExecutor:
             builder=lambda: _search.sem_index(texts, self.embedder,
                                               index=kind, **kw))
 
+    def _build_stream_index(self, scan: N.StreamScan, column: str,
+                            n_corpus: int, *, kind: str = "auto",
+                            nprobe: int | None = None, n_queries: int = 1):
+        """Version-aware index for a StreamScan corpus: the registry keys on
+        (table id, embedder, config) instead of a content fingerprint, so an
+        appends-only commit reuses the cached base index and embeds/indexes
+        only the delta rows (``IndexRegistry.get_or_update``)."""
+        from repro.index.backend import IVF_MIN_CORPUS, choose_backend
+        table = scan.table
+        version = scan.version if scan.version is not None else table.version
+        if kind == "auto":
+            kind, _ = choose_backend(
+                n_corpus, max(n_queries, 1),
+                recall_target=self.recall_target,
+                min_corpus=self.index_min_corpus or IVF_MIN_CORPUS,
+                shared=True)
+        # key by the recall target, NOT a size-derived nprobe: the derived
+        # probe count shifts as the table grows, and a shifting key would
+        # turn every append into a full rebuild; the index derives (and on
+        # retrain re-derives) nprobe from the target itself.  A user-pinned
+        # nprobe stays in the key — it is corpus-size-independent.
+        if kind != "ivf":
+            kw = {}
+        elif nprobe is not None:
+            kw = {"nprobe": nprobe}
+        else:
+            kw = {"recall_target": self.recall_target}
+
+        def builder(records):
+            return _search.sem_index([str(t[column]) for t in records],
+                                     self.embedder, index=kind, **kw)
+
+        def updater(index, added):
+            with accounting.track("sem_index_delta") as st:
+                texts = [str(t[column]) for t in added]
+                index.add(self.embedder.embed(texts))
+                st.details.update(index=index.kind, delta_rows=len(texts),
+                                  table=table.table_id, version=version)
+            self.stats_log.append(st.as_dict())
+
+        return self.index_registry.get_or_update(
+            table, self.embedder, version=version, kind=kind, params=kw,
+            builder=builder, updater=updater)
+
+    def _corpus_index(self, child: N.LogicalNode, texts: list[str], column: str,
+                      *, kind: str = "auto", nprobe: int | None = None,
+                      n_queries: int = 1):
+        """Executor delta routing: a StreamScan corpus under a registry goes
+        through the versioned reuse path; everything else builds (or fetches
+        by content fingerprint) as before."""
+        if self.index_registry is not None and isinstance(child, N.StreamScan):
+            return self._build_stream_index(child, column, len(texts), kind=kind,
+                                            nprobe=nprobe, n_queries=n_queries)
+        return self._build_index(texts, kind=kind, nprobe=nprobe,
+                                 n_queries=n_queries)
+
     # -- plumbing ---------------------------------------------------------
     def _log(self, stats: dict) -> dict:
         self.stats_log.append(stats)
@@ -107,6 +164,10 @@ class PlanExecutor:
     # -- leaves ------------------------------------------------------------
     def _run_scan(self, node: N.Scan) -> list[dict]:
         return list(node.records)
+
+    def _run_streamscan(self, node: N.StreamScan) -> list[dict]:
+        # pinned version -> reproducible snapshot; floating -> current rows
+        return node.records
 
     # -- filter ------------------------------------------------------------
     def _run_filter(self, node: N.Filter) -> list[dict]:
@@ -272,29 +333,37 @@ class PlanExecutor:
     # -- similarity family -------------------------------------------------
     def _run_search(self, node: N.Search) -> list[dict]:
         recs = self.run(node.child)
-        index = node.index or self._build_index(
-            [str(t[node.column]) for t in recs],
+        index = node.index or self._corpus_index(
+            node.child, [str(t[node.column]) for t in recs], node.column,
             kind=node.index_kind, nprobe=node.nprobe)
+        # a shared stream index can be ahead of this run's pinned snapshot
+        # (a commit landed mid-query): bound hits to the snapshot's rows
+        cutoff = len(recs) if isinstance(node.child, N.StreamScan) else None
         hits, stats = _search.sem_search(
             index, node.query, self.embedder, k=node.k, n_rerank=node.n_rerank,
             rerank_model=self.oracle if node.n_rerank else None,
-            records=recs, rerank_langex=node.rerank_langex)
+            records=recs, rerank_langex=node.rerank_langex, max_pos=cutoff)
         self._log(stats)
-        return [recs[i] for i in hits]
+        return [recs[i] for i in hits if i < len(recs)]
 
     def _run_simjoin(self, node: N.SimJoin) -> list[dict]:
         left = self.run(node.left)
         right = self.run(node.right)
-        index = self._build_index([str(t[node.right_col]) for t in right],
-                                  kind=node.index_kind, nprobe=node.nprobe,
-                                  n_queries=len(left))
+        index = self._corpus_index(node.right,
+                                   [str(t[node.right_col]) for t in right],
+                                   node.right_col, kind=node.index_kind,
+                                   nprobe=node.nprobe, n_queries=len(left))
+        cutoff = len(right) if isinstance(node.right, N.StreamScan) else None
         scores, idx, stats = _search.sem_sim_join(
-            [str(t[node.left_col]) for t in left], index, self.embedder, k=node.k)
+            [str(t[node.left_col]) for t in left], index, self.embedder,
+            k=node.k, max_pos=cutoff)
         self._log(stats)
         out = []
         for i, t in enumerate(left):
             for rank in range(idx.shape[1]):
                 j = int(idx[i, rank])
+                if j >= len(right) or scores[i, rank] <= MASKED_SCORE / 2:
+                    continue  # beyond the pinned snapshot / unfilled slot
                 out.append({**t, **{f"right_{kk}": v for kk, v in right[j].items()},
                             "sim_score": float(scores[i, rank])})
         return out

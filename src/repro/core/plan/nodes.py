@@ -52,6 +52,32 @@ class Scan(LogicalNode):
 
 
 @dataclasses.dataclass
+class StreamScan(LogicalNode):
+    """Leaf over a versioned ``repro.stream.table.CorpusTable``.
+
+    ``version=None`` floats with the table (resolved at each access);
+    a pinned version is a reproducible snapshot — the serving gateway pins
+    every StreamScan at run start so one pipeline never sees two versions,
+    and subscriptions pin each re-execution to the commit that triggered it.
+    """
+
+    table: Any
+    version: int | None = None
+
+    @property
+    def records(self) -> list[dict]:
+        return self.table.snapshot(self.version)
+
+    def columns(self) -> set[str]:
+        return self.table.schema()
+
+    def label(self) -> str:
+        v = self.version if self.version is not None else self.table.version
+        return (f"StreamScan[{self.table.table_id}@v{v}, "
+                f"n={self.table.count(self.version)}]")
+
+
+@dataclasses.dataclass
 class Filter(LogicalNode):
     child: LogicalNode
     langex: Langex

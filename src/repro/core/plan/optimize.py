@@ -75,7 +75,7 @@ class AppliedRewrite:
 
 
 def estimate_cardinality(node: N.LogicalNode) -> float:
-    if isinstance(node, N.Scan):
+    if isinstance(node, (N.Scan, N.StreamScan)):
         return float(len(node.records))
     if isinstance(node, N.Filter):
         sel = node.selectivity if node.selectivity is not None else DEFAULT_FILTER_SEL
@@ -242,11 +242,12 @@ class PlanOptimizer:
     def _filter_unit_cost(self, f: N.Filter) -> float:
         return CASCADE_FILTER_COST if f.is_cascade else GOLD_FILTER_COST
 
-    def _probe_selectivity(self, f: N.Filter, base: N.Scan,
-                           idx: np.ndarray, probs: np.ndarray) -> float:
+    def _probe_selectivity(self, f: N.Filter, base: N.LogicalNode,
+                           base_records: list, idx: np.ndarray,
+                           probs: np.ndarray) -> float:
         memo_key = (f.langex.template, id(base))
         if memo_key not in self._sel_memo:
-            sampled = [base.records[i] for i in idx]
+            sampled = [base_records[i] for i in idx]
             prompts = [predicate_prompt(f.langex, t) for t in sampled]
             labels, _ = self.oracle.predicate(prompts)
             self._sel_memo[memo_key] = stats.estimate_selectivity(idx, probs, labels)
@@ -267,8 +268,12 @@ class PlanOptimizer:
         base = self._reorder_filters(cur)
         chain_bottom_up = list(reversed(chain))  # application order
 
-        if len(chain) < 2 or not isinstance(base, N.Scan) \
-                or len(base.records) < 2:
+        # a StreamScan base reorders too: its pinned snapshot is the sample
+        # population (probe labels land in the shared cache, so execution —
+        # and the next version's re-run — reuse them)
+        base_records = base.records \
+            if isinstance(base, (N.Scan, N.StreamScan)) else []
+        if len(chain) < 2 or len(base_records) < 2:
             rebuilt = base
             for f in chain_bottom_up:
                 rebuilt = dataclasses.replace(f, child=rebuilt)
@@ -287,11 +292,12 @@ class PlanOptimizer:
         scores = None
         if self.proxy is not None:
             prompts = [predicate_prompt(chain_bottom_up[0].langex, t)
-                       for t in base.records]
+                       for t in base_records]
             _, scores = self.proxy.predicate(prompts)
         idx, probs = stats.shared_sample_indices(
-            len(base.records), self.sample_size, self.seed, scores=scores)
-        sels = [self._probe_selectivity(f, base, idx, probs) for f in chain_bottom_up]
+            len(base_records), self.sample_size, self.seed, scores=scores)
+        sels = [self._probe_selectivity(f, base, base_records, idx, probs)
+                for f in chain_bottom_up]
         # optimal chain order: ascending cost / (1 - selectivity)
         rank = [self._filter_unit_cost(f) / max(1.0 - s, 1e-6)
                 for f, s in zip(chain_bottom_up, sels)]
@@ -321,10 +327,17 @@ class PlanOptimizer:
             n_queries = estimate_cardinality(node.left)
         else:
             return None
+        corpus_child = node.child if isinstance(node, N.Search) else node.right
         kind, nprobe = choose_backend(
             int(n_corpus), max(int(n_queries), 1),
             recall_target=self.recall_target, min_corpus=self.index_min_corpus,
             shared=self.index_shared)
+        if isinstance(corpus_child, N.StreamScan):
+            # don't pin the size-derived nprobe on a stream corpus: it would
+            # land in the versioned registry key and churn it as the table
+            # grows (sqrt(n) shifts), forcing full rebuilds; the executor
+            # keys by recall_target and the index derives nprobe itself
+            nprobe = None
         if kind == "ivf":
             c = retrieval_costs(int(n_corpus), max(int(n_queries), 1),
                                 recall_target=self.recall_target,

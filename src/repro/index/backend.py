@@ -62,6 +62,10 @@ class RetrievalBackend(abc.ABC):
         self.vectors = np.asarray(vectors, np.float32)
         self.ids = list(range(len(self.vectors))) if ids is None else list(ids)
         self._tls = threading.local()
+        # serializes add()/retrain mutations; searches snapshot references
+        # under it (registry-shared indexes are read by many sessions while
+        # the streaming layer appends deltas)
+        self._mut = threading.Lock()
 
     @property
     def last_stats(self) -> dict:
@@ -81,6 +85,20 @@ class RetrievalBackend(abc.ABC):
     @abc.abstractmethod
     def search(self, queries: np.ndarray, k: int) -> tuple[np.ndarray, np.ndarray]:
         """-> (scores [nq, k], indices [nq, k]) by inner product, descending."""
+
+    def add(self, vectors: np.ndarray, ids: list | None = None) -> None:
+        """Append corpus rows; positions continue from ``len(self)``, so an
+        appends-only corpus delta keeps index position == snapshot row.
+        The exact backend searches the concatenated corpus directly; the IVF
+        backend overrides this with a delta side buffer + drift retrain."""
+        v = np.atleast_2d(np.asarray(vectors, np.float32))
+        if not len(v):
+            return
+        with self._mut:
+            start = len(self.vectors)
+            self.vectors = np.concatenate([self.vectors, v]) if start else v.copy()
+            self.ids.extend(list(ids) if ids is not None
+                            else range(start, start + len(v)))
 
     @abc.abstractmethod
     def pairwise(self, queries: np.ndarray) -> np.ndarray:
@@ -144,18 +162,25 @@ _RECALL_FRAC = ((0.80, 0.02), (0.90, 0.05), (0.95, 0.10),
 
 
 def nprobe_for_recall(n_clusters: int, recall_target: float) -> int:
-    """Map the recall knob onto a probed-cluster count;
+    """Map the recall knob onto a probed-cluster count by linear
+    interpolation between the calibration points (a target between two
+    points pays a proportional probe fraction instead of jumping to the
+    next point's — recall_target=0.91 probes ~6%, not the 0.95 point's 10%);
     ``recall_target=1.0`` demands every cluster (exact-identical results)."""
     if recall_target >= 1.0:
         return n_clusters
-    frac = MIN_PROBE_FRAC
-    for r, f in _RECALL_FRAC:
-        if recall_target <= r:
-            frac = f
-            break
+    if recall_target <= _RECALL_FRAC[0][0]:
+        frac = _RECALL_FRAC[0][1]
     else:
         frac = _RECALL_FRAC[-1][1]
-    return max(1, min(n_clusters, math.ceil(frac * n_clusters)))
+        for (r0, f0), (r1, f1) in zip(_RECALL_FRAC, _RECALL_FRAC[1:]):
+            if recall_target <= r1:
+                frac = f0 + (recall_target - r0) / (r1 - r0) * (f1 - f0)
+                break
+    frac = max(MIN_PROBE_FRAC, frac)
+    # epsilon absorbs float noise from the interpolation (0.06*200 must be
+    # 12 probes, not ceil(12.000000000000002) = 13)
+    return max(1, min(n_clusters, math.ceil(frac * n_clusters - 1e-9)))
 
 
 def retrieval_costs(n_corpus: int, n_queries: int, *,

@@ -15,11 +15,25 @@ counts the unique clusters actually scanned).  ``nprobe`` is the recall
 knob: the recall@k-vs-exact contract is measured (tests/test_index.py,
 benchmarks/index_bench.py), and ``nprobe = n_clusters`` degenerates to
 exact-identical results.
+
+Streaming: ``add()`` appends rows to a *delta side buffer* instead of
+rebuilding — the quantizer is untouched, and every search exact-scans the
+(small) buffer alongside the probed clusters and merges top-k
+(``kernels.ops.ivf_delta_search``; jnp contract ``ref.ivf_delta_search_ref``).
+Delta rows therefore have recall 1.0 by construction and base recall is
+unchanged.  A drift detector watches the spill fraction
+(|delta| / |clustered rows|): past ``spill_threshold`` the buffer is folded
+in by retraining the quantizer over the full corpus — in a background
+thread by default (searches keep running against the old store + buffer
+until the atomic swap), synchronously with ``retrain="sync"``, or never
+with ``retrain="off"``.  A sync retrain is bit-identical to a fresh build
+over the concatenated corpus with the same seed/params (tests enforce it).
 """
 from __future__ import annotations
 
 import json
 import os
+import threading
 
 import numpy as np
 
@@ -41,40 +55,61 @@ class IVFIndex(RetrievalBackend):
                  n_clusters: int | None = None, nprobe: int | None = None,
                  recall_target: float = 0.95, kmeans_iters: int = 10,
                  block_q: int = 8, seed: int = 0,
+                 spill_threshold: float = 0.10, retrain: str = "background",
                  _centroids: np.ndarray | None = None,
                  _assign: np.ndarray | None = None):
         super().__init__(vectors, ids)
+        if retrain not in ("background", "sync", "off"):
+            raise ValueError(f"retrain={retrain!r} (expected "
+                             "'background'|'sync'|'off')")
         norms = np.linalg.norm(self.vectors, axis=1, keepdims=True)
         unit = self.vectors / np.maximum(norms, 1e-9)
         n = len(unit)
+        self._n_clusters_arg = n_clusters       # retrain re-derives from size
         self.n_clusters = min(n_clusters or default_n_clusters(n), max(n, 1))
         self.block_q = int(block_q)
         self.seed = seed
         self.kmeans_iters = kmeans_iters
+        self.recall_target = recall_target
+        self._nprobe_explicit = nprobe is not None
+        self.spill_threshold = float(spill_threshold)
+        self.retrain_mode = retrain
+        self.retrains = 0
+        self._retrain_thread: threading.Thread | None = None
+        self._retrain_queued = False
+        self._retrain_guard = threading.Lock()  # one retrain at a time
+        d = unit.shape[1] if unit.ndim == 2 else 0
+        self._delta_unit = np.zeros((0, d), np.float32)
+        self._delta_pos = np.zeros(0, np.int64)
         if _centroids is not None and _assign is not None:  # load() fast path
             self.centroids, self.assign = _centroids, _assign
         else:
-            # FAISS-style: train the quantizer on a subsample, then assign
-            # the full corpus in one pass (the cost model prices exactly this)
-            train_n = train_sample_size(n, self.n_clusters)
-            if train_n < n:
-                rng = np.random.default_rng(seed)
-                sample = unit[rng.choice(n, size=train_n, replace=False)]
-                self.centroids, _ = kmeans(sample, self.n_clusters,
-                                           iters=kmeans_iters, seed=seed)
-                self.assign = self._assign_all(unit)
-            else:
-                self.centroids, self.assign = kmeans(
-                    unit, self.n_clusters, iters=kmeans_iters, seed=seed)
+            self.centroids, self.assign = self._train(unit)
         self.n_clusters = len(self.centroids)
         self.nprobe = int(nprobe if nprobe is not None
                           else nprobe_for_recall(self.n_clusters, recall_target))
         self._build_store(unit)
 
-    def _assign_all(self, unit: np.ndarray, chunk: int = 8192) -> np.ndarray:
+    def _train(self, unit: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """FAISS-style: train the quantizer on a subsample, then assign the
+        full corpus in one pass (the cost model prices exactly this)."""
+        n = len(unit)
+        kc = min(self._n_clusters_arg or default_n_clusters(n), max(n, 1))
+        train_n = train_sample_size(n, kc)
+        if train_n < n:
+            rng = np.random.default_rng(self.seed)
+            sample = unit[rng.choice(n, size=train_n, replace=False)]
+            centroids, _ = kmeans(sample, kc, iters=self.kmeans_iters,
+                                  seed=self.seed)
+            return centroids, self._assign_all(unit, centroids)
+        return kmeans(unit, kc, iters=self.kmeans_iters, seed=self.seed)
+
+    def _assign_all(self, unit: np.ndarray, centroids: np.ndarray | None = None,
+                    chunk: int = 8192) -> np.ndarray:
+        centroids = self.centroids if centroids is None else centroids
         out = np.empty(len(unit), np.int64)
         for s in range(0, len(unit), chunk):
-            out[s:s + chunk] = np.argmax(unit[s:s + chunk] @ self.centroids.T,
+            out[s:s + chunk] = np.argmax(unit[s:s + chunk] @ centroids.T,
                                          axis=1)
         return out
 
@@ -121,47 +156,163 @@ class IVFIndex(RetrievalBackend):
         # of the m smallest lists, so k results need at most this many probes
         self._size_cumsum = np.cumsum(np.sort(self.cluster_sizes))
 
-    def _min_probes(self, k: int) -> int:
-        need = min(k, int(self._size_cumsum[-1]) if len(self._size_cumsum) else 0)
+    def _min_probes(self, k: int, size_cumsum: np.ndarray,
+                    n_delta: int) -> int:
+        # the delta buffer is exact-scanned, so it supplies n_delta of the k
+        # candidates for free; the probe floor only covers the remainder
+        in_store = int(size_cumsum[-1]) if len(size_cumsum) else 0
+        need = min(max(k - n_delta, 0), in_store)
         if need <= 0:
             return 1
-        return int(np.searchsorted(self._size_cumsum, need) + 1)
+        return int(np.searchsorted(size_cumsum, need) + 1)
+
+    # -- streaming delta path ----------------------------------------------
+    @property
+    def n_clustered(self) -> int:
+        """Rows covered by the trained quantizer (the rest sit in the delta
+        side buffer)."""
+        return len(self.vectors) - len(self._delta_pos)
+
+    @property
+    def delta_rows(self) -> int:
+        return len(self._delta_pos)
+
+    def drift(self) -> float:
+        """Spill fraction: |delta buffer| / |clustered rows|."""
+        with self._mut:
+            return len(self._delta_pos) / max(self.n_clustered, 1)
+
+    def add(self, vectors: np.ndarray, ids: list | None = None) -> None:
+        """Append rows to the delta side buffer — O(delta), no rebuild.
+        Past ``spill_threshold`` the drift detector triggers a retrain per
+        ``retrain_mode`` (background by default)."""
+        v = np.atleast_2d(np.asarray(vectors, np.float32))
+        if not len(v):
+            return
+        with self._mut:
+            start = len(self.vectors)
+            self.vectors = np.concatenate([self.vectors, v]) if start else v.copy()
+            self.ids.extend(list(ids) if ids is not None
+                            else range(start, start + len(v)))
+            unit = v / np.maximum(np.linalg.norm(v, axis=1, keepdims=True), 1e-9)
+            self._delta_unit = np.concatenate([self._delta_unit, unit]) \
+                if len(self._delta_unit) else unit
+            self._delta_pos = np.concatenate(
+                [self._delta_pos, np.arange(start, start + len(v), dtype=np.int64)])
+            spill = len(self._delta_pos) / max(self.n_clustered, 1)
+        if spill > self.spill_threshold and self.retrain_mode != "off":
+            self.retrain(wait=self.retrain_mode == "sync")
+
+    def retrain(self, wait: bool = True) -> None:
+        """Fold the delta buffer into the quantizer: rebuild k-means +
+        inverted lists over the full corpus (same seed/params => identical
+        to a fresh build), then atomically swap stores.  ``wait=False``
+        runs in a daemon thread; searches keep using the old store + buffer
+        until the swap."""
+        if wait:
+            self._retrain()
+            return
+        with self._mut:
+            if self._retrain_queued:
+                return                          # one background retrain at a time
+            self._retrain_queued = True
+            t = threading.Thread(target=self._retrain, daemon=True,
+                                 name="ivf-retrain")
+            self._retrain_thread = t
+        t.start()
+
+    def _retrain(self) -> None:
+        with self._retrain_guard:
+            try:
+                with self._mut:
+                    vectors = self.vectors      # arrays are replaced, never
+                    n = len(vectors)            # resized: safe to read outside
+                if n == 0:
+                    return
+                unit = vectors / np.maximum(
+                    np.linalg.norm(vectors, axis=1, keepdims=True), 1e-9)
+                centroids, assign = self._train(unit)  # heavy part: unlocked
+                with self._mut:
+                    self.centroids, self.assign = centroids, assign
+                    self.n_clusters = len(centroids)
+                    if not self._nprobe_explicit:
+                        self.nprobe = int(nprobe_for_recall(self.n_clusters,
+                                                            self.recall_target))
+                    self._build_store(unit)
+                    keep = self._delta_pos >= n  # rows added mid-retrain stay
+                    self._delta_unit = self._delta_unit[keep]
+                    self._delta_pos = self._delta_pos[keep]
+                    self.retrains += 1
+            finally:
+                with self._mut:
+                    self._retrain_queued = False
+
+    def wait_retrain(self, timeout: float | None = None) -> None:
+        t = self._retrain_thread
+        if t is not None and t.is_alive():
+            t.join(timeout)
 
     # -- search ------------------------------------------------------------
-    def search(self, queries: np.ndarray, k: int, *, nprobe: int | None = None
-               ) -> tuple[np.ndarray, np.ndarray]:
+    def search(self, queries: np.ndarray, k: int, *, nprobe: int | None = None,
+               max_pos: int | None = None) -> tuple[np.ndarray, np.ndarray]:
+        """``max_pos`` bounds results to positions < max_pos (the snapshot
+        cutoff for version-pinned queries; see ``VectorIndex.search``)."""
         from repro.kernels import ops as kops
         q = np.atleast_2d(np.asarray(queries, np.float32))
         nq = len(q)
-        k = min(k, len(self))
+        with self._mut:   # consistent (store, delta) snapshot vs add/retrain
+            centroids, store = self.centroids, self.store
+            store_mask, store_ids = self.store_mask, self.store_ids
+            cluster_sizes, size_cumsum = self.cluster_sizes, self._size_cumsum
+            delta_unit, delta_pos = self._delta_unit, self._delta_pos
+            n_clusters, nprobe_default = self.n_clusters, self.nprobe
+            n_total = len(self.vectors)
+        nd = len(delta_pos)
+        k = min(k, n_total if max_pos is None else min(n_total, max_pos))
+        # only delta rows inside the snapshot cutoff count toward the probe
+        # floor: rows beyond it are filtered out of the top-k
+        nd_floor = nd if max_pos is None else int((delta_pos < max_pos).sum())
         if nq == 0:  # an upstream operator emptied the query side
             self.last_stats = {"index": self.kind, "scored_vectors": 0,
                                "probed_clusters": 0, "nprobe": 0,
-                               "n_clusters": int(self.n_clusters)}
+                               "n_clusters": int(n_clusters), "delta_rows": nd}
             return np.zeros((0, k), np.float32), np.zeros((0, k), np.int64)
-        nprobe_eff = min(max(nprobe or self.nprobe, self._min_probes(k)),
-                         self.n_clusters)
-        scores, probe_blocks = kops.ivf_search(
-            q, self.centroids, self.store, self.store_mask,
-            nprobe=nprobe_eff, block_q=self.block_q)
-        # candidate ids per block, broadcast to every query row in the block
-        cand_ids = self.store_ids[probe_blocks].reshape(len(probe_blocks), -1)
-        out_s, out_i = self._topk_unique(scores, cand_ids, k)
+        nprobe_eff = min(max(nprobe or nprobe_default,
+                             self._min_probes(k, size_cumsum, nd_floor)),
+                         n_clusters)
+        if nd:
+            scores, probe_blocks = kops.ivf_delta_search(
+                q, centroids, store, store_mask, delta_unit,
+                nprobe=nprobe_eff, block_q=self.block_q)
+        else:
+            scores, probe_blocks = kops.ivf_search(
+                q, centroids, store, store_mask,
+                nprobe=nprobe_eff, block_q=self.block_q)
+        # candidate ids per block: the probed clusters' rows (broadcast to
+        # every query row in the block) plus the delta buffer's positions
+        cand_ids = store_ids[probe_blocks].reshape(len(probe_blocks), -1)
+        if nd:
+            cand_ids = np.concatenate(
+                [cand_ids,
+                 np.broadcast_to(delta_pos, (len(probe_blocks), nd))], axis=1)
+        out_s, out_i = self._topk_unique(scores, cand_ids, k, max_pos=max_pos)
 
-        scored = 0
+        scored = nq * nd
         probed_unique = 0
         for b in range(len(probe_blocks)):
             real_q = min(nq - b * self.block_q, self.block_q)
             uniq = np.unique(probe_blocks[b])
             probed_unique += len(uniq)
-            scored += real_q * int(self.cluster_sizes[uniq].sum())
+            scored += real_q * int(cluster_sizes[uniq].sum())
         self.last_stats = {"index": self.kind, "scored_vectors": scored,
                            "probed_clusters": int(probed_unique),
                            "nprobe": int(nprobe_eff),
-                           "n_clusters": int(self.n_clusters)}
+                           "n_clusters": int(n_clusters),
+                           "delta_rows": nd, "delta_scored": nq * nd}
         return out_s, out_i
 
-    def _topk_unique(self, scores: np.ndarray, cand_ids: np.ndarray, k: int
+    def _topk_unique(self, scores: np.ndarray, cand_ids: np.ndarray, k: int,
+                     max_pos: int | None = None
                      ) -> tuple[np.ndarray, np.ndarray]:
         """Per-query top-k over the scanned candidates, deduplicating rows a
         block scanned more than once (identical scores, so dedup is safe).
@@ -170,13 +321,18 @@ class IVFIndex(RetrievalBackend):
         out_s = np.full((nq, k), MASKED_SCORE, np.float32)
         out_i = np.zeros((nq, k), np.int64)
         # a candidate id repeats at most block_q times (once per blockmate's
-        # probe list), so the top k*block_q scores are guaranteed to hold k
-        # unique ids — argpartition to that bound instead of sorting the
-        # whole slots*L row (which can exceed the corpus size)
+        # probe list; delta-buffer candidates appear exactly once), so the
+        # top k*block_q scores are guaranteed to hold k unique ids —
+        # argpartition to that bound instead of sorting the whole slots*L
+        # row (which can exceed the corpus size).  A max_pos cutoff
+        # invalidates an unbounded number of top candidates, so that (rare,
+        # race-window) path sorts the full row instead.
+        limit = np.inf if max_pos is None else max_pos
         for r in range(nq):
             row = scores[r]
             row_ids = cand_ids[r // self.block_q]
-            bound = min(len(row), k * self.block_q)
+            bound = len(row) if max_pos is not None \
+                else min(len(row), k * self.block_q)
             part = np.argpartition(-row, bound - 1)[:bound] \
                 if bound < len(row) else np.arange(len(row))
             order = part[np.argsort(-row[part], kind="stable")]
@@ -184,7 +340,7 @@ class IVFIndex(RetrievalBackend):
             c = 0
             for t in order:
                 i = int(row_ids[t])
-                if i < 0 or i in seen:
+                if i < 0 or i >= limit or i in seen:
                     continue
                 seen.add(i)
                 out_s[r, c] = row[t]
@@ -201,20 +357,28 @@ class IVFIndex(RetrievalBackend):
 
     def describe(self) -> dict:
         return {**super().describe(), "n_clusters": int(self.n_clusters),
-                "nprobe": int(self.nprobe), "block_q": self.block_q}
+                "nprobe": int(self.nprobe), "block_q": self.block_q,
+                "delta_rows": self.delta_rows, "retrains": self.retrains,
+                "spill_threshold": self.spill_threshold}
 
     # -- persistence -------------------------------------------------------
     def save(self, path: str) -> None:
         os.makedirs(path, exist_ok=True)
-        np.save(os.path.join(path, "vectors.npy"), self.vectors)
-        np.save(os.path.join(path, "centroids.npy"), self.centroids)
-        np.save(os.path.join(path, "assign.npy"), self.assign.astype(np.int32))
+        with self._mut:
+            vectors, ids = self.vectors, list(self.ids)
+            centroids, assign = self.centroids, self.assign
+            n_base = self.n_clustered
+        np.save(os.path.join(path, "vectors.npy"), vectors)
+        np.save(os.path.join(path, "centroids.npy"), centroids)
+        np.save(os.path.join(path, "assign.npy"), assign.astype(np.int32))
         with open(os.path.join(path, "meta.json"), "w") as f:
-            json.dump({"kind": self.kind, "ids": self.ids,
-                       "dim": int(self.vectors.shape[1]),
+            json.dump({"kind": self.kind, "ids": ids,
+                       "dim": int(vectors.shape[1]),
                        "n_clusters": int(self.n_clusters),
                        "nprobe": int(self.nprobe), "block_q": self.block_q,
-                       "seed": self.seed}, f)
+                       "seed": self.seed, "n_base": int(n_base),
+                       "spill_threshold": self.spill_threshold,
+                       "retrain": self.retrain_mode}, f)
 
     @classmethod
     def load(cls, path: str) -> "IVFIndex":
@@ -223,7 +387,15 @@ class IVFIndex(RetrievalBackend):
         assign = np.load(os.path.join(path, "assign.npy")).astype(np.int64)
         with open(os.path.join(path, "meta.json")) as f:
             meta = json.load(f)
-        return cls(vectors, meta["ids"], n_clusters=meta["n_clusters"],
-                   nprobe=meta["nprobe"], block_q=meta["block_q"],
-                   seed=meta.get("seed", 0), _centroids=centroids,
-                   _assign=assign)
+        n_base = meta.get("n_base", len(vectors))
+        idx = cls(vectors[:n_base], meta["ids"][:n_base],
+                  n_clusters=meta["n_clusters"], nprobe=meta["nprobe"],
+                  block_q=meta["block_q"], seed=meta.get("seed", 0),
+                  spill_threshold=meta.get("spill_threshold", 0.10),
+                  retrain=meta.get("retrain", "background"),
+                  _centroids=centroids, _assign=assign)
+        if n_base < len(vectors):  # restore the unmerged delta side buffer
+            mode, idx.retrain_mode = idx.retrain_mode, "off"
+            idx.add(vectors[n_base:], meta["ids"][n_base:])
+            idx.retrain_mode = mode
+        return idx

@@ -23,9 +23,17 @@ def _similarity(queries: np.ndarray, corpus: np.ndarray) -> np.ndarray:
 class VectorIndex(RetrievalBackend):
     kind = "exact"
 
-    def search(self, queries: np.ndarray, k: int) -> tuple[np.ndarray, np.ndarray]:
-        """-> (scores [nq, k], indices [nq, k]) by inner product."""
+    def search(self, queries: np.ndarray, k: int, *, max_pos: int | None = None
+               ) -> tuple[np.ndarray, np.ndarray]:
+        """-> (scores [nq, k], indices [nq, k]) by inner product.
+
+        ``max_pos`` bounds results to positions < max_pos — the snapshot
+        cutoff for version-pinned queries over a shared stream index that a
+        concurrent commit may have grown mid-query (positions are
+        append-ordered, so the cutoff is a prefix)."""
         sims = _similarity(np.asarray(queries, np.float32), self.vectors)
+        if max_pos is not None and max_pos < sims.shape[1]:
+            sims = sims[:, :max_pos]
         k = min(k, sims.shape[1])
         part = np.argpartition(-sims, k - 1, axis=1)[:, :k]
         psims = np.take_along_axis(sims, part, axis=1)

@@ -87,6 +87,30 @@ def ivf_search(queries, centroids, store, mask, *, nprobe: int,
     return np.asarray(s), np.asarray(p)
 
 
+def ivf_delta_search(queries, centroids, store, mask, delta_vectors, *,
+                     nprobe: int, block_q: int = 8, impl: str | None = None
+                     ) -> tuple[np.ndarray, np.ndarray]:
+    """Delta-aware IVF retrieval: the fused probed-cluster scan
+    (:func:`ivf_search` — Pallas on TPU) plus an exact scan of the streaming
+    delta side buffer, concatenated along the candidate axis.  The buffer is
+    small by construction (the drift detector retrains past the spill
+    threshold), so its exact scan rides the plain similarity kernel.
+
+    -> (scores [nq, block_q*nprobe*L + nd] f32, probe_blocks); jnp contract:
+    ``ref.ivf_delta_search_ref``."""
+    mode = _resolve(impl)
+    if mode == "ref":
+        s, p = ref.ivf_delta_search_ref(
+            jnp.asarray(queries), jnp.asarray(centroids), jnp.asarray(store),
+            jnp.asarray(mask), jnp.asarray(delta_vectors),
+            nprobe=nprobe, block_q=block_q)
+        return np.asarray(s), np.asarray(p)
+    s, p = ivf_search(queries, centroids, store, mask, nprobe=nprobe,
+                      block_q=block_q, impl=impl)
+    ds = similarity(queries, delta_vectors, normalize=True, impl=impl)
+    return np.concatenate([s, np.asarray(ds, np.float32)], axis=1), p
+
+
 def rmsnorm(x, scale, *, eps: float = 1e-5, impl: str | None = None, **kw):
     mode = _resolve(impl)
     if mode == "ref":

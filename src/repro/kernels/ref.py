@@ -116,6 +116,21 @@ def ivf_search_ref(queries, centroids, store, mask, *, nprobe: int,
     return scores[: len(queries)], probe_blocks
 
 
+def ivf_delta_search_ref(queries, centroids, store, mask, delta_vectors, *,
+                         nprobe: int, block_q: int = 8):
+    """Delta-aware IVF reference (`repro.kernels.ops.ivf_delta_search`): the
+    probed main-store scan of :func:`ivf_search_ref` with an *exact* scan of
+    the append-only delta side buffer concatenated along the candidate axis
+    — the numerics contract for ``IVFIndex.search`` after ``add()``.
+    ``delta_vectors`` are unit rows (the buffer's storage convention, same
+    as the store tiles) -> (scores [nq, slots*L + nd], probe_blocks)."""
+    s, probe_blocks = ivf_search_ref(queries, centroids, store, mask,
+                                     nprobe=nprobe, block_q=block_q)
+    q = _unitize(jnp.asarray(queries, jnp.float32))
+    ds = q @ jnp.asarray(delta_vectors, jnp.float32).T
+    return jnp.concatenate([s, ds], axis=1), probe_blocks
+
+
 def rmsnorm_ref(x, scale, *, eps: float = 1e-5):
     """x:[..., d], scale:[d] -> same shape; stats in f32."""
     xf = x.astype(jnp.float32)

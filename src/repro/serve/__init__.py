@@ -20,11 +20,18 @@ package makes *many concurrent* pipelines cheap by sharing work across them:
                    cache hit rate;
   * ``index_registry`` — :class:`IndexRegistry`, process-wide retrieval-index
                    sharing: concurrent sessions over the same corpus trigger
-                   exactly one embed+build (exact or IVF).
+                   exactly one embed+build (exact or IVF); streaming corpora
+                   use versioned keys (``get_or_update``) so an append
+                   embeds/indexes only the delta rows.
+
+Streaming corpora (``repro.stream.CorpusTable``) plug in through
+``Gateway.subscribe(pipeline)``: a continuous query re-executed on every
+table commit, with the shared cache keeping re-executions delta-only.
 
     gw = Gateway(session, max_inflight=4, cache_ttl_s=600)
     handles = [gw.submit(sf.lazy().sem_filter(...)) for sf in frames]
     rows = [h.result() for h in handles]
+    sub = gw.subscribe(table.lazy(session).sem_filter(...))
     print(gw.snapshot())
 """
 from repro.serve.dispatch import (DispatchedEmbedder, DispatchedModel,

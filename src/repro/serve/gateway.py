@@ -40,6 +40,7 @@ from repro.serve.session import (CANCELLED, DONE, EXPIRED, FAILED, RUNNING,
                                  ServeSession, SessionCancelled,
                                  SessionDeadlineExceeded)
 from repro.serve.store import SharedSemanticCache
+from repro.stream.continuous import Subscription, pin_stream_scans
 
 
 class AdmissionError(RuntimeError):
@@ -93,6 +94,7 @@ class Gateway:
         # handles, and wait_all() tracks only unresolved sessions
         self.sessions: deque[ServeSession] = deque(maxlen=history_limit)
         self._unresolved: dict[str, ServeSession] = {}
+        self._subscriptions: list[Subscription] = []
         self._workers = [threading.Thread(target=self._worker, daemon=True,
                                           name=f"gateway-worker-{i}")
                          for i in range(max_inflight)]
@@ -127,6 +129,38 @@ class Gateway:
             self.metrics.on_submit()
             self._cv.notify()
         return sess
+
+    def subscribe(self, pipeline, *, tenant: str = "default",
+                  optimize: bool = True, emit_initial: bool = True
+                  ) -> Subscription:
+        """Register a continuous query: re-execute ``pipeline`` (whose plan
+        must scan at least one ``CorpusTable``) on every table commit,
+        through the normal admission path.  Returns the
+        :class:`~repro.stream.continuous.Subscription` emission handle; the
+        shared semantic cache keeps re-executions delta-only (monotone ops
+        pay the oracle for new rows, cached judgments cover the rest)."""
+        plan = pipeline.plan if hasattr(pipeline, "plan") else pipeline
+        sub = Subscription(self, plan, tenant=tenant, optimize=optimize,
+                           emit_initial=emit_initial)
+        with self._cv:
+            closed = self._closed
+            if not closed:
+                self._subscriptions.append(sub)
+        if closed:
+            sub.cancel(wait=False)  # release the table listeners
+            raise RuntimeError("gateway is closed")
+        self.metrics.on_subscribe()
+        return sub.start()
+
+    def _discard_subscription(self, sub) -> None:
+        """Called by Subscription.cancel(): a cancelled subscription must
+        not stay referenced (plan + last result set) for the gateway's
+        lifetime."""
+        with self._cv:
+            try:
+                self._subscriptions.remove(sub)
+            except ValueError:
+                pass
 
     # -- scheduling --------------------------------------------------------
     def _pop_next(self) -> ServeSession | None:
@@ -198,7 +232,9 @@ class Gateway:
         try:
             with accounting.session_scope(sess.sid) as st:
                 sess.stats = st
-                plan = sess.plan
+                # pin floating StreamScans to the versions current NOW: one
+                # run never sees two versions even while writers commit
+                plan = pin_stream_scans(sess.plan)
                 if sess.optimize:
                     # the registry shares builds across sessions, so the
                     # optimizer may amortize IVF build cost over traffic
@@ -240,8 +276,20 @@ class Gateway:
         return snap
 
     def close(self) -> None:
+        # drain subscriptions BEFORE closing workers (in-flight runs still
+        # resolve), looping until none appear: a subscribe() racing close()
+        # either lands in the list (cancelled next pass) or observes
+        # _closed and cancels itself
+        while True:
+            with self._cv:
+                subs = list(self._subscriptions)
+                self._subscriptions.clear()
+                if not subs:
+                    self._closed = True
+                    break
+            for sub in subs:
+                sub.cancel(wait=True)
         with self._cv:
-            self._closed = True
             self._cv.notify_all()
         for w in self._workers:
             w.join(timeout=10.0)

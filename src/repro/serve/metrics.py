@@ -27,6 +27,9 @@ class GatewayMetrics:
         self.expired = 0
         self.rejected = 0
         self.rows_out = 0
+        self.subscriptions = 0    # continuous queries registered
+        self.emissions = 0        # continuous-query results emitted
+        self.emission_errors = 0
         # percentiles are computed over a sliding window so a long-lived
         # gateway's metrics stay O(1) in memory
         self.latencies: deque[float] = deque(maxlen=4096)
@@ -38,6 +41,16 @@ class GatewayMetrics:
     def on_reject(self) -> None:
         with self._lock:
             self.rejected += 1
+
+    def on_subscribe(self) -> None:
+        with self._lock:
+            self.subscriptions += 1
+
+    def on_emit(self, *, error: bool = False) -> None:
+        with self._lock:
+            self.emissions += 1
+            if error:
+                self.emission_errors += 1
 
     def on_finish(self, status: str, latency_s: float | None,
                   n_rows: int | None) -> None:
@@ -63,6 +76,9 @@ class GatewayMetrics:
                 "failed": self.failed, "cancelled": self.cancelled,
                 "expired": self.expired, "rejected": self.rejected,
                 "rows_out": self.rows_out,
+                "subscriptions": self.subscriptions,
+                "emissions": self.emissions,
+                "emission_errors": self.emission_errors,
                 "elapsed_s": round(elapsed, 4),
                 "throughput_rps": round(self.completed / elapsed, 4),
                 "p50_latency_s": round(float(np.percentile(lat, 50)), 4)

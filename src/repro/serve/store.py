@@ -16,7 +16,9 @@ Semantics:
   * **persistence** — optional append-only JSON-lines file, replayed on
     construction (last write wins; expired rows skipped).  Namespaces whose
     rows are not JSON-friendly (embeddings) stay memory-only via
-    ``persist_namespaces``;
+    ``persist_namespaces``; ``close()`` compacts the log (rewrites live
+    entries only) once dead lines — overwrites, evictions, expiries —
+    outnumber live ones, so the file stays bounded across runs;
   * **attribution** — each entry remembers the session that wrote it, so a
     hit by a *different* session is counted as a cross-query hit (the number
     the gateway reports as ``cross_query_hit_rate``).
@@ -54,6 +56,8 @@ class SharedSemanticCache:
         self.evictions = 0
         self.expirations = 0
         self.loaded = 0
+        self.compactions = 0
+        self._file_lines = 0      # lines in the log, live + dead
         self._fh = None
         if persist_path:
             self._load(persist_path)
@@ -69,6 +73,7 @@ class SharedSemanticCache:
                 line = line.strip()
                 if not line:
                     continue
+                self._file_lines += 1
                 try:
                     rec = json.loads(line)
                 except json.JSONDecodeError:
@@ -89,6 +94,48 @@ class SharedSemanticCache:
             return
         self._fh.write(json.dumps({"k": list(key), "v": row, "o": owner,
                                    "t": time.time()}) + "\n")
+        self._file_lines += 1
+
+    def _live_persistable(self) -> int:
+        """Entries a compacted log would keep (lock held): persistable
+        namespace, not expired."""
+        now = self.clock()
+        return sum(1 for k, ent in self._data.items()
+                   if k[0] in self.persist_namespaces
+                   and (self.ttl_s is None or now - ent[1] < self.ttl_s))
+
+    def compact(self) -> int:
+        """Rewrite the persistence log to live entries only (the append-only
+        log accumulates a dead line for every overwrite, eviction, and TTL
+        expiry — across long runs dead lines dominate and the file grows
+        without bound).  Atomic replace; returns the number of lines
+        dropped."""
+        with self._lock:
+            if self._fh is None or not self.persist_path:
+                return 0
+            self._fh.flush()
+            self._fh.close()
+            now_m, now_w = self.clock(), time.time()
+            tmp = self.persist_path + ".compact"
+            kept = 0
+            with open(tmp, "w", encoding="utf-8") as fh:
+                for key, (row, written, owner) in self._data.items():
+                    if key[0] not in self.persist_namespaces:
+                        continue
+                    if self.ttl_s is not None and now_m - written >= self.ttl_s:
+                        continue
+                    # recorded wall time preserves the entry's age for the
+                    # TTL replay on the next load
+                    fh.write(json.dumps(
+                        {"k": list(key), "v": row, "o": owner,
+                         "t": now_w - max(0.0, now_m - written)}) + "\n")
+                    kept += 1
+            os.replace(tmp, self.persist_path)
+            dropped = self._file_lines - kept
+            self._file_lines = kept
+            self.compactions += 1
+            self._fh = open(self.persist_path, "a", encoding="utf-8")
+            return dropped
 
     def flush(self) -> None:
         with self._lock:
@@ -96,6 +143,12 @@ class SharedSemanticCache:
                 self._fh.flush()
 
     def close(self) -> None:
+        with self._lock:
+            open_file = self._fh is not None
+            live = self._live_persistable() if open_file else 0
+            dead = self._file_lines - live
+        if open_file and dead > live:   # dead records dominate: rewrite
+            self.compact()
         with self._lock:
             if self._fh is not None:
                 self._fh.flush()
@@ -181,5 +234,6 @@ class SharedSemanticCache:
                 "hit_rate": self.hits / total if total else 0.0,
                 "cross_query_hit_rate": self.cross_hits / total if total else 0.0,
                 "evictions": self.evictions, "expirations": self.expirations,
-                "loaded": self.loaded,
+                "loaded": self.loaded, "persist_lines": self._file_lines,
+                "compactions": self.compactions,
             }
