@@ -10,9 +10,9 @@ import time
 
 from benchmarks import (engine_bench, fig6_filter_tradeoff, fig8_groupby,
                         fig9_guarantees, index_bench, kernels_bench,
-                        pipeline_bench, serve_bench, stream_bench,
-                        table2_factcheck, table3_biodex, table5_join_plans,
-                        table6_7_ranking)
+                        pipeline_bench, serve_bench, shard_bench,
+                        stream_bench, table2_factcheck, table3_biodex,
+                        table5_join_plans, table6_7_ranking)
 
 MODULES = {
     "table2": table2_factcheck,
@@ -26,6 +26,7 @@ MODULES = {
     "serve": serve_bench,
     "index": index_bench,
     "stream": stream_bench,
+    "shard": shard_bench,
     "engine": engine_bench,
     "kernels": kernels_bench,
 }

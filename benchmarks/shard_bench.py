@@ -1,0 +1,196 @@
+"""Partitioned-execution benchmark: device-sharded retrieval + fragment-
+parallel operator pipeline on a 50k-row corpus.
+
+Two sections:
+
+  * **sharded search** — exact top-10 over 50k rows, unsharded vs a
+    4-shard layout (``shard_map`` across devices when the process has them,
+    the jnp shard simulation otherwise — identical numerics either way).
+    The sharded scan must be result-identical (recall@10 = 1.0 >= 0.99)
+    while each device scores >= ~4x fewer vectors per query
+    (``scored_vectors_per_shard``) — the number that turns into wall-clock
+    on a real multi-chip mesh.
+
+  * **partitioned pipeline** — a guarantee-carrying cascade filter over the
+    same 50k rows, single-partition vs 4 fragments on a 4-worker pool.  The
+    oracle/proxy are wrapped with a per-prompt *service latency* (sleep, so
+    the GIL is released — modeling a remote LM endpoint whose replicas
+    serve fragments concurrently; the simulated model's own CPU work stays
+    serial under the GIL and is identical in both runs).  Records, cascade
+    thresholds, and the oracle bill must be identical; wall-clock must
+    improve.
+
+Writes ``BENCH_shard.json``.
+
+    PYTHONPATH=src [XLA_FLAGS=--xla_force_host_platform_device_count=4] \
+        python -m benchmarks.shard_bench
+"""
+import json
+import time
+
+import numpy as np
+
+from benchmarks._util import emit
+from repro.core.backends import synth
+from repro.core.frame import SemFrame, Session
+from repro.index.vector_index import VectorIndex
+
+N_CORPUS = 50_000
+N_QUERIES = 64
+K = 10
+SHARDS = 4
+N_PARTITIONS = 4
+FRAGMENT_WORKERS = 4
+PER_PROMPT_LATENCY_S = 1e-4     # modeled LM service time per prompt
+MIN_PER_SHARD_FACTOR = 3.0      # >= this x fewer vectors per device
+RECALL_FLOOR = 0.99
+
+
+def _clustered(n, d=32, n_centers=64, noise=0.18, seed=0):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(n_centers, d))
+    centers /= np.linalg.norm(centers, axis=1, keepdims=True)
+    lab = rng.integers(n_centers, size=n)
+    x = centers[lab] + noise * rng.normal(size=(n, d))
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    return np.asarray(x, np.float32), centers
+
+
+class ServiceLatencyModel:
+    """Backend wrapper adding a per-prompt service time.  ``sleep`` releases
+    the GIL, so concurrent fragments genuinely overlap — the bench's honest
+    stand-in for parallel LM replicas behind the oracle/proxy."""
+
+    def __init__(self, model, per_prompt_s: float):
+        self._m = model
+        self._s = per_prompt_s
+
+    def _wait(self, prompts):
+        time.sleep(len(prompts) * self._s)
+
+    def predicate(self, prompts):
+        self._wait(prompts)
+        return self._m.predicate(prompts)
+
+    def generate(self, prompts):
+        self._wait(prompts)
+        return self._m.generate(prompts)
+
+    def compare(self, prompts):
+        self._wait(prompts)
+        return self._m.compare(prompts)
+
+    def choose(self, prompts, n_options):
+        self._wait(prompts)
+        return self._m.choose(prompts, n_options)
+
+
+def _sharded_search_section(out: dict) -> None:
+    corpus, centers = _clustered(N_CORPUS)
+    rng = np.random.default_rng(99)
+    queries = np.asarray(
+        centers[rng.integers(len(centers), size=N_QUERIES)]
+        + 0.18 * rng.normal(size=(N_QUERIES, 32)), np.float32)
+
+    exact = VectorIndex(corpus)
+    t0 = time.monotonic()
+    _, exact_idx = exact.search(queries, K)
+    t_exact = time.monotonic() - t0
+    exact_scored = exact.last_stats["scored_vectors"]
+
+    sharded = VectorIndex(corpus, shards=SHARDS)
+    t0 = time.monotonic()
+    _, shard_idx = sharded.search(queries, K)
+    t_shard = time.monotonic() - t0
+    st = sharded.last_stats
+    recall = float(np.mean([len(set(exact_idx[i]) & set(shard_idx[i])) / K
+                            for i in range(N_QUERIES)]))
+    per_shard = st["scored_vectors_per_shard"]
+    factor = exact_scored / max(per_shard, 1)
+    emit("shard/search", 1e6 * t_shard / N_QUERIES,
+         shards=st["shards"], recall_at_10=round(recall, 4),
+         scored_vectors=st["scored_vectors"],
+         scored_vectors_per_shard=per_shard,
+         per_shard_factor=round(factor, 1),
+         wall_s_exact=round(t_exact, 3), wall_s_sharded=round(t_shard, 3))
+    out["sharded_search"] = {
+        "shards": st["shards"], "recall_at_10": round(recall, 4),
+        "scored_vectors": st["scored_vectors"],
+        "scored_vectors_per_shard": per_shard,
+        "per_shard_factor": round(factor, 2),
+        "wall_s_exact": round(t_exact, 4),
+        "wall_s_sharded": round(t_shard, 4),
+    }
+    assert recall >= RECALL_FLOOR, \
+        f"sharded recall@{K} {recall:.3f} < {RECALL_FLOOR}"
+    assert factor >= MIN_PER_SHARD_FACTOR, \
+        f"per-device scan only {factor:.1f}x smaller (need >= {MIN_PER_SHARD_FACTOR}x)"
+
+
+def _pipeline_section(out: dict) -> None:
+    records, world, *_ = synth.make_filter_world(N_CORPUS, positive_rate=0.3,
+                                                 seed=17)
+    synth.add_phrase_predicate(world, records, "is actionable", 0.25, seed=17)
+
+    def session():
+        return Session(
+            oracle=ServiceLatencyModel(synth.SimulatedModel(world, "oracle"),
+                                       PER_PROMPT_LATENCY_S),
+            proxy=ServiceLatencyModel(synth.SimulatedModel(world, "proxy"),
+                                      PER_PROMPT_LATENCY_S),
+            embedder=synth.SimulatedEmbedder(world), sample_size=100)
+
+    def pipeline(sf):
+        return sf.lazy().sem_filter("the {claim} is actionable",
+                                    recall_target=0.9, precision_target=0.9)
+
+    log_s, log_p = [], []
+    t0 = time.monotonic()
+    single = pipeline(SemFrame(records, session(), log_s)).collect()
+    t_single = time.monotonic() - t0
+
+    t0 = time.monotonic()
+    part = pipeline(SemFrame(records, session(), log_p)).collect(
+        n_partitions=N_PARTITIONS, fragment_workers=FRAGMENT_WORKERS)
+    t_part = time.monotonic() - t0
+
+    calls = lambda log, k: sum(st.get(k, 0) for st in log)
+    st_s = next(st for st in log_s if st["operator"] == "sem_filter")
+    st_p = next(st for st in log_p if st["operator"] == "sem_filter")
+    identical = part.records == single.records
+    same_tau = (st_p["tau_plus"] == st_s["tau_plus"]
+                and st_p["tau_minus"] == st_s["tau_minus"])
+    oracle_s, oracle_p = calls(log_s, "oracle_calls"), calls(log_p, "oracle_calls")
+    speedup = t_single / max(t_part, 1e-9)
+    emit("shard/pipeline", 1e6 * t_part / N_CORPUS,
+         n_partitions=N_PARTITIONS, identical=identical, same_tau=same_tau,
+         oracle_calls=oracle_p, speedup=round(speedup, 2),
+         wall_s_single=round(t_single, 3), wall_s_partitioned=round(t_part, 3))
+    out["partitioned_pipeline"] = {
+        "rows": N_CORPUS, "n_partitions": N_PARTITIONS,
+        "fragment_workers": FRAGMENT_WORKERS,
+        "latency_model_per_prompt_s": PER_PROMPT_LATENCY_S,
+        "records_identical": identical, "same_thresholds": same_tau,
+        "oracle_calls_single": oracle_s, "oracle_calls_partitioned": oracle_p,
+        "wall_s_single": round(t_single, 4),
+        "wall_s_partitioned": round(t_part, 4),
+        "speedup": round(speedup, 3),
+    }
+    assert identical, "partitioned pipeline diverged from single-partition"
+    assert same_tau, "partitioned cascade learned different thresholds"
+    assert oracle_p == oracle_s, \
+        f"partitioning changed the oracle bill ({oracle_p} vs {oracle_s})"
+    assert t_part < t_single, \
+        f"no wall-clock win ({t_part:.2f}s vs {t_single:.2f}s)"
+
+
+def run() -> None:
+    out: dict = {"corpus": N_CORPUS, "queries": N_QUERIES, "k": K}
+    _sharded_search_section(out)
+    _pipeline_section(out)
+    with open("BENCH_shard.json", "w") as fh:
+        json.dump(out, fh, indent=2)
+
+
+if __name__ == "__main__":
+    run()

@@ -12,6 +12,15 @@ Two nesting levels:
     serving gateway to report per-session totals while many sessions run
     concurrently (accounting state is thread-local, and each serve session
     executes on one worker thread).
+
+Partition fragments are the one place a single operator's model calls span
+threads: the partitioned executor captures the coordinating thread's
+(operator, session) stats with ``capture()`` and re-installs them on each
+fragment worker with ``activate()``, so per-partition calls roll up into the
+same operator block and the same serve session.  Because several fragments
+may then add into one shared OpStats concurrently, all cross-thread adds
+(``record()`` and the ``track()`` roll-up) serialize on one module lock —
+they are rare (per *batch*, not per prompt), so contention is noise.
 """
 from __future__ import annotations
 
@@ -21,6 +30,7 @@ import threading
 import time
 
 _ctx = threading.local()
+_add_lock = threading.Lock()  # guards adds into potentially shared OpStats
 
 
 @dataclasses.dataclass
@@ -68,11 +78,33 @@ def current_session() -> OpStats | None:
 
 def record(kind: str, n: int) -> None:
     st = current()
-    if st is not None:
-        st.add(kind, n)
     sess = current_session()
-    if sess is not None:
-        sess.add(kind, n)
+    if st is None and sess is None:
+        return
+    with _add_lock:
+        if st is not None:
+            st.add(kind, n)
+        if sess is not None:
+            sess.add(kind, n)
+
+
+def capture() -> tuple:
+    """Snapshot this thread's accounting context (operator + session stats)
+    for re-installation on a fragment worker thread."""
+    return (current(), current_session())
+
+
+@contextlib.contextmanager
+def activate(ctx: tuple):
+    """Install a captured context on the current thread (fragment workers);
+    restores the thread's own context on exit, so pooled threads never leak
+    one session's stats into the next."""
+    prev = (current(), current_session())
+    _ctx.stats, _ctx.session_stats = ctx
+    try:
+        yield
+    finally:
+        _ctx.stats, _ctx.session_stats = prev
 
 
 @contextlib.contextmanager
@@ -87,9 +119,11 @@ def track(operator: str):
         st.wall_s = time.monotonic() - t0
         _ctx.stats = prev
         if prev is not None:  # nested operators roll up into the parent
-            for kind in OpStats._KINDS:
-                prev.add(kind, getattr(st, "cache_hits" if kind == "cache_hit"
-                                       else f"{kind}_calls"))
+            with _add_lock:   # the parent may be shared across fragments
+                for kind in OpStats._KINDS:
+                    prev.add(kind,
+                             getattr(st, "cache_hits" if kind == "cache_hit"
+                                     else f"{kind}_calls"))
 
 
 @contextlib.contextmanager

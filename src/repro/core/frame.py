@@ -35,7 +35,7 @@ from repro.core.backends.base import CountedEmbedder, CountedModel
 from repro.core.langex import as_langex
 from repro.core.operators import search as _search
 from repro.core.plan import nodes as PN
-from repro.core.plan.execute import PlanExecutor
+from repro.core.plan.execute import PartitionedExecutor, PlanExecutor
 from repro.core.plan.optimize import PlanOptimizer, explain_plan, total_cost
 
 
@@ -285,16 +285,27 @@ class LazySemFrame:
     def _optimizer_and_executor(self, **opt_kw):
         """One (optimizer, executor) pair per frame+options: explain() and a
         later collect() share the BatchedModelCache, so selectivity probes
-        are paid once, not once per call."""
+        are paid once, not once per call.
+
+        ``n_partitions=`` opts into partition planning (fragments run
+        serially unless ``fragment_workers`` > 1 adds a private pool);
+        results are identical either way — partitioned execution preserves
+        single-partition outputs by construction."""
         key = tuple(sorted(opt_kw.items()))
         if self._exec_pair is not None and self._exec_pair[0] == key:
             return self._exec_pair[1], self._exec_pair[2]
+        if self._exec_pair is not None:  # new options: release the old
+            self._exec_pair[2].close(wait=False)  # executor's fragment pool
+        opt_kw = dict(opt_kw)
+        fragment_workers = opt_kw.pop("fragment_workers", 0)
         # the executor's "auto" index builds (join sim-prefilter) must obey
         # the same retrieval knobs the optimizer plans with
         exec_kw = {k: opt_kw[k] for k in ("recall_target", "index_min_corpus")
                    if k in opt_kw}
-        executor = PlanExecutor(self.session, stats_log=self.stats_log,
-                                use_cache=True, **exec_kw)
+        executor = PartitionedExecutor(self.session, stats_log=self.stats_log,
+                                       use_cache=True,
+                                       fragment_workers=fragment_workers,
+                                       **exec_kw)
         optimizer = PlanOptimizer(self.session, oracle=executor.oracle,
                                   proxy=executor.proxy,
                                   seed=self.session.seed, **opt_kw)

@@ -16,6 +16,8 @@ quality (§3.4).
 """
 from __future__ import annotations
 
+import threading
+
 import numpy as np
 
 from repro.core import accounting
@@ -35,7 +37,22 @@ def compare_prompt(lx, criteria_text, a, b) -> str:
 
 
 class _Comparator:
-    """Batched pairwise comparator with call accounting + cache."""
+    """Batched pairwise comparator with call accounting + cache.
+
+    ``batch`` dedups within the batch before prompting: a repeated ``(i, j)``
+    is asked once, and of a symmetric ``(i, j)`` / ``(j, i)`` pair only the
+    first-seen orientation reaches the model (the mirror is derived by
+    negation — asking both could sample *inconsistent* answers from a noisy
+    comparator, and every redundant prompt is a real model call).
+
+    Thread safety (one comparator is shared by the partitioned top-k's
+    concurrent fragments): cache lookups and writes are lock-guarded, but
+    the model call itself runs OUTSIDE the lock so fragments' compare
+    batches genuinely overlap.  Two fragments racing on the same pair may
+    both prompt it (the bounded stampede trade, as in BatchedModelCache);
+    each writes both orientations atomically under the lock, so the cache
+    can never hold an inconsistent (i,j)/(j,i) pair.
+    """
 
     def __init__(self, records, langex, model):
         self.lx = as_langex(langex)
@@ -43,18 +60,31 @@ class _Comparator:
         self.criteria = self.lx.template
         self.model = model
         self.cache: dict[tuple[int, int], bool] = {}
+        self._lock = threading.Lock()
 
     def batch(self, pairs: list[tuple[int, int]]) -> np.ndarray:
         """pairs (i, j) -> bool[i beats j]."""
-        todo = [(i, j) for i, j in pairs if (i, j) not in self.cache]
+        with self._lock:
+            todo: list[tuple[int, int]] = []
+            queued: set[tuple[int, int]] = set()
+            for i, j in pairs:
+                if (i, j) in self.cache or (i, j) in queued or (j, i) in queued:
+                    continue
+                queued.add((i, j))
+                todo.append((i, j))
         if todo:
-            prompts = [compare_prompt(self.lx, self.criteria, self.texts[i], self.texts[j])
+            prompts = [compare_prompt(self.lx, self.criteria,
+                                      self.texts[i], self.texts[j])
                        for i, j in todo]
-            wins = self.model.compare(prompts)
-            for (i, j), w in zip(todo, wins):
-                self.cache[(i, j)] = bool(w)
-                self.cache[(j, i)] = not bool(w)
-        return np.asarray([self.cache[p] for p in pairs], bool)
+            wins = self.model.compare(prompts)  # unlocked: fragments overlap
+            with self._lock:
+                for (i, j), w in zip(todo, wins):
+                    self.cache[(i, j)] = bool(w)
+                    self.cache[(j, i)] = not bool(w)
+        with self._lock:
+            # every requested pair is now either cached (possibly by a
+            # racing fragment) or was in our own todo
+            return np.asarray([self.cache[p] for p in pairs], bool)
 
 
 def _order_topk(cmp: _Comparator, idx: list[int]) -> list[int]:
@@ -69,6 +99,45 @@ def _order_topk(cmp: _Comparator, idx: list[int]) -> list[int]:
     return _order_topk(cmp, better) + [pivot] + _order_topk(cmp, worse)
 
 
+def _quickselect(cmp: _Comparator, candidates: list[int], k: int, rng,
+                 *, pivot_scores=None, pivot_eps: int = 2
+                 ) -> tuple[list[int], int]:
+    """Pivot-partitioning selection of the (unordered) top-``k`` of
+    ``candidates`` (global record indices) -> (top list, comparison rounds).
+    Shared by the single-partition operator and the per-partition / merge
+    phases of the partitioned one."""
+    candidates = list(candidates)
+    need = k
+    top: list[int] = []
+    rounds = 0
+    first = True
+    while candidates and need > 0:
+        if len(candidates) <= need:
+            top.extend(candidates)
+            break
+        if first and pivot_scores is not None:
+            order = np.argsort(-np.asarray(pivot_scores)[candidates])
+            pivot = candidates[order[min(need + pivot_eps - 1, len(candidates) - 1)]]
+        else:
+            pivot = candidates[rng.integers(len(candidates))]
+        first = False
+        rounds += 1
+        others = [i for i in candidates if i != pivot]
+        wins = cmp.batch([(i, pivot) for i in others])
+        better = [i for i, w in zip(others, wins) if w]
+        worse = [i for i, w in zip(others, wins) if not w]
+        if len(better) + 1 == need:      # pivot is exactly rank `need`
+            top.extend(better + [pivot])
+            break
+        if len(better) >= need:
+            candidates = better
+        else:
+            top.extend(better + [pivot])
+            need -= len(better) + 1
+            candidates = worse
+    return top, rounds
+
+
 def sem_topk_quickselect(records, langex, k, model, *, pivot_scores=None,
                          pivot_eps: int = 2, seed: int = 0
                          ) -> tuple[list[int], dict]:
@@ -80,37 +149,56 @@ def sem_topk_quickselect(records, langex, k, model, *, pivot_scores=None,
     with accounting.track("sem_topk") as st:
         cmp = _Comparator(records, langex, model)
         rng = np.random.default_rng(seed)
-        candidates = list(range(len(records)))
-        need = k
-        top: list[int] = []
-        rounds = 0
-        first = True
-        while candidates and need > 0:
-            if len(candidates) <= need:
-                top.extend(candidates)
-                break
-            if first and pivot_scores is not None:
-                order = np.argsort(-np.asarray(pivot_scores)[candidates])
-                pivot = candidates[order[min(need + pivot_eps - 1, len(candidates) - 1)]]
-            else:
-                pivot = candidates[rng.integers(len(candidates))]
-            first = False
-            rounds += 1
-            others = [i for i in candidates if i != pivot]
-            wins = cmp.batch([(i, pivot) for i in others])
-            better = [i for i, w in zip(others, wins) if w]
-            worse = [i for i, w in zip(others, wins) if not w]
-            if len(better) + 1 == need:      # pivot is exactly rank `need`
-                top.extend(better + [pivot])
-                break
-            if len(better) >= need:
-                candidates = better
-            else:
-                top.extend(better + [pivot])
-                need -= len(better) + 1
-                candidates = worse
+        top, rounds = _quickselect(cmp, list(range(len(records))), k, rng,
+                                   pivot_scores=pivot_scores,
+                                   pivot_eps=pivot_eps)
         ordered = _order_topk(cmp, top[:k] if len(top) >= k else top)
         st.details.update(rounds=rounds, pivot_guided=pivot_scores is not None)
+        return ordered[:k], st.as_dict()
+
+
+def sem_topk_partitioned(records, langex, k, model, partitions, *,
+                         pivot_scores=None, pivot_eps: int = 2, seed: int = 0,
+                         fragment_pool=None) -> tuple[list[int], dict]:
+    """Partition-parallel quickselect with a lossless global merge.
+
+    Each partition (a list of global record indices) runs quickselect for
+    its own top-``k`` — fragments share ONE :class:`_Comparator`, so any
+    pair judged twice (within a partition, then again during the merge) is
+    answered from the cache.  The merge quickselects the union of partition
+    winners: every true top-``k`` record beats its partition peers, so it is
+    its partition's local winner and reaches the merge — under a consistent
+    comparator the result is identical to the single-partition run's.
+    """
+    from repro.core.plan.parallel import run_fragments
+
+    with accounting.track("sem_topk") as st:
+        cmp = _Comparator(records, langex, model)
+
+        def select(pi, part):
+            def task():
+                with accounting.track(f"fragment[{pi}]") as fst:
+                    top, rounds = _quickselect(
+                        cmp, list(part), min(k, len(part)),
+                        np.random.default_rng((seed, pi)),
+                        pivot_scores=pivot_scores, pivot_eps=pivot_eps)
+                    fst.details.update(partition=pi, rows=len(part))
+                    return top, rounds
+            return task
+
+        results = run_fragments(fragment_pool,
+                                [select(pi, p) for pi, p in enumerate(partitions)])
+        merged = [i for top, _ in results for i in top]
+        top, merge_rounds = _quickselect(
+            cmp, merged, min(k, len(merged)),
+            np.random.default_rng((seed, len(partitions))),
+            pivot_scores=pivot_scores, pivot_eps=pivot_eps)
+        ordered = _order_topk(cmp, top[:k] if len(top) >= k else top)
+        st.details.update(
+            rounds=sum(r for _, r in results) + merge_rounds,
+            merge_rounds=merge_rounds, merge_candidates=len(merged),
+            n_partitions=len(partitions),
+            pivot_guided=pivot_scores is not None)
         return ordered[:k], st.as_dict()
 
 

@@ -22,9 +22,17 @@ Two storage modes:
 
 The wrapper is protocol-compatible with ``GenerativeModel``, so every
 operator implementation works against it unchanged.
+
+Thread safety: one wrapper may be hit concurrently by a partitioned
+operator's fragment threads, so the private LRU and the hit/miss counters
+are lock-guarded.  The backend call itself runs outside the lock — two
+fragments missing the same prompt may both pay it (the answers are
+identical; the duplicate is bounded by the race window), which is the
+standard cache-stampede trade against serializing all fragments.
 """
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 from typing import Sequence
 
@@ -43,6 +51,7 @@ class BatchedModelCache:
             if store is not None else ()
         self._requester = requester
         self._lru: OrderedDict[tuple, object] = OrderedDict()
+        self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
 
@@ -55,23 +64,25 @@ class BatchedModelCache:
         """-> [(found, row)] per key, from the shared store or the LRU."""
         if self._store is not None:
             return self._store.get_many(keys, requester=self._requester)
-        out = []
-        for key in keys:
-            if key in self._lru:
-                self._lru.move_to_end(key)
-                out.append((True, self._lru[key]))
-            else:
-                out.append((False, None))
-        return out
+        with self._lock:
+            out = []
+            for key in keys:
+                if key in self._lru:
+                    self._lru.move_to_end(key)
+                    out.append((True, self._lru[key]))
+                else:
+                    out.append((False, None))
+            return out
 
     def _insert(self, keys: list[tuple], rows: list) -> None:
         if self._store is not None:
             self._store.put_many(keys, rows, owner=self._requester)
             return
-        for key, row in zip(keys, rows):
-            self._lru[key] = row
-            if len(self._lru) > self.capacity:
-                self._lru.popitem(last=False)
+        with self._lock:
+            for key, row in zip(keys, rows):
+                self._lru[key] = row
+                if len(self._lru) > self.capacity:
+                    self._lru.popitem(last=False)
 
     def _through(self, kind: str, prompts: Sequence[str], call, *,
                  extra_key: tuple = ()):
@@ -99,8 +110,9 @@ class BatchedModelCache:
                 batch_rows[key] = row
             self._insert([k for k, _ in todo], list(rows))
         n_hit = len(prompts) - len(todo)
-        self.hits += n_hit
-        self.misses += len(todo)
+        with self._lock:
+            self.hits += n_hit
+            self.misses += len(todo)
         accounting.record("cache_hit", n_hit)
         return [batch_rows[k] for k in keys]
 

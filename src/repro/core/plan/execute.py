@@ -9,10 +9,19 @@ anywhere in the pipeline — including by the optimizer's selectivity probes —
 is never re-issued to the backend.  The eager ``SemFrame`` path builds the
 executor without the cache, which makes it call-for-call identical to the
 pre-plan-layer behavior.
+
+Partitioning: the base executor treats ``Partition``/``Exchange`` nodes as
+transparent wrappers (single-partition semantics — by the IR contract that
+fragmentation never changes results).  :class:`PartitionedExecutor` instead
+executes each Exchange-bounded region as fragments over row partitions with
+the guarantee-preserving merges of ``repro.core.plan.parallel`` — serially
+without a pool, concurrently on a fragment thread pool (its own, or one the
+serving gateway shares across sessions).
 """
 from __future__ import annotations
 
 import dataclasses
+from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
@@ -25,6 +34,7 @@ from repro.core.operators import mapex as _mapex
 from repro.core.operators import search as _search
 from repro.core.operators import topk as _topk
 from repro.core.plan import nodes as N
+from repro.core.plan import parallel
 from repro.core.plan.cache import BatchedModelCache
 from repro.index.backend import MASKED_SCORE
 
@@ -59,9 +69,13 @@ class PlanExecutor:
 
     # -- retrieval plumbing ------------------------------------------------
     def _build_index(self, texts: list[str], *, kind: str = "auto",
-                     nprobe: int | None = None, n_queries: int = 1):
+                     nprobe: int | None = None, n_queries: int = 1,
+                     shards: int | None = None):
         """Embed + index ``texts`` through the RetrievalBackend layer,
-        consulting the shared IndexRegistry when one is installed."""
+        consulting the shared IndexRegistry when one is installed.
+        ``shards`` (optimizer-installed device layout) becomes a build
+        param, so the registry keys sharded and unsharded builds of the
+        same corpus separately."""
         from repro.index.backend import IVF_MIN_CORPUS, choose_backend
         if kind == "auto":
             # a registry amortizes the IVF build across sessions; without
@@ -74,6 +88,8 @@ class PlanExecutor:
                 shared=self.index_registry is not None)
             nprobe = nprobe if nprobe is not None else auto_probe
         kw = {"nprobe": nprobe} if (kind == "ivf" and nprobe) else {}
+        if shards and shards > 1:
+            kw["shards"] = int(shards)
         if self.index_registry is None:
             return _search.sem_index(texts, self.embedder, index=kind, **kw)
         return self.index_registry.get_or_build(
@@ -83,7 +99,8 @@ class PlanExecutor:
 
     def _build_stream_index(self, scan: N.StreamScan, column: str,
                             n_corpus: int, *, kind: str = "auto",
-                            nprobe: int | None = None, n_queries: int = 1):
+                            nprobe: int | None = None, n_queries: int = 1,
+                            shards: int | None = None):
         """Version-aware index for a StreamScan corpus: the registry keys on
         (table id, embedder, config) instead of a content fingerprint, so an
         appends-only commit reuses the cached base index and embeds/indexes
@@ -108,6 +125,10 @@ class PlanExecutor:
             kw = {"nprobe": nprobe}
         else:
             kw = {"recall_target": self.recall_target}
+        if shards and shards > 1:
+            # shard layout is corpus-size-independent (device count), so it
+            # is safe in the versioned key — appends keep reusing the entry
+            kw["shards"] = int(shards)
 
         def builder(records):
             return _search.sem_index([str(t[column]) for t in records],
@@ -127,15 +148,19 @@ class PlanExecutor:
 
     def _corpus_index(self, child: N.LogicalNode, texts: list[str], column: str,
                       *, kind: str = "auto", nprobe: int | None = None,
-                      n_queries: int = 1):
+                      n_queries: int = 1, shards: int | None = None):
         """Executor delta routing: a StreamScan corpus under a registry goes
         through the versioned reuse path; everything else builds (or fetches
-        by content fingerprint) as before."""
+        by content fingerprint) as before.  ``child`` is unwrapped through
+        Partition/Exchange markers — fragmentation never changes what corpus
+        an index covers."""
+        child = N.plain(child)
         if self.index_registry is not None and isinstance(child, N.StreamScan):
             return self._build_stream_index(child, column, len(texts), kind=kind,
-                                            nprobe=nprobe, n_queries=n_queries)
+                                            nprobe=nprobe, n_queries=n_queries,
+                                            shards=shards)
         return self._build_index(texts, kind=kind, nprobe=nprobe,
-                                 n_queries=n_queries)
+                                 n_queries=n_queries, shards=shards)
 
     # -- plumbing ---------------------------------------------------------
     def _log(self, stats: dict) -> dict:
@@ -168,6 +193,17 @@ class PlanExecutor:
     def _run_streamscan(self, node: N.StreamScan) -> list[dict]:
         # pinned version -> reproducible snapshot; floating -> current rows
         return node.records
+
+    # -- partition boundaries ----------------------------------------------
+    # Partition/Exchange are semantically transparent by IR contract, so the
+    # base executor runs them single-partition (identical results); the
+    # PartitionedExecutor subclass overrides _run_exchange with real
+    # fragment-parallel execution.
+    def _run_partition(self, node: N.Partition) -> list[dict]:
+        return self.run(node.child)
+
+    def _run_exchange(self, node: N.Exchange) -> list[dict]:
+        return self.run(node.child)
 
     # -- filter ------------------------------------------------------------
     def _run_filter(self, node: N.Filter) -> list[dict]:
@@ -335,10 +371,11 @@ class PlanExecutor:
         recs = self.run(node.child)
         index = node.index or self._corpus_index(
             node.child, [str(t[node.column]) for t in recs], node.column,
-            kind=node.index_kind, nprobe=node.nprobe)
+            kind=node.index_kind, nprobe=node.nprobe, shards=node.shards)
         # a shared stream index can be ahead of this run's pinned snapshot
         # (a commit landed mid-query): bound hits to the snapshot's rows
-        cutoff = len(recs) if isinstance(node.child, N.StreamScan) else None
+        cutoff = len(recs) \
+            if isinstance(N.plain(node.child), N.StreamScan) else None
         hits, stats = _search.sem_search(
             index, node.query, self.embedder, k=node.k, n_rerank=node.n_rerank,
             rerank_model=self.oracle if node.n_rerank else None,
@@ -352,12 +389,17 @@ class PlanExecutor:
         index = self._corpus_index(node.right,
                                    [str(t[node.right_col]) for t in right],
                                    node.right_col, kind=node.index_kind,
-                                   nprobe=node.nprobe, n_queries=len(left))
-        cutoff = len(right) if isinstance(node.right, N.StreamScan) else None
+                                   nprobe=node.nprobe, n_queries=len(left),
+                                   shards=node.shards)
+        cutoff = len(right) \
+            if isinstance(N.plain(node.right), N.StreamScan) else None
         scores, idx, stats = _search.sem_sim_join(
             [str(t[node.left_col]) for t in left], index, self.embedder,
             k=node.k, max_pos=cutoff)
         self._log(stats)
+        return self._simjoin_rows(left, right, scores, idx)
+
+    def _simjoin_rows(self, left, right, scores, idx) -> list[dict]:
         out = []
         for i, t in enumerate(left):
             for rank in range(idx.shape[1]):
@@ -367,3 +409,310 @@ class PlanExecutor:
                 out.append({**t, **{f"right_{kk}": v for kk, v in right[j].items()},
                             "sim_score": float(scores[i, rank])})
         return out
+
+
+class PartitionedExecutor(PlanExecutor):
+    """PlanExecutor that actually runs Exchange-bounded plan fragments.
+
+    ``_run_exchange`` dispatches the merged operator to its partitioned
+    implementation (``repro.core.plan.parallel`` / ``sem_topk_partitioned``)
+    over the row partitions declared by the Partition node below it.  Every
+    merge preserves the single-partition output — gold ops are row- or
+    pair-tiled with unchanged prompts, cascades calibrate on one global
+    importance sample, agg fragments align to reduction-tree subtrees, and
+    top-k merges partition winners losslessly through a shared comparator —
+    so a partitioned plan returns exactly what the base executor would.
+
+    Fragments run serially without a pool, or concurrently on
+    ``fragment_pool`` (the serving gateway shares one across sessions;
+    ``fragment_workers`` > 1 instead creates a private pool — ``close()``
+    releases it).  ``fragments_run`` / ``partitioned_ops`` feed the
+    gateway's per-session metrics.
+    """
+
+    def __init__(self, session, *, fragment_pool=None,
+                 fragment_workers: int = 0, **kw):
+        super().__init__(session, **kw)
+        self._own_pool = None
+        if fragment_pool is None and fragment_workers > 1:
+            fragment_pool = self._own_pool = ThreadPoolExecutor(
+                max_workers=fragment_workers, thread_name_prefix="plan-frag")
+        self._pool = fragment_pool
+        self.fragments_run = 0
+        self.partitioned_ops = 0
+
+    def close(self, *, wait: bool = True) -> None:
+        if self._own_pool is not None:
+            self._own_pool.shutdown(wait=wait)
+            self._own_pool = None
+            self._pool = None
+
+    def __del__(self):  # GC backstop for private pools; close() is the API
+        try:
+            self.close(wait=False)
+        except Exception:  # pragma: no cover - interpreter shutdown
+            pass
+
+    def _count(self, n_fragments: int) -> None:
+        self.fragments_run += n_fragments
+        self.partitioned_ops += 1
+
+    # -- dispatch ----------------------------------------------------------
+    def _run_exchange(self, node: N.Exchange) -> list[dict]:
+        if node.kind == "broadcast":
+            # replication marker: rows are unchanged, distribution is the
+            # consuming operator's business
+            return self.run(node.child)
+        child = node.child
+        handler = {
+            N.Filter: self._part_filter, N.Map: self._part_map,
+            N.FusedMap: self._part_fusedmap, N.Extract: self._part_extract,
+            N.TopK: self._part_topk, N.Agg: self._part_agg,
+            N.Join: self._part_join, N.SimJoin: self._part_simjoin,
+        }.get(type(child))
+        if handler is None or not isinstance(self._part_source(child),
+                                             N.Partition):
+            return self.run(child)  # nothing partitioned below: fall through
+        return handler(child)
+
+    @staticmethod
+    def _part_source(node) -> N.LogicalNode:
+        """The child slot the optimizer partitions for this operator."""
+        return node.left if isinstance(node, (N.Join, N.SimJoin)) else node.child
+
+    def _split(self, records, part: N.Partition, *, fanout: int = 8):
+        return parallel.split_partitions(records, part, fanout=fanout)
+
+    # -- row-parallel family -----------------------------------------------
+    def _part_filter(self, node: N.Filter) -> list[dict]:
+        part = node.child
+        recs = self.run(part.child)
+        parts = self._split(recs, part)
+        if not node.is_cascade:
+            mask, stats = parallel.sem_filter_gold_partitioned(
+                recs, node.langex, self.oracle, parts, self._pool)
+        else:
+            if self.proxy is None:
+                raise ValueError(
+                    "optimized sem_filter needs a proxy model in the Session")
+            mask, stats = parallel.sem_filter_cascade_partitioned(
+                recs, node.langex, self.oracle, self.proxy, parts, self._pool,
+                **self._targets(node))
+        self._count(len(parts))
+        self._log(stats)
+        return [t for t, m in zip(recs, mask) if m]
+
+    def _part_map(self, node: N.Map) -> list[dict]:
+        part = node.child
+        recs = self.run(part.child)
+        parts = self._split(recs, part)
+
+        def frag(idx):
+            texts, _ = _mapex.sem_map([recs[i] for i in idx], node.langex,
+                                      self.oracle)
+            return texts
+
+        texts, stats = parallel.rows_partitioned("sem_map", parts, self._pool,
+                                                 frag)
+        self._count(len(parts))
+        self._log(stats)
+        return [{**t, node.out_column: x} for t, x in zip(recs, texts)]
+
+    def _part_fusedmap(self, node: N.FusedMap) -> list[dict]:
+        part = node.child
+        recs = self.run(part.child)
+        parts = self._split(recs, part)
+
+        def frag(idx):
+            columns, _ = _mapex.sem_map_fused([recs[i] for i in idx],
+                                              node.langexes, self.oracle)
+            return list(zip(*columns))  # per-row tuples across out columns
+
+        rows, stats = parallel.rows_partitioned("sem_map_fused", parts,
+                                                self._pool, frag)
+        self._count(len(parts))
+        self._log(stats)
+        return [{**t, **dict(zip(node.out_columns, row))}
+                for t, row in zip(recs, rows)]
+
+    def _part_extract(self, node: N.Extract) -> list[dict]:
+        part = node.child
+        recs = self.run(part.child)
+        parts = self._split(recs, part)
+
+        def frag(idx):
+            texts, _ = _mapex.sem_extract([recs[i] for i in idx], node.langex,
+                                          self.oracle,
+                                          source_field=node.source_field)
+            return texts
+
+        texts, stats = parallel.rows_partitioned("sem_extract", parts,
+                                                 self._pool, frag)
+        self._count(len(parts))
+        self._log(stats)
+        return [{**t, node.out_column: x} for t, x in zip(recs, texts)]
+
+    # -- top-k ---------------------------------------------------------------
+    def _part_topk(self, node: N.TopK) -> list[dict]:
+        part = node.child
+        recs = self.run(part.child)
+        parts = self._split(recs, part)
+        s = self.session
+        pivot_scores = None
+        if node.pivot_query is not None and self.embedder is not None:
+            index = self._build_index([node.langex.render(t) for t in recs],
+                                      kind="exact")
+            qv = self.embedder.embed([node.pivot_query])
+            pivot_scores = index.pairwise(qv)[0]
+        idx, stats = _topk.sem_topk_partitioned(
+            recs, node.langex, node.k, self.oracle,
+            [list(map(int, p)) for p in parts], pivot_scores=pivot_scores,
+            seed=s.seed, fragment_pool=self._pool)
+        self._count(len(parts))
+        self._log(stats)
+        return [recs[i] for i in idx]
+
+    # -- agg -----------------------------------------------------------------
+    def _part_agg(self, node: N.Agg) -> list[dict]:
+        part = node.child
+        recs = self.run(part.child)
+        if node.group_by is not None:
+            parts = self._split(recs, part)
+            rows, stats_list = parallel.sem_agg_groupby_partitioned(
+                recs, node.langex, self.oracle, node.group_by, parts,
+                self._pool, fanout=node.fanout, out_column=node.out_column)
+            self._count(len(parts))
+            for stats in stats_list:
+                self._log(stats)
+            return rows
+        parts = self._split(recs, part, fanout=node.fanout)
+        answer, stats = parallel.sem_agg_partitioned(
+            recs, node.langex, self.oracle, parts, self._pool,
+            fanout=node.fanout)
+        self._count(len(parts))
+        self._log(stats)
+        return [{node.out_column: answer}]
+
+    # -- join ----------------------------------------------------------------
+    def _part_join(self, node: N.Join) -> list[dict]:
+        lpart = node.left
+        left = self.run(lpart.child)
+        lparts = self._split(left, lpart)
+        if isinstance(node.right, N.Partition):      # repartition grid
+            right = self.run(node.right.child)
+            rparts = self._split(right, node.right)
+            exchange = "repartition"
+        else:                                        # broadcast right
+            right = self.run(node.right)
+            rparts = [np.arange(len(right))]
+            exchange = "broadcast"
+        if node.prefilter_k:
+            mask, stats = self._join_prefiltered_partitioned(
+                node, left, right, lparts)
+            n_frag = len(lparts)
+        else:
+            mask, stats = parallel.sem_join_gold_partitioned(
+                left, right, node.langex, self.oracle, lparts, rparts,
+                self._pool, exchange=exchange)
+            n_frag = len(lparts) * len(rparts)
+        self._count(n_frag)
+        self._log(stats)
+        out = []
+        n1, n2 = mask.shape
+        for i in range(n1):
+            for j in range(n2):
+                if mask[i, j]:
+                    out.append({**left[i],
+                                **{f"right_{k}": v for k, v in right[j].items()}})
+        return out
+
+    def _join_prefiltered_partitioned(self, node: N.Join, left, right, lparts):
+        """The optimizer-injected sim-prefilter join, fragment-parallel over
+        left partitions: the right index is built once (registry-shared) and
+        broadcast; each fragment embeds its probe rows, retrieves top-k
+        candidates, and oracles its candidate pairs."""
+        lx = node.langex
+        with accounting.track("sem_join_prefiltered") as st:
+            n1, n2 = len(left), len(right)
+            k = min(node.prefilter_k, n2)
+            lfields = [f for f in lx.fields if f.side != "right"]
+            rfields = [f for f in lx.fields if f.side == "right"]
+            right_index = self._build_index(
+                _join._render_side(right, rfields), n_queries=n1)
+            rendered_left = _join._render_side(left, lfields)
+
+            def frag(pi, lidx):
+                def task():
+                    with accounting.track(f"fragment[{pi}]"):
+                        emb = self.embedder.embed(
+                            [rendered_left[int(i)] for i in lidx])
+                        _, cand = right_index.search(emb, k)
+                        pairs = [(int(i), int(j))
+                                 for i, row in zip(lidx, cand) for j in row]
+                        passed, _ = self.oracle.predicate(
+                            _join._pair_prompts(lx, left, right, pairs))
+                        return pairs, passed, dict(right_index.last_stats)
+                return task
+
+            results = parallel.run_fragments(
+                self._pool, [frag(pi, lidx) for pi, lidx in enumerate(lparts)])
+            mask = np.zeros((n1, n2), bool)
+            n_pairs = 0
+            scored = probed = 0
+            for pairs, passed, idx_stats in results:
+                n_pairs += len(pairs)
+                scored += idx_stats.get("scored_vectors", 0)
+                probed += idx_stats.get("probed_clusters", 0)
+                for (i, j), p in zip(pairs, passed):
+                    mask[i, j] = p
+            st.details.update(prefilter_k=k, candidate_pairs=n_pairs,
+                              pruned_pairs=n1 * n2 - n_pairs,
+                              index=right_index.kind,
+                              index_scored_vectors=scored,
+                              index_probed_clusters=probed,
+                              n_partitions=len(lparts),
+                              exchange="broadcast")
+            return mask, st.as_dict()
+
+    # -- sim-join ------------------------------------------------------------
+    def _part_simjoin(self, node: N.SimJoin) -> list[dict]:
+        lpart = node.left
+        left = self.run(lpart.child)
+        lparts = self._split(left, lpart)
+        right = self.run(node.right)  # broadcast marker or plain child
+        index = self._corpus_index(node.right,
+                                   [str(t[node.right_col]) for t in right],
+                                   node.right_col, kind=node.index_kind,
+                                   nprobe=node.nprobe, n_queries=len(left),
+                                   shards=node.shards)
+        cutoff = len(right) \
+            if isinstance(N.plain(node.right), N.StreamScan) else None
+        left_texts = [str(t[node.left_col]) for t in left]
+        with accounting.track("sem_sim_join") as st:
+            def frag(pi, lidx):
+                def task():
+                    with accounting.track(f"fragment[{pi}]"):
+                        scores, jdx, _ = _search.sem_sim_join(
+                            [left_texts[int(i)] for i in lidx], index,
+                            self.embedder, k=node.k, max_pos=cutoff)
+                        return scores, jdx, dict(index.last_stats)
+                return task
+
+            results = parallel.run_fragments(
+                self._pool, [frag(pi, lidx) for pi, lidx in enumerate(lparts)])
+            width = max((r[1].shape[1] for r in results), default=node.k)
+            scores = np.full((len(left), width), MASKED_SCORE, np.float32)
+            idx = np.zeros((len(left), width), np.int64)
+            scored = probed = 0
+            for lidx, (s, j, idx_stats) in zip(lparts, results):
+                scores[lidx, :s.shape[1]] = s
+                idx[lidx, :j.shape[1]] = j
+                scored += idx_stats.get("scored_vectors", 0)
+                probed += idx_stats.get("probed_clusters", 0)
+            st.details.update(index=index.kind, scored_vectors=scored,
+                              probed_clusters=probed,
+                              n_partitions=len(lparts))
+            stats = st.as_dict()
+        self._count(len(lparts))
+        self._log(stats)
+        return self._simjoin_rows(left, right, scores, idx)

@@ -78,6 +78,75 @@ class StreamScan(LogicalNode):
 
 
 @dataclasses.dataclass
+class Partition(LogicalNode):
+    """Fragment source: split the child's rows into ``n_partitions``.
+
+    Strategies:
+      * ``contiguous`` — near-equal contiguous row ranges (the row-parallel
+        default; order-preserving, so a gather is a plain concat);
+      * ``subtree``    — contiguous ranges aligned to the consuming Agg's
+        reduction-tree boundaries (``fanout ** (depth-1)`` leaves per
+        partition), which makes the partition-local reduce subtrees exactly
+        the root's child subtrees — record-identical by construction;
+      * ``hash``       — rows keyed by ``key`` hash to a partition, so every
+        group of a group-by lands whole in one fragment;
+      * ``range``      — rows sorted by ``key`` then cut into contiguous
+        runs (order statistics stay partition-local).
+
+    Semantically transparent: an executor that ignores partitioning may run
+    the child unsplit and produce identical results.
+    """
+
+    child: LogicalNode
+    n_partitions: int
+    strategy: str = "contiguous"
+    key: str | None = None
+
+    def columns(self) -> set[str]:
+        return self.child.columns()
+
+    def label(self) -> str:
+        key = f", key={self.key}" if self.key else ""
+        return f"Partition[{self.strategy}, P={self.n_partitions}{key}]"
+
+
+@dataclasses.dataclass
+class Exchange(LogicalNode):
+    """Data-movement boundary between plan fragments.
+
+    ``kind`` is the exchange the boundary performs:
+      * ``gather``    — merge fragment outputs back into one stream (concat
+        for row-parallel operators; operator-specific lossless merges for
+        top-k / hierarchical aggregation);
+      * ``broadcast`` — replicate the child to every fragment of the
+        consuming operator (the small side of a join, a shared right-side
+        retrieval index);
+      * ``hash`` / ``range`` — repartition rows by key between fragments.
+
+    Like :class:`Partition`, a partition-unaware executor may treat it as a
+    no-op wrapper — the plan's results do not depend on fragmentation.
+    """
+
+    child: LogicalNode
+    kind: str = "gather"
+    n_partitions: int = 1
+
+    def columns(self) -> set[str]:
+        return self.child.columns()
+
+    def label(self) -> str:
+        return f"Exchange[{self.kind}, P={self.n_partitions}]"
+
+
+def plain(node: LogicalNode) -> LogicalNode:
+    """Strip Partition/Exchange wrappers (the underlying data-defining node:
+    what corpus identity, stream-scan checks, and schema logic care about)."""
+    while isinstance(node, (Partition, Exchange)):
+        node = node.child
+    return node
+
+
+@dataclasses.dataclass
 class Filter(LogicalNode):
     child: LogicalNode
     langex: Langex
@@ -241,10 +310,15 @@ class Extract(LogicalNode):
         return f"Extract[{self.source_field}->{self.out_column}] {self.langex.template!r}"
 
 
-def _index_tag(index_kind: str, nprobe) -> str:
+def _index_tag(index_kind: str, nprobe, shards=None) -> str:
+    out = ""
     if index_kind == "ivf":
-        return f", ivf(nprobe={nprobe})" if nprobe else ", ivf"
-    return f", {index_kind}" if index_kind != "auto" else ""
+        out = f", ivf(nprobe={nprobe})" if nprobe else ", ivf"
+    elif index_kind != "auto":
+        out = f", {index_kind}"
+    if shards:
+        out += f", shards={shards}"
+    return out
 
 
 @dataclasses.dataclass
@@ -258,12 +332,14 @@ class Search(LogicalNode):
     index: Any = None
     index_kind: str = "auto"   # "exact" | "ivf" | "auto" (optimizer decides)
     nprobe: int | None = None  # IVF recall knob, installed by the optimizer
+    shards: int | None = None  # device-shard layout, installed by the optimizer
 
     def columns(self) -> set[str]:
         return self.child.columns()
 
     def label(self) -> str:
-        return (f"Search[k={self.k}{_index_tag(self.index_kind, self.nprobe)}] "
+        return (f"Search[k={self.k}"
+                f"{_index_tag(self.index_kind, self.nprobe, self.shards)}] "
                 f"{self.column}~{self.query!r}")
 
 
@@ -276,11 +352,13 @@ class SimJoin(LogicalNode):
     k: int = 1
     index_kind: str = "auto"
     nprobe: int | None = None
+    shards: int | None = None
 
     def columns(self) -> set[str]:
         return (self.left.columns()
                 | {f"right_{c}" for c in self.right.columns()} | {"sim_score"})
 
     def label(self) -> str:
-        return (f"SimJoin[k={self.k}{_index_tag(self.index_kind, self.nprobe)}] "
+        return (f"SimJoin[k={self.k}"
+                f"{_index_tag(self.index_kind, self.nprobe, self.shards)}] "
                 f"{self.left_col}~{self.right_col}")

@@ -32,9 +32,32 @@ smaller bill and only fire when the cost model says so):
                                 the optimizer's ``recall_target``; the choice
                                 (and the IVF ``nprobe`` knob) is installed on
                                 the node and shows up in ``explain_plan``.
+  6. ``plan_partitions``      — with ``n_partitions`` set, operators over
+                                enough rows are cut into Exchange-bounded
+                                fragments (``nodes.Partition`` below,
+                                ``nodes.Exchange`` above) with a per-operator
+                                strategy: Filter/Map/FusedMap/Extract are
+                                row-parallel (contiguous partitions, gather
+                                concat), TopK runs per-partition select +
+                                lossless merge, Agg reduces subtree-aligned
+                                partitions (hash partitions on the group key
+                                for group-bys), and a gold Join either
+                                broadcasts a small right side to left
+                                fragments or repartitions both sides into a
+                                fragment grid (cost: right-side cardinality
+                                vs ``broadcast_max_rows``).  Cascades keep
+                                their one *global* importance sample, so
+                                thresholds — and therefore guarantees — are
+                                unchanged (see ``plan.parallel``).  The same
+                                rule installs the device-shard layout on
+                                Search/SimJoin corpora (``shards``; exact and
+                                IVF scans run shard_map-distributed when the
+                                process has devices and the corpus clears
+                                ``shard_min_corpus``).
 
 ``explain_plan`` renders a plan tree with per-node cardinality and
-oracle-call estimates; ``LazySemFrame.explain()`` shows before/after plus
+oracle-call estimates (plus, on Exchange boundaries, the partition count and
+per-fragment cost share); ``LazySemFrame.explain()`` shows before/after plus
 the applied rewrite list.
 """
 from __future__ import annotations
@@ -48,7 +71,9 @@ import numpy as np
 from repro.core.operators.filter import predicate_prompt
 from repro.core.optimizer import stats
 from repro.core.plan import nodes as N
-from repro.index.backend import IVF_MIN_CORPUS, choose_backend, retrieval_costs
+from repro.index.backend import (IVF_MIN_CORPUS, SHARD_MIN_CORPUS,
+                                 choose_backend, choose_shards,
+                                 retrieval_costs)
 
 # per-tuple oracle-equivalent unit costs (cascades mostly pay the proxy)
 GOLD_FILTER_COST = 1.0
@@ -58,6 +83,14 @@ DEFAULT_FILTER_SEL = 0.5
 DEFAULT_JOIN_SEL = 0.05
 
 _RIGHT_FIELD_RE = re.compile(r"\{right_([^{}:]+)\}")
+
+
+def _device_count() -> int:
+    """Device probe via the kernels dispatch helper (one definition of
+    device resolution), imported lazily — plan logic must not force jax
+    init on import."""
+    from repro.kernels.ops import _n_devices
+    return _n_devices()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,9 +166,14 @@ def total_cost(node: N.LogicalNode) -> float:
 
 
 def explain_plan(node: N.LogicalNode, *, indent: str = "") -> str:
+    extra = ""
+    if isinstance(node, N.Exchange) and node.n_partitions > 1:
+        # cost share of one fragment at this boundary (the merged operator's
+        # own bill split across partitions)
+        extra = f", frag_oracle~{estimate_cost(node.child) / node.n_partitions:.0f}"
     out = [f"{indent}{node.label()}  "
            f"(rows~{estimate_cardinality(node):.0f}, "
-           f"oracle~{estimate_cost(node):.0f})"]
+           f"oracle~{estimate_cost(node):.0f}{extra})"]
     for c in node.children():
         out.append(explain_plan(c, indent=indent + "  "))
     return "\n".join(out)
@@ -151,7 +189,12 @@ class PlanOptimizer:
                  seed: int = 0, prefilter_threshold: int = 20_000,
                  prefilter_frac: float = 0.25, recall_target: float = 0.95,
                  index_min_corpus: int = IVF_MIN_CORPUS,
-                 index_shared: bool = False):
+                 index_shared: bool = False,
+                 n_partitions: int | None = None,
+                 partition_min_rows: int = 32,
+                 broadcast_max_rows: int = 2048,
+                 shards: int | str | None = "auto",
+                 shard_min_corpus: int = SHARD_MIN_CORPUS):
         self.session = session
         # probe through the executor's cache so sample labels are reused
         self.oracle = oracle if oracle is not None else session.oracle
@@ -166,6 +209,16 @@ class PlanOptimizer:
         # serving gateway sets it): the cost model then amortizes the IVF
         # build over serving traffic instead of charging it to one plan
         self.index_shared = index_shared
+        # fragment parallelism: None/1 leaves plans single-partition (the
+        # pre-partition behavior); the serving gateway and collect() opt in
+        self.n_partitions = n_partitions
+        self.partition_min_rows = partition_min_rows
+        self.broadcast_max_rows = broadcast_max_rows
+        # device-shard layout for similarity corpora: "auto" = every device
+        # once the corpus clears shard_min_corpus (a single-device process
+        # never annotates, so plain CPU runs are untouched); an int pins it
+        self.shards = shards
+        self.shard_min_corpus = shard_min_corpus
         self.applied: list[AppliedRewrite] = []
         self._sel_memo: dict[tuple, float] = {}
 
@@ -187,6 +240,7 @@ class PlanOptimizer:
         plan = self._reorder_filters(plan)
         plan = self._transform(plan, self._inject_sim_prefilter)
         plan = self._transform(plan, self._choose_retrieval)
+        plan = self._transform(plan, self._plan_partitions)
         return plan
 
     # -- rule 1: map fusion ------------------------------------------------
@@ -349,6 +403,153 @@ class PlanOptimizer:
                 f"recall_target={self.recall_target}; est. scan units "
                 f"{c['ivf']:.0f} vs exact {c['exact']:.0f})"))
         return dataclasses.replace(node, index_kind=kind, nprobe=nprobe)
+
+    # -- rule 6: partition planning ----------------------------------------
+    def _partition_count(self, n_rows: float) -> int:
+        """Fragments for an operator over ``n_rows`` input rows: the
+        configured count, capped so no fragment is empty."""
+        if not self.n_partitions or self.n_partitions < 2:
+            return 1
+        if n_rows < self.partition_min_rows:
+            return 1
+        return max(1, min(self.n_partitions, int(n_rows)))
+
+    def _shard_count(self, n_corpus: float) -> int:
+        if self.shards in (None, 0, 1) or n_corpus < 1:
+            return 1
+        requested = None if self.shards == "auto" else int(self.shards)
+        return choose_shards(int(n_corpus), _device_count(),
+                             requested=requested,
+                             min_corpus=self.shard_min_corpus)
+
+    def _wrap_row_parallel(self, node, what: str):
+        P = self._partition_count(estimate_cardinality(node.child))
+        if P < 2:
+            return None
+        wrapped = dataclasses.replace(node, child=N.Partition(node.child, P))
+        self.applied.append(AppliedRewrite(
+            "plan_partitions", f"{what} row-parallel over {P} partitions "
+                               f"(gather concat)"))
+        return N.Exchange(wrapped, "gather", P)
+
+    def _plan_partitions(self, node):
+        """Cut operators into Exchange-bounded fragments and install the
+        device-shard layout on similarity corpora.  Every wrap is
+        guarantee-preserving: the partitioned execution (``plan.parallel``)
+        reproduces the single-partition output, and cascades keep one
+        global importance sample."""
+        if isinstance(node, N.Search):
+            s = 1 if node.index is not None else \
+                self._shard_count(estimate_cardinality(node.child))
+            if s < 2:
+                return None
+            self.applied.append(AppliedRewrite(
+                "plan_partitions",
+                f"search corpus sharded across {s} devices"))
+            return dataclasses.replace(node, shards=s)
+
+        if isinstance(node, N.SimJoin):
+            out = node
+            s = self._shard_count(estimate_cardinality(node.right))
+            if s >= 2:
+                self.applied.append(AppliedRewrite(
+                    "plan_partitions",
+                    f"sim-join right corpus sharded across {s} devices"))
+                out = dataclasses.replace(out, shards=s)
+            P = self._partition_count(estimate_cardinality(node.left))
+            if P >= 2:
+                out = dataclasses.replace(
+                    out, left=N.Partition(out.left, P),
+                    right=N.Exchange(out.right, "broadcast", P))
+                self.applied.append(AppliedRewrite(
+                    "plan_partitions",
+                    f"sim-join probe side over {P} partitions "
+                    f"(right index broadcast)"))
+                out = N.Exchange(out, "gather", P)
+            return out if out is not node else None
+
+        if isinstance(node, (N.Map, N.FusedMap, N.Extract)):
+            return self._wrap_row_parallel(node, type(node).__name__.lower())
+
+        if isinstance(node, N.Filter):
+            mode = "cascade (global sample)" if node.is_cascade else "gold"
+            return self._wrap_row_parallel(node, f"{mode} filter")
+
+        if isinstance(node, N.TopK):
+            # only the quickselect algorithm has a partitioned form (the
+            # Table-7 baselines exist for measurement, not scale)
+            if node.group_by is not None or node.algorithm != "quickselect":
+                return None
+            P = self._partition_count(estimate_cardinality(node.child))
+            if P < 2:
+                return None
+            wrapped = dataclasses.replace(node,
+                                          child=N.Partition(node.child, P))
+            self.applied.append(AppliedRewrite(
+                "plan_partitions",
+                f"top-k over {P} partitions (per-partition quickselect + "
+                f"lossless merge)"))
+            return N.Exchange(wrapped, "gather", P)
+
+        if isinstance(node, N.Agg):
+            if node.partitioner is not None:  # user controls grouping/order
+                return None
+            P = self._partition_count(estimate_cardinality(node.child))
+            if P < 2:
+                return None
+            if node.group_by is not None:
+                part = N.Partition(node.child, P, strategy="hash",
+                                   key=node.group_by)
+                detail = (f"group-by agg hash-partitioned on "
+                          f"{node.group_by!r} over {P} fragments")
+            else:
+                # fragment boundaries align to the reduction tree's root
+                # subtrees -> record-identical merge; the aligned count is
+                # fixed by (n, fanout), NOT by the configured n_partitions,
+                # so estimate it the same way the executor derives it
+                from repro.core.plan.parallel import subtree_partitions
+                n_est = estimate_cardinality(node.child)
+                P = len(subtree_partitions(int(n_est), node.fanout, P))
+                if P < 2:
+                    return None
+                part = N.Partition(node.child, P, strategy="subtree")
+                detail = (f"hierarchical agg over {P} subtree partitions "
+                          f"+ one root reduce")
+            self.applied.append(AppliedRewrite("plan_partitions", detail))
+            return N.Exchange(dataclasses.replace(node, child=part),
+                              "gather", P)
+
+        if isinstance(node, N.Join):
+            if node.is_cascade:  # cascade joins calibrate on a global
+                return None      # pair sample: keep them single-fragment
+            P = self._partition_count(estimate_cardinality(node.left))
+            if P < 2:
+                return None
+            n2 = estimate_cardinality(node.right)
+            if n2 <= self.broadcast_max_rows:
+                join = dataclasses.replace(
+                    node, left=N.Partition(node.left, P),
+                    right=N.Exchange(node.right, "broadcast", P))
+                self.applied.append(AppliedRewrite(
+                    "plan_partitions",
+                    f"join left over {P} partitions, right (~{n2:.0f} rows) "
+                    f"broadcast"))
+                return N.Exchange(join, "gather", P)
+            # near-square grid capped at P fragments; the oversized right
+            # side always splits (gr >= 2), the left only when P allows
+            # (P=2 -> a 1x2 grid, not an inflated 2x2)
+            gl = max(1, int(math.floor(math.sqrt(P))))
+            gr = max(2, P // gl)
+            join = dataclasses.replace(
+                node, left=N.Partition(node.left, gl),
+                right=N.Partition(node.right, gr))
+            self.applied.append(AppliedRewrite(
+                "plan_partitions",
+                f"join repartitioned into a {gl}x{gr} fragment grid "
+                f"(right ~{n2:.0f} rows too large to broadcast)"))
+            return N.Exchange(join, "gather", gl * gr)
+
+        return None
 
     # -- rule 4: sim-join prefilter ----------------------------------------
     def _inject_sim_prefilter(self, node):

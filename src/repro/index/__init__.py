@@ -11,14 +11,15 @@ sem_sim_join, the join sim-prefilter, sem_group_by center scoring, sem_topk
 pivot selection — go through this interface.
 """
 from repro.index.backend import (RetrievalBackend, build_index, choose_backend,
-                                 corpus_fingerprint, embedder_key, load_index,
-                                 nprobe_for_recall, retrieval_costs)
+                                 choose_shards, corpus_fingerprint,
+                                 embedder_key, load_index, nprobe_for_recall,
+                                 retrieval_costs)
 from repro.index.ivf_index import IVFIndex
 from repro.index.kmeans import kmeans
 from repro.index.vector_index import VectorIndex
 
 __all__ = [
     "IVFIndex", "RetrievalBackend", "VectorIndex", "build_index",
-    "choose_backend", "corpus_fingerprint", "embedder_key", "kmeans",
-    "load_index", "nprobe_for_recall", "retrieval_costs",
+    "choose_backend", "choose_shards", "corpus_fingerprint", "embedder_key",
+    "kmeans", "load_index", "nprobe_for_recall", "retrieval_costs",
 ]

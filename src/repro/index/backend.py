@@ -38,6 +38,8 @@ IVF_BUILD_QUERIES = 10_000   # queries a built index amortizes over (the
                              # registry shares builds across serve sessions,
                              # so serving traffic, not one call, pays it)
 MIN_PROBE_FRAC = 0.02        # recall floor: never probe fewer clusters
+SHARD_MIN_CORPUS = 4096      # below this a device-sharded scan can't pay
+                             # the shard_map dispatch + host merge overhead
 
 # score written to masked padding lanes / unfilled slots (finite: TPU-safe).
 # Canonical home is here (numpy-only module) so the IVF index and the
@@ -117,6 +119,19 @@ class RetrievalBackend(abc.ABC):
 # ---------------------------------------------------------------------------
 
 
+def choose_shards(n_corpus: int, device_count: int, *,
+                  requested: int | None = None,
+                  min_corpus: int = SHARD_MIN_CORPUS) -> int:
+    """Shard layout for a corpus: an explicit request is honored (clamped to
+    the device count); otherwise shard across every device once the corpus
+    is big enough to amortize the per-device dispatch.  1 = unsharded."""
+    if requested is not None:
+        return max(1, min(int(requested), max(device_count, 1)))
+    if device_count <= 1 or n_corpus < min_corpus:
+        return 1
+    return device_count
+
+
 def build_index(vectors: np.ndarray, ids: list | None = None, *,
                 kind: str = "exact", **kw) -> RetrievalBackend:
     from repro.index.ivf_index import IVFIndex
@@ -128,7 +143,7 @@ def build_index(vectors: np.ndarray, ids: list | None = None, *,
         if kind == "ivf":
             kw.setdefault("nprobe", nprobe)
     if kind == "exact":
-        return VectorIndex(vectors, ids)
+        return VectorIndex(vectors, ids, shards=kw.get("shards"))
     if kind == "ivf":
         return IVFIndex(vectors, ids, **kw)
     raise ValueError(f"unknown index kind {kind!r} (expected 'exact'|'ivf'|'auto')")

@@ -56,9 +56,14 @@ class IVFIndex(RetrievalBackend):
                  recall_target: float = 0.95, kmeans_iters: int = 10,
                  block_q: int = 8, seed: int = 0,
                  spill_threshold: float = 0.10, retrain: str = "background",
+                 shards: int | None = None,
                  _centroids: np.ndarray | None = None,
                  _assign: np.ndarray | None = None):
         super().__init__(vectors, ids)
+        # shards > 1 distributes the inverted-file tiles across devices and
+        # scans probed clusters on their home device (ops.sharded_ivf_search)
+        # — scores, and therefore results, are identical to unsharded
+        self.shards = int(shards) if shards and shards > 1 else None
         if retrain not in ("background", "sync", "off"):
             raise ValueError(f"retrain={retrain!r} (expected "
                              "'background'|'sync'|'off')")
@@ -280,7 +285,24 @@ class IVFIndex(RetrievalBackend):
         nprobe_eff = min(max(nprobe or nprobe_default,
                              self._min_probes(k, size_cumsum, nd_floor)),
                          n_clusters)
-        if nd:
+        # accounting uses the split the dispatch actually runs (clamped to
+        # the device count on the shard_map path)
+        shards = None
+        if self.shards and n_clusters >= self.shards:
+            shards = kops.effective_shards(self.shards)
+            shards = shards if shards > 1 else None
+        if shards:
+            # sharded probed-cluster scan; the (small) delta side buffer is
+            # exact-scanned on host and concatenated, exactly like
+            # ops.ivf_delta_search assembles it
+            scores, probe_blocks = kops.sharded_ivf_search(
+                q, centroids, store, store_mask,
+                nprobe=nprobe_eff, shards=shards, block_q=self.block_q)
+            if nd:
+                ds = kops.similarity(q, delta_unit)
+                scores = np.concatenate(
+                    [scores, np.asarray(ds, np.float32)], axis=1)
+        elif nd:
             scores, probe_blocks = kops.ivf_delta_search(
                 q, centroids, store, store_mask, delta_unit,
                 nprobe=nprobe_eff, block_q=self.block_q)
@@ -299,16 +321,25 @@ class IVFIndex(RetrievalBackend):
 
         scored = nq * nd
         probed_unique = 0
+        local_kc = -(-n_clusters // shards) if shards else n_clusters
+        per_shard = np.zeros(shards or 1, np.int64)
         for b in range(len(probe_blocks)):
             real_q = min(nq - b * self.block_q, self.block_q)
             uniq = np.unique(probe_blocks[b])
             probed_unique += len(uniq)
             scored += real_q * int(cluster_sizes[uniq].sum())
+            if shards:  # each cluster is scanned by its home device only
+                np.add.at(per_shard, uniq // local_kc,
+                          real_q * cluster_sizes[uniq])
         self.last_stats = {"index": self.kind, "scored_vectors": scored,
                            "probed_clusters": int(probed_unique),
                            "nprobe": int(nprobe_eff),
                            "n_clusters": int(n_clusters),
                            "delta_rows": nd, "delta_scored": nq * nd}
+        if shards:
+            self.last_stats.update(
+                shards=int(shards),
+                scored_vectors_per_shard=int(per_shard.max()) + nq * nd)
         return out_s, out_i
 
     def _topk_unique(self, scores: np.ndarray, cand_ids: np.ndarray, k: int,
@@ -356,10 +387,13 @@ class IVFIndex(RetrievalBackend):
         return kops.similarity(np.asarray(queries, np.float32), self.vectors)
 
     def describe(self) -> dict:
-        return {**super().describe(), "n_clusters": int(self.n_clusters),
-                "nprobe": int(self.nprobe), "block_q": self.block_q,
-                "delta_rows": self.delta_rows, "retrains": self.retrains,
-                "spill_threshold": self.spill_threshold}
+        out = {**super().describe(), "n_clusters": int(self.n_clusters),
+               "nprobe": int(self.nprobe), "block_q": self.block_q,
+               "delta_rows": self.delta_rows, "retrains": self.retrains,
+               "spill_threshold": self.spill_threshold}
+        if self.shards:
+            out["shards"] = self.shards
+        return out
 
     # -- persistence -------------------------------------------------------
     def save(self, path: str) -> None:
@@ -378,7 +412,8 @@ class IVFIndex(RetrievalBackend):
                        "nprobe": int(self.nprobe), "block_q": self.block_q,
                        "seed": self.seed, "n_base": int(n_base),
                        "spill_threshold": self.spill_threshold,
-                       "retrain": self.retrain_mode}, f)
+                       "retrain": self.retrain_mode,
+                       "shards": self.shards}, f)
 
     @classmethod
     def load(cls, path: str) -> "IVFIndex":
@@ -393,6 +428,7 @@ class IVFIndex(RetrievalBackend):
                   block_q=meta["block_q"], seed=meta.get("seed", 0),
                   spill_threshold=meta.get("spill_threshold", 0.10),
                   retrain=meta.get("retrain", "background"),
+                  shards=meta.get("shards"),
                   _centroids=centroids, _assign=assign)
         if n_base < len(vectors):  # restore the unmerged delta side buffer
             mode, idx.retrain_mode = idx.retrain_mode, "off"

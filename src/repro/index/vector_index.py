@@ -23,6 +23,15 @@ def _similarity(queries: np.ndarray, corpus: np.ndarray) -> np.ndarray:
 class VectorIndex(RetrievalBackend):
     kind = "exact"
 
+    def __init__(self, vectors: np.ndarray, ids: list | None = None, *,
+                 shards: int | None = None):
+        """``shards`` > 1 routes searches through the device-sharded scan
+        (``ops.sharded_search``: corpus rows split across the mesh, per-shard
+        top-k merged on host) — result-identical to the single-device scan,
+        with per-device work cut to ``n/shards`` rows per query."""
+        super().__init__(vectors, ids)
+        self.shards = int(shards) if shards and shards > 1 else None
+
     def search(self, queries: np.ndarray, k: int, *, max_pos: int | None = None
                ) -> tuple[np.ndarray, np.ndarray]:
         """-> (scores [nq, k], indices [nq, k]) by inner product.
@@ -31,6 +40,9 @@ class VectorIndex(RetrievalBackend):
         cutoff for version-pinned queries over a shared stream index that a
         concurrent commit may have grown mid-query (positions are
         append-ordered, so the cutoff is a prefix)."""
+        if self.shards and self.shards >= 2 and max_pos is None \
+                and len(self.vectors) >= 2 * self.shards and len(queries):
+            return self._search_sharded(np.asarray(queries, np.float32), k)
         sims = _similarity(np.asarray(queries, np.float32), self.vectors)
         if max_pos is not None and max_pos < sims.shape[1]:
             sims = sims[:, :max_pos]
@@ -44,8 +56,31 @@ class VectorIndex(RetrievalBackend):
                            "probed_clusters": 0}
         return np.take_along_axis(sims, idx, axis=1), idx
 
+    def _search_sharded(self, queries: np.ndarray, k: int
+                        ) -> tuple[np.ndarray, np.ndarray]:
+        from repro.kernels import ops as kops
+        with self._mut:  # consistent snapshot vs concurrent add()
+            vectors = self.vectors
+        scores, idx = kops.sharded_search(queries, vectors, k,
+                                          shards=self.shards)
+        nq, nc = len(queries), len(vectors)
+        # the dispatch may clamp to the device count: report the split that
+        # actually ran, not the requested layout
+        eff = kops.effective_shards(self.shards)
+        self.last_stats = {
+            "index": self.kind, "scored_vectors": int(nq * nc),
+            "probed_clusters": 0, "shards": eff,
+            "scored_vectors_per_shard": int(nq * (-(-nc // max(eff, 1))))}
+        return scores, idx
+
     def pairwise(self, queries: np.ndarray) -> np.ndarray:
         return _similarity(np.asarray(queries, np.float32), self.vectors)
+
+    def describe(self) -> dict:
+        out = super().describe()
+        if self.shards:
+            out["shards"] = self.shards
+        return out
 
     # -- persistence (sem_index / load_sem_index) -------------------------
     def save(self, path: str) -> None:
@@ -53,11 +88,12 @@ class VectorIndex(RetrievalBackend):
         np.save(os.path.join(path, "vectors.npy"), self.vectors)
         with open(os.path.join(path, "meta.json"), "w") as f:
             json.dump({"kind": self.kind, "ids": self.ids,
-                       "dim": int(self.vectors.shape[1])}, f)
+                       "dim": int(self.vectors.shape[1]),
+                       "shards": self.shards}, f)
 
     @classmethod
     def load(cls, path: str) -> "VectorIndex":
         vectors = np.load(os.path.join(path, "vectors.npy"))
         with open(os.path.join(path, "meta.json")) as f:
             meta = json.load(f)
-        return cls(vectors, meta["ids"])
+        return cls(vectors, meta["ids"], shards=meta.get("shards"))

@@ -88,3 +88,68 @@ def ivf_search(queries, centroids, store, mask, *, nprobe: int,
     scores = cluster_scan(q, store, mask, probe_blocks, block_q=block_q,
                           normalize=False, interpret=interpret)
     return scores[: len(queries)], probe_blocks
+
+
+# ---------------------------------------------------------------------------
+# Device-sharded cluster scan (shard_map over the cluster axis)
+# ---------------------------------------------------------------------------
+
+
+def sharded_ivf_search(queries, centroids, store, mask, *, nprobe: int,
+                       n_shards: int, block_q: int = 8, mesh=None,
+                       interpret: bool = False, use_pallas: bool = False):
+    """Device-sharded IVF search: the inverted file's per-cluster tiles are
+    partitioned across ``n_shards`` devices along the cluster axis; probe
+    selection stays global (centroids are tiny and replicated), and every
+    device scans only the probed clusters *it owns* — out-of-shard probe
+    slots score MASKED_SCORE and the per-device score planes combine with
+    one ``pmax`` across the mesh axis.  Each candidate is scored by exactly
+    its home device, so the combined plane is identical to the unsharded
+    :func:`ivf_search` while per-device work drops to the local probed
+    clusters.  jnp contract: ``repro.kernels.ref.sharded_ivf_search_ref``.
+
+    ``use_pallas`` runs :func:`cluster_scan` per shard (TPU); otherwise the
+    shard body is the reference gather math (CPU multi-device meshes).
+    -> (scores [nq, bq*nprobe*L], probe_blocks [nb, bq*nprobe]).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.kernels.ref import ivf_scan_ref
+    from repro.kernels.similarity import shard_mesh, shard_map
+
+    q, nb = pad_queries(jnp.asarray(queries, jnp.float32), block_q)
+    q = _unitize(q)
+    probe_blocks = ivf_probes(q, jnp.asarray(centroids), nprobe, block_q)
+    kc, L, d = store.shape
+    mesh = mesh if mesh is not None else shard_mesh(n_shards)
+    local = max(1, -(-kc // n_shards))
+    pad = n_shards * local - kc
+    st = jnp.asarray(store)
+    mk = jnp.asarray(mask)
+    if pad:
+        # equal tiles per device; padded clusters are never probed (probe
+        # ids are < kc) and their mask is zero anyway
+        st = jnp.concatenate([st, jnp.zeros((pad, L, d), st.dtype)])
+        mk = jnp.concatenate([mk, jnp.zeros((pad, L), mk.dtype)])
+
+    def body(q, p, st_local, mk_local):
+        offset = jax.lax.axis_index("shard") * st_local.shape[0]
+        local_p = p - offset
+        in_range = (local_p >= 0) & (local_p < st_local.shape[0])
+        safe = jnp.where(in_range, local_p, 0).astype(jnp.int32)
+        if use_pallas:
+            s = cluster_scan(q, st_local, mk_local, safe, block_q=block_q,
+                             normalize=False, interpret=interpret)
+        else:
+            s = ivf_scan_ref(q, st_local, mk_local, safe, block_q=block_q,
+                             normalize=False)
+        keep = jnp.repeat(jnp.repeat(in_range, L, axis=1), block_q, axis=0)
+        s = jnp.where(keep, s, MASKED_SCORE)
+        return jax.lax.pmax(s, "shard")
+
+    scores = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(), P("shard", None, None), P("shard", None)),
+        out_specs=P(),
+        check_rep=False)(q, probe_blocks, st, mk)
+    return scores[: len(queries)], probe_blocks

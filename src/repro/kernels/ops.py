@@ -111,6 +111,81 @@ def ivf_delta_search(queries, centroids, store, mask, delta_vectors, *,
     return np.concatenate([s, np.asarray(ds, np.float32)], axis=1), p
 
 
+def _n_devices() -> int:
+    try:
+        return len(jax.devices())
+    except Exception:  # pragma: no cover
+        return 1
+
+
+def _resolve_sharded(impl: str | None, n_shards: int) -> tuple[str, int]:
+    """Sharded ops dispatch: ``shard_map`` needs real devices, so "auto"
+    takes the shard_map path only when the process actually has more than
+    one (clamping the shard count to the device count); otherwise the jnp
+    reference *simulates* the shard partitioning with identical numerics —
+    which is what keeps single-device CI meaningful."""
+    impl = impl or DEFAULT_IMPL
+    if impl == "auto":
+        impl = "shard_map" if _n_devices() > 1 else "ref"
+    if impl in ("pallas", "interpret"):
+        impl = "shard_map"
+    if impl == "shard_map":
+        n_shards = max(1, min(n_shards, _n_devices()))
+    return impl, n_shards
+
+
+def effective_shards(shards: int) -> int:
+    """The shard count the auto dispatch will actually run: clamped to the
+    device count on the shard_map path, the requested count on the jnp
+    simulation path.  Index layers use this so per-shard accounting
+    (``scored_vectors_per_shard``) describes the real work split, not the
+    requested layout."""
+    _, n = _resolve_sharded(None, shards)
+    return n
+
+
+def sharded_search(queries, corpus, k: int, *, shards: int,
+                   normalize: bool = True, impl: str | None = None
+                   ) -> tuple[np.ndarray, np.ndarray]:
+    """Device-sharded exact top-k: corpus rows split across ``shards``
+    devices via ``shard_map`` (per-shard similarity kernel + local top-k),
+    per-shard candidates merged on host.  Lossless — the merged top-k is
+    identical to a full exact scan (``ref.sharded_search_ref`` is the jnp
+    contract).  -> (scores [nq, k], global idx [nq, k])."""
+    mode, shards = _resolve_sharded(impl, shards)
+    if mode == "ref" or shards <= 1:
+        s, i = ref.sharded_search_ref(jnp.asarray(queries), jnp.asarray(corpus),
+                                      k, max(shards, 1), normalize=normalize)
+        return np.asarray(s), np.asarray(i, np.int64)
+    vals, idx = _sim.sharded_similarity_topk(
+        queries, corpus, k, n_shards=shards, normalize=normalize,
+        use_pallas=_on_tpu())
+    s, i = ref.shard_topk_merge(vals, idx, k)
+    return np.asarray(s), np.asarray(i, np.int64)
+
+
+def sharded_ivf_search(queries, centroids, store, mask, *, nprobe: int,
+                       shards: int, block_q: int = 8, impl: str | None = None
+                       ) -> tuple[np.ndarray, np.ndarray]:
+    """Device-sharded IVF retrieval: cluster tiles partitioned across
+    ``shards`` devices, global probe selection, per-device masked scan of
+    the locally-owned probed clusters combined with one pmax.  The score
+    plane (and thus the downstream top-k) is identical to :func:`ivf_search`
+    — sharding redistributes scan work, never results.  jnp contract:
+    ``ref.sharded_ivf_search_ref``."""
+    mode, shards = _resolve_sharded(impl, shards)
+    if mode == "ref" or shards <= 1:
+        s, p = ref.sharded_ivf_search_ref(
+            jnp.asarray(queries), jnp.asarray(centroids), jnp.asarray(store),
+            jnp.asarray(mask), nprobe=nprobe, n_shards=max(shards, 1),
+            block_q=block_q)
+    else:
+        s, p = _ivf.sharded_ivf_search(
+            queries, centroids, store, mask, nprobe=nprobe, n_shards=shards,
+            block_q=block_q, use_pallas=_on_tpu())
+    return np.asarray(s), np.asarray(p)
+
+
 def rmsnorm(x, scale, *, eps: float = 1e-5, impl: str | None = None, **kw):
     mode = _resolve(impl)
     if mode == "ref":

@@ -131,6 +131,98 @@ def ivf_delta_search_ref(queries, centroids, store, mask, delta_vectors, *,
     return jnp.concatenate([s, ds], axis=1), probe_blocks
 
 
+# -- device-sharded retrieval (jnp contracts for the shard_map wrappers) ----
+
+
+def pad_corpus_shards(corpus, n_shards: int):
+    """Pad [nc, d] -> [n_shards*local, d] plus a validity mask [padded] so
+    every shard holds an identically-shaped tile.  -> (padded, valid, local)."""
+    nc = corpus.shape[0]
+    local = max(1, -(-nc // n_shards))
+    pad = n_shards * local - nc
+    valid = jnp.concatenate([jnp.ones(nc, jnp.float32),
+                             jnp.zeros(pad, jnp.float32)])
+    if pad:
+        corpus = jnp.concatenate(
+            [corpus, jnp.zeros((pad, corpus.shape[1]), corpus.dtype)])
+    return corpus, valid, local
+
+
+def shard_topk_merge(scores, indices, k: int):
+    """Host-side merge of per-shard top-k candidate lists: [nq, S*k] each ->
+    (scores [nq, k], idx [nq, k]) descending, ties to the lowest index.
+
+    Candidates arrive grouped by shard (ascending global index within and
+    across groups is NOT guaranteed), so ties are broken by explicit index
+    rather than stable position."""
+    import numpy as np
+    s = np.asarray(scores)
+    i = np.asarray(indices)
+    # lexsort: primary descending score, secondary ascending global index —
+    # the same tie rule a full-corpus lax.top_k applies
+    order = np.lexsort((i, -s), axis=1)
+    k = min(k, s.shape[1])
+    take = order[:, :k]
+    return (np.take_along_axis(s, take, axis=1),
+            np.take_along_axis(i, take, axis=1))
+
+
+def sharded_search_ref(queries, corpus, k: int, n_shards: int, *,
+                       normalize: bool = True):
+    """jnp contract for ``repro.kernels.ops.sharded_search``: the corpus is
+    row-partitioned into ``n_shards`` equal tiles, every shard scores its
+    local tile (the similarity kernel's math) and keeps a local top-k, and
+    the per-shard candidates are merged on host.  Lossless: each global
+    winner is its home shard's local winner, so the merged top-k equals a
+    full exact scan's.  -> (scores [nq, k], idx [nq, k])."""
+    q = jnp.asarray(queries, jnp.float32)
+    c = jnp.asarray(corpus, jnp.float32)
+    if normalize:
+        q = _unitize(q)
+        c = _unitize(c)
+    c, valid, local = pad_corpus_shards(c, n_shards)
+    k_l = min(k, local)
+    tiles = c.reshape(n_shards, local, -1)
+    vmask = valid.reshape(n_shards, local)
+    all_s, all_i = [], []
+    for s in range(n_shards):
+        sc = q @ tiles[s].T
+        sc = jnp.where(vmask[s][None, :] > 0, sc, MASKED_SCORE)
+        vals, loc = jax.lax.top_k(sc, k_l)
+        all_s.append(vals)
+        all_i.append(loc + s * local)
+    return shard_topk_merge(jnp.concatenate(all_s, axis=1),
+                            jnp.concatenate(all_i, axis=1), k)
+
+
+def sharded_ivf_search_ref(queries, centroids, store, mask, *, nprobe: int,
+                           n_shards: int, block_q: int = 8):
+    """jnp contract for ``ops.sharded_ivf_search``: the padded per-cluster
+    tiles are partitioned across ``n_shards`` devices along the cluster
+    axis; every shard scans only the probed clusters it owns (the rest of
+    its slots score MASKED_SCORE) and the per-shard score planes combine by
+    elementwise max.  Each candidate is scored by exactly its home shard,
+    so the combined plane is *identical* to the unsharded
+    :func:`ivf_search_ref` — sharding redistributes work, never results."""
+    q, _ = pad_queries(jnp.asarray(queries, jnp.float32), block_q)
+    q = _unitize(q)
+    probe_blocks = ivf_probes(q, centroids, nprobe, block_q)
+    kc, L, _ = store.shape
+    local = max(1, -(-kc // n_shards))
+    nb, slots = probe_blocks.shape
+    combined = jnp.full((nb * block_q, slots * L), MASKED_SCORE, jnp.float32)
+    for s in range(n_shards):
+        lo, hi = s * local, min((s + 1) * local, kc)
+        in_range = (probe_blocks >= lo) & (probe_blocks < hi)   # [nb, slots]
+        safe = jnp.where(in_range, probe_blocks, lo)
+        sc = ivf_scan_ref(q, store[lo:hi], mask[lo:hi], safe - lo,
+                          block_q=block_q, normalize=False)
+        keep = jnp.repeat(jnp.repeat(in_range, L, axis=1), block_q, axis=0)
+        combined = jnp.maximum(combined,
+                               jnp.where(keep, sc, MASKED_SCORE))
+    return combined[: len(queries)], probe_blocks
+
+
 def rmsnorm_ref(x, scale, *, eps: float = 1e-5):
     """x:[..., d], scale:[d] -> same shape; stats in f32."""
     xf = x.astype(jnp.float32)

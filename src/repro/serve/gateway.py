@@ -19,6 +19,17 @@ A bounded queue (``max_pending``) sheds load with :class:`AdmissionError`
 instead of building unbounded backlog; per-session accounting rolls up via
 ``accounting.session_scope`` so each session reports its own OpStats even
 though backend calls are fused across sessions.
+
+Partitioned execution: with ``n_partitions`` set (or passed through
+``optimizer_kw``), each session's optimizer cuts big operators into
+Exchange-bounded fragments and its :class:`PartitionedExecutor` schedules
+them on the gateway's shared *fragment pool* — a second thread pool sized
+``fragment_workers``, deliberately separate from the session workers so a
+session waiting on its own fragments can never deadlock the pool that must
+run them.  Fragment model calls carry the session's accounting context
+(``accounting.capture``/``activate``), so per-partition work still rolls up
+into the right ``session_scope``, and per-session fragment counts feed
+``GatewayMetrics`` (``fragments_run`` / ``partitioned_ops``).
 """
 from __future__ import annotations
 
@@ -26,10 +37,11 @@ import threading
 import time
 import uuid
 from collections import deque
+from concurrent.futures import ThreadPoolExecutor
 
 from repro.core import accounting
 from repro.core.plan.cache import BatchedModelCache
-from repro.core.plan.execute import PlanExecutor
+from repro.core.plan.execute import PartitionedExecutor
 from repro.core.plan.nodes import LogicalNode
 from repro.core.plan.optimize import PlanOptimizer
 from repro.serve.dispatch import (DispatchedEmbedder, DispatchedModel,
@@ -61,7 +73,9 @@ class Gateway:
                  persist_path: str | None = None,
                  optimizer_kw: dict | None = None,
                  history_limit: int = 1024,
-                 index_registry: IndexRegistry | None = None):
+                 index_registry: IndexRegistry | None = None,
+                 n_partitions: int | None = None,
+                 fragment_workers: int = 4):
         self.session = session
         self.store = store if store is not None else SharedSemanticCache(
             capacity=cache_capacity, ttl_s=cache_ttl_s,
@@ -78,7 +92,18 @@ class Gateway:
             store=self.store, window_s=window_s, max_batch=max_batch)
         self.metrics = GatewayMetrics()
         self.max_pending = max_pending
-        self.optimizer_kw = optimizer_kw or {}
+        self.optimizer_kw = dict(optimizer_kw or {})
+        if n_partitions is not None:
+            self.optimizer_kw.setdefault("n_partitions", n_partitions)
+        # fragment pool, shared by every session's PartitionedExecutor:
+        # fragments never spawn fragments, so a fixed pool cannot deadlock.
+        # Only spun up when partition planning can actually emit fragments —
+        # an unpartitioned gateway should not carry idle threads.
+        partitioning = (self.optimizer_kw.get("n_partitions") or 0) >= 2
+        self._fragment_pool = ThreadPoolExecutor(
+            max_workers=fragment_workers, thread_name_prefix="gw-frag") \
+            if partitioning and fragment_workers and fragment_workers > 1 \
+            else None
         self._cv = threading.Condition()
         self._queues: dict[str, deque[ServeSession]] = {}
         self._tenants: list[str] = []
@@ -224,11 +249,12 @@ class Gateway:
         exec_kw = {k: self.optimizer_kw[k]
                    for k in ("recall_target", "index_min_corpus")
                    if k in self.optimizer_kw}
-        executor = PlanExecutor(
+        executor = PartitionedExecutor(
             self.session, stats_log=sess.stats_log, oracle=oracle,
             proxy=proxy, embedder=embedder,
             stage_hook=lambda node: sess.check(),
-            index_registry=self.index_registry, **exec_kw)
+            index_registry=self.index_registry,
+            fragment_pool=self._fragment_pool, **exec_kw)
         try:
             with accounting.session_scope(sess.sid) as st:
                 sess.stats = st
@@ -255,6 +281,11 @@ class Gateway:
             self._resolve(sess, EXPIRED, error=exc)
         except BaseException as exc:
             self._resolve(sess, FAILED, error=exc)
+        finally:
+            # per-session partition-fragment accounting (0/0 when the plan
+            # ran single-partition)
+            self.metrics.on_fragments(executor.fragments_run,
+                                      executor.partitioned_ops)
 
     # -- lifecycle ---------------------------------------------------------
     def wait_all(self, timeout: float | None = None) -> bool:
@@ -293,6 +324,8 @@ class Gateway:
             self._cv.notify_all()
         for w in self._workers:
             w.join(timeout=10.0)
+        if self._fragment_pool is not None:
+            self._fragment_pool.shutdown(wait=True)
         self.dispatcher.close()
         self.store.close()
 

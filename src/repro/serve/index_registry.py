@@ -4,7 +4,10 @@ Every embedding-backed operator in a plan (sem_search, sem_sim_join, the
 join sim-prefilter, topk pivot selection) needs an index over some corpus.
 Without sharing, N concurrent gateway sessions over the same corpus embed
 and build N times.  The registry keys built indexes by
-``(corpus-fingerprint, embedder identity, kind, build params)`` —
+``(corpus-fingerprint, embedder identity, kind, build params)`` — the
+build params include the device-shard layout (``shards``), so a sharded
+build and an unsharded build of the same corpus are distinct entries and a
+session never receives an index laid out for a mesh it isn't using —
 ``repro.index.backend.corpus_fingerprint`` unwraps the per-session
 accounting/dispatch wrappers so sessions land on the same key — and
 guarantees *exactly one build per key* under concurrency: losers of the

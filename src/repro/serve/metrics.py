@@ -30,6 +30,8 @@ class GatewayMetrics:
         self.subscriptions = 0    # continuous queries registered
         self.emissions = 0        # continuous-query results emitted
         self.emission_errors = 0
+        self.fragments_run = 0    # partition fragments executed
+        self.partitioned_ops = 0  # operators that ran fragment-parallel
         # percentiles are computed over a sliding window so a long-lived
         # gateway's metrics stay O(1) in memory
         self.latencies: deque[float] = deque(maxlen=4096)
@@ -51,6 +53,15 @@ class GatewayMetrics:
             self.emissions += 1
             if error:
                 self.emission_errors += 1
+
+    def on_fragments(self, n_fragments: int, n_ops: int) -> None:
+        """Per-session partition-fragment roll-up (reported by the worker
+        after the session's executor finishes)."""
+        if not n_fragments and not n_ops:
+            return
+        with self._lock:
+            self.fragments_run += n_fragments
+            self.partitioned_ops += n_ops
 
     def on_finish(self, status: str, latency_s: float | None,
                   n_rows: int | None) -> None:
@@ -79,6 +90,8 @@ class GatewayMetrics:
                 "subscriptions": self.subscriptions,
                 "emissions": self.emissions,
                 "emission_errors": self.emission_errors,
+                "fragments_run": self.fragments_run,
+                "partitioned_ops": self.partitioned_ops,
                 "elapsed_s": round(elapsed, 4),
                 "throughput_rps": round(self.completed / elapsed, 4),
                 "p50_latency_s": round(float(np.percentile(lat, 50)), 4)
