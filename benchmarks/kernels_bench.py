@@ -20,6 +20,31 @@ def run() -> None:
     dt = (time.monotonic() - t0) / 5
     emit("kernels/similarity_512x4096", 1e6 * dt, gflops=round(2 * 512 * 4096 * 256 / dt / 1e9, 1))
 
+    # IVF cluster scans: fp32 tiles vs int8 tiles + fused dequantize — the
+    # quantized scan streams (d+4)/(4d) of the bytes through the hot loop
+    from repro.index.quant import bytes_per_vector, quantize_tiles
+    rng = np.random.default_rng(2)
+    kc, L, d, nq, nprobe = 64, 256, 64, 64, 8
+    store = rng.normal(size=(kc, L, d)).astype(np.float32)
+    mask = np.ones((kc, L), np.float32)
+    cents = rng.normal(size=(kc, d)).astype(np.float32)
+    queries = rng.normal(size=(nq, d)).astype(np.float32)
+    store_q, scales = quantize_tiles(store)
+    ops.ivf_search(queries[:8], cents, store, mask, nprobe=nprobe)  # warmup
+    t0 = time.monotonic()
+    for _ in range(5):
+        ops.ivf_search(queries, cents, store, mask, nprobe=nprobe)
+    dt = (time.monotonic() - t0) / 5
+    emit(f"kernels/ivf_search_{kc}x{L}x{d}", 1e6 * dt,
+         bytes_per_vec=bytes_per_vector(d, "none"))
+    ops.ivf_search_q(queries[:8], cents, store_q, scales, mask, nprobe=nprobe)
+    t0 = time.monotonic()
+    for _ in range(5):
+        ops.ivf_search_q(queries, cents, store_q, scales, mask, nprobe=nprobe)
+    dtq = (time.monotonic() - t0) / 5
+    emit(f"kernels/ivf_search_q_{kc}x{L}x{d}", 1e6 * dtq,
+         bytes_per_vec=bytes_per_vector(d, "int8"))
+
     ks = jax.random.split(jax.random.PRNGKey(0), 3)
     qq = jax.random.normal(ks[0], (2, 512, 8, 64), jnp.float32)
     kk = jax.random.normal(ks[1], (2, 512, 2, 64), jnp.float32)

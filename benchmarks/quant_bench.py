@@ -1,0 +1,134 @@
+"""Quantized retrieval benchmark: int8 IVF tiles + exact rerank vs fp32 IVF.
+
+50k-row clustered corpus (d=64), 64 queries, k=10:
+
+  * bytes per scanned vector: int8 tiles must stream >= 3.5x fewer bytes
+    through the cluster-scan hot loop than the fp32 IVF scan (measured from
+    ``last_stats["scanned_bytes"]``, which includes the exact-rerank fp32
+    re-reads);
+  * recall@10 vs the exact top-10 with the rerank on (must hold >= 0.99 of
+    exact) and with it off (rerank_factor=1: shows what the rerank buys);
+  * scan wall-clock for both precisions (jnp reference path on CPU — the
+    byte win is the HBM story; wall-clock is reported, not asserted);
+  * ``quantize="none"`` must stay bit-identical to the plain IVF path.
+
+Writes ``BENCH_quant.json``.
+
+    PYTHONPATH=src python -m benchmarks.quant_bench
+"""
+import json
+import time
+
+import numpy as np
+
+from benchmarks._util import emit
+from repro.index import IVFIndex, VectorIndex
+from repro.index.quant import bytes_per_vector
+
+N_CORPUS = 50_000
+N_QUERIES = 64
+DIM = 64
+K = 10
+RECALL_TARGET = 0.95
+MIN_BYTES_FACTOR = 3.5
+MIN_RECALL_VS_EXACT = 0.99
+
+
+def _clustered(n, d=DIM, n_centers=64, noise=0.18, seed=0):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(n_centers, d))
+    centers /= np.linalg.norm(centers, axis=1, keepdims=True)
+    lab = rng.integers(n_centers, size=n)
+    x = centers[lab] + noise * rng.normal(size=(n, d))
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    return np.asarray(x, np.float32), centers
+
+
+def _recall(exact_idx, got_idx):
+    return float(np.mean([len(set(exact_idx[i]) & set(got_idx[i])) / K
+                          for i in range(len(exact_idx))]))
+
+
+def run() -> None:
+    corpus, centers = _clustered(N_CORPUS)
+    rng = np.random.default_rng(99)
+    queries = centers[rng.integers(len(centers), size=N_QUERIES)] \
+        + 0.18 * rng.normal(size=(N_QUERIES, DIM))
+    queries = np.asarray(queries, np.float32)
+
+    _, exact_idx = VectorIndex(corpus).search(queries, K)
+
+    # -- fp32 IVF baseline -------------------------------------------------
+    ivf = IVFIndex(corpus, recall_target=RECALL_TARGET, block_q=1, seed=7)
+    t0 = time.monotonic()
+    fp32_scores, fp32_idx = ivf.search(queries, K)
+    t_fp32 = time.monotonic() - t0
+    st_fp32 = dict(ivf.last_stats)
+    recall_fp32 = _recall(exact_idx, fp32_idx)
+    emit("quant/ivf_fp32", 1e6 * t_fp32 / N_QUERIES,
+         scanned_bytes=st_fp32["scanned_bytes"],
+         recall_at_10=round(recall_fp32, 4), wall_s=round(t_fp32, 3))
+
+    # -- int8 IVF + exact rerank (same layout knobs) -----------------------
+    t0 = time.monotonic()
+    ivf_q = IVFIndex(corpus, recall_target=RECALL_TARGET, block_q=1, seed=7,
+                     quantize="int8")
+    t_build_q = time.monotonic() - t0
+    t0 = time.monotonic()
+    _, q_idx = ivf_q.search(queries, K)
+    t_int8 = time.monotonic() - t0
+    st_int8 = dict(ivf_q.last_stats)
+    recall_int8 = _recall(exact_idx, q_idx)
+    bytes_factor = st_fp32["scanned_bytes"] / max(st_int8["scanned_bytes"], 1)
+    emit("quant/ivf_int8_rerank", 1e6 * t_int8 / N_QUERIES,
+         scanned_bytes=st_int8["scanned_bytes"],
+         bytes_factor=round(bytes_factor, 2),
+         recall_at_10=round(recall_int8, 4),
+         reranked=st_int8["reranked"], wall_s=round(t_int8, 3))
+
+    # -- int8 with the rerank off (rerank_factor=1 keeps pool == k) --------
+    ivf_q1 = IVFIndex(corpus, recall_target=RECALL_TARGET, block_q=1, seed=7,
+                      quantize="int8", rerank_factor=1)
+    _, q1_idx = ivf_q1.search(queries, K)
+    recall_norerank = _recall(exact_idx, q1_idx)
+    emit("quant/ivf_int8_norerank", 0.0,
+         recall_at_10=round(recall_norerank, 4))
+
+    # -- quantize="none" bit-identical to the fp32 path --------------------
+    ivf_none = IVFIndex(corpus, recall_target=RECALL_TARGET, block_q=1,
+                        seed=7, quantize="none")
+    none_scores, none_idx = ivf_none.search(queries, K)
+    none_identical = bool(np.array_equal(none_scores, fp32_scores)
+                          and np.array_equal(none_idx, fp32_idx))
+    emit("quant/none_identical", 0.0, identical=none_identical)
+
+    with open("BENCH_quant.json", "w") as fh:
+        json.dump({
+            "corpus": N_CORPUS, "queries": N_QUERIES, "dim": DIM, "k": K,
+            "recall_target": RECALL_TARGET,
+            "bytes_per_vector": {
+                "fp32": bytes_per_vector(DIM, "none"),
+                "int8": bytes_per_vector(DIM, "int8")},
+            "fp32": {**st_fp32, "recall_at_10": round(recall_fp32, 4),
+                     "wall_s": round(t_fp32, 4)},
+            "int8": {**st_int8, "recall_at_10": round(recall_int8, 4),
+                     "build_s": round(t_build_q, 4),
+                     "wall_s": round(t_int8, 4)},
+            "int8_no_rerank": {"recall_at_10": round(recall_norerank, 4)},
+            "bytes_factor": round(bytes_factor, 3),
+            "recall_vs_exact_ratio": round(
+                recall_int8 / max(recall_fp32, 1e-9), 4),
+            "none_identical": none_identical,
+        }, fh, indent=2)
+
+    assert bytes_factor >= MIN_BYTES_FACTOR, \
+        f"int8 scan streamed only {bytes_factor:.2f}x fewer bytes " \
+        f"(need >={MIN_BYTES_FACTOR}x)"
+    assert recall_int8 >= MIN_RECALL_VS_EXACT, \
+        f"int8+rerank recall@{K} {recall_int8:.3f} below " \
+        f"{MIN_RECALL_VS_EXACT} of exact"
+    assert none_identical, "quantize='none' diverged from the fp32 IVF path"
+
+
+if __name__ == "__main__":
+    run()

@@ -10,7 +10,7 @@ import time
 
 from benchmarks import (engine_bench, fig6_filter_tradeoff, fig8_groupby,
                         fig9_guarantees, index_bench, kernels_bench,
-                        pipeline_bench, serve_bench, shard_bench,
+                        pipeline_bench, quant_bench, serve_bench, shard_bench,
                         stream_bench, table2_factcheck, table3_biodex,
                         table5_join_plans, table6_7_ranking)
 
@@ -25,6 +25,7 @@ MODULES = {
     "pipeline": pipeline_bench,
     "serve": serve_bench,
     "index": index_bench,
+    "quant": quant_bench,
     "stream": stream_bench,
     "shard": shard_bench,
     "engine": engine_bench,

@@ -163,22 +163,26 @@ class SemFrame:
 
     def sem_search(self, column: str, query: str, *, k: int = 10,
                    n_rerank: int = 0, rerank_langex=None, index=None,
-                   index_kind: str = "exact", nprobe: int | None = None
-                   ) -> "SemFrame":
+                   index_kind: str = "exact", nprobe: int | None = None,
+                   quantize: str | None = None) -> "SemFrame":
         """Eager search defaults to the exact index (classic semantics);
-        pass ``index_kind="ivf"`` (or "auto") to opt into ANN retrieval.
-        The lazy path's optimizer makes that choice cost-based instead."""
+        pass ``index_kind="ivf"`` (or "auto") to opt into ANN retrieval,
+        and ``quantize="int8"`` for int8 IVF tiles + exact rerank.  The
+        lazy path's optimizer makes both choices cost-based instead."""
         node = PN.Search(self._scan(), column, query, k=k, n_rerank=n_rerank,
                          rerank_langex=rerank_langex, index=index,
-                         index_kind=index_kind, nprobe=nprobe)
+                         index_kind=index_kind, nprobe=nprobe,
+                         quantize=quantize)
         return self._child(self._execute(node))
 
     def sem_sim_join(self, other: "SemFrame | Sequence[dict]", left_col: str,
                      right_col: str, *, k: int = 1, index_kind: str = "exact",
-                     nprobe: int | None = None) -> "SemFrame":
+                     nprobe: int | None = None, quantize: str | None = None
+                     ) -> "SemFrame":
         right = other.records if isinstance(other, SemFrame) else list(other)
         node = PN.SimJoin(self._scan(), PN.Scan(right), left_col, right_col,
-                          k=k, index_kind=index_kind, nprobe=nprobe)
+                          k=k, index_kind=index_kind, nprobe=nprobe,
+                          quantize=quantize)
         return self._child(self._execute(node))
 
 
@@ -267,19 +271,22 @@ class LazySemFrame:
 
     def sem_search(self, column: str, query: str, *, k: int = 10,
                    n_rerank: int = 0, rerank_langex=None, index=None,
-                   index_kind: str = "auto", nprobe: int | None = None
-                   ) -> "LazySemFrame":
+                   index_kind: str = "auto", nprobe: int | None = None,
+                   quantize: str | None = None) -> "LazySemFrame":
         return self._child(PN.Search(self.plan, column, query, k=k,
                                      n_rerank=n_rerank,
                                      rerank_langex=rerank_langex, index=index,
-                                     index_kind=index_kind, nprobe=nprobe))
+                                     index_kind=index_kind, nprobe=nprobe,
+                                     quantize=quantize))
 
     def sem_sim_join(self, other, left_col: str, right_col: str, *,
                      k: int = 1, index_kind: str = "auto",
-                     nprobe: int | None = None) -> "LazySemFrame":
+                     nprobe: int | None = None, quantize: str | None = None
+                     ) -> "LazySemFrame":
         return self._child(PN.SimJoin(self.plan, self._right_plan(other),
                                       left_col, right_col, k=k,
-                                      index_kind=index_kind, nprobe=nprobe))
+                                      index_kind=index_kind, nprobe=nprobe,
+                                      quantize=quantize))
 
     # -- optimize / execute ------------------------------------------------
     def _optimizer_and_executor(self, **opt_kw):

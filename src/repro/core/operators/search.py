@@ -45,6 +45,15 @@ def _record_retrieval(st, index: RetrievalBackend) -> None:
     st.details.update(index=index.kind,
                       scored_vectors=index.last_stats.get("scored_vectors", 0),
                       probed_clusters=index.last_stats.get("probed_clusters", 0))
+    # dtype-aware byte accounting: int8 IVF tiles stream d+4 bytes per
+    # scanned vector (plus fp32 rerank re-reads) vs 4d at full precision
+    if "scanned_bytes" in index.last_stats:
+        st.details.update(
+            scanned_bytes=index.last_stats["scanned_bytes"],
+            quantize=index.last_stats.get("quantize", "none"))
+        if index.last_stats.get("reranked"):
+            st.details.update(
+                rerank_exact_rows=index.last_stats["reranked"])
 
 
 def sem_search(index: RetrievalBackend, query: str, embedder, *, k: int = 10,

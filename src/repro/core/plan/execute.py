@@ -70,24 +70,30 @@ class PlanExecutor:
     # -- retrieval plumbing ------------------------------------------------
     def _build_index(self, texts: list[str], *, kind: str = "auto",
                      nprobe: int | None = None, n_queries: int = 1,
-                     shards: int | None = None):
+                     shards: int | None = None, quantize: str | None = None):
         """Embed + index ``texts`` through the RetrievalBackend layer,
         consulting the shared IndexRegistry when one is installed.
-        ``shards`` (optimizer-installed device layout) becomes a build
-        param, so the registry keys sharded and unsharded builds of the
-        same corpus separately."""
-        from repro.index.backend import IVF_MIN_CORPUS, choose_backend
+        ``shards`` (optimizer-installed device layout) and ``quantize``
+        (IVF tile precision) become build params, so the registry keys
+        sharded/unsharded and int8/fp32 builds of the same corpus
+        separately — a cached build never aliases across precisions."""
+        from repro.index.backend import (IVF_MIN_CORPUS,
+                                         choose_retrieval_config)
         if kind == "auto":
             # a registry amortizes the IVF build across sessions; without
             # one the index dies with this call, so the build must pay for
             # itself against a single exact scan
-            kind, auto_probe = choose_backend(
+            cfg = choose_retrieval_config(
                 len(texts), max(n_queries, 1),
                 recall_target=self.recall_target,
                 min_corpus=self.index_min_corpus or IVF_MIN_CORPUS,
                 shared=self.index_registry is not None)
-            nprobe = nprobe if nprobe is not None else auto_probe
+            kind = cfg["kind"]
+            nprobe = nprobe if nprobe is not None else cfg["nprobe"]
+            quantize = quantize if quantize is not None else cfg["quantize"]
         kw = {"nprobe": nprobe} if (kind == "ivf" and nprobe) else {}
+        if kind == "ivf" and quantize and quantize != "none":
+            kw["quantize"] = quantize
         if shards and shards > 1:
             kw["shards"] = int(shards)
         if self.index_registry is None:
@@ -100,20 +106,24 @@ class PlanExecutor:
     def _build_stream_index(self, scan: N.StreamScan, column: str,
                             n_corpus: int, *, kind: str = "auto",
                             nprobe: int | None = None, n_queries: int = 1,
-                            shards: int | None = None):
+                            shards: int | None = None,
+                            quantize: str | None = None):
         """Version-aware index for a StreamScan corpus: the registry keys on
         (table id, embedder, config) instead of a content fingerprint, so an
         appends-only commit reuses the cached base index and embeds/indexes
         only the delta rows (``IndexRegistry.get_or_update``)."""
-        from repro.index.backend import IVF_MIN_CORPUS, choose_backend
+        from repro.index.backend import (IVF_MIN_CORPUS,
+                                         choose_retrieval_config)
         table = scan.table
         version = scan.version if scan.version is not None else table.version
         if kind == "auto":
-            kind, _ = choose_backend(
+            cfg = choose_retrieval_config(
                 n_corpus, max(n_queries, 1),
                 recall_target=self.recall_target,
                 min_corpus=self.index_min_corpus or IVF_MIN_CORPUS,
                 shared=True)
+            kind = cfg["kind"]
+            quantize = quantize if quantize is not None else cfg["quantize"]
         # key by the recall target, NOT a size-derived nprobe: the derived
         # probe count shifts as the table grows, and a shifting key would
         # turn every append into a full rebuild; the index derives (and on
@@ -125,6 +135,11 @@ class PlanExecutor:
             kw = {"nprobe": nprobe}
         else:
             kw = {"recall_target": self.recall_target}
+        if kind == "ivf" and quantize and quantize != "none":
+            # tile precision is corpus-size-independent and changes stored
+            # bytes + scores: it must live in the versioned key so int8 and
+            # fp32 builds of the same table never alias
+            kw["quantize"] = quantize
         if shards and shards > 1:
             # shard layout is corpus-size-independent (device count), so it
             # is safe in the versioned key — appends keep reusing the entry
@@ -148,7 +163,8 @@ class PlanExecutor:
 
     def _corpus_index(self, child: N.LogicalNode, texts: list[str], column: str,
                       *, kind: str = "auto", nprobe: int | None = None,
-                      n_queries: int = 1, shards: int | None = None):
+                      n_queries: int = 1, shards: int | None = None,
+                      quantize: str | None = None):
         """Executor delta routing: a StreamScan corpus under a registry goes
         through the versioned reuse path; everything else builds (or fetches
         by content fingerprint) as before.  ``child`` is unwrapped through
@@ -158,9 +174,10 @@ class PlanExecutor:
         if self.index_registry is not None and isinstance(child, N.StreamScan):
             return self._build_stream_index(child, column, len(texts), kind=kind,
                                             nprobe=nprobe, n_queries=n_queries,
-                                            shards=shards)
+                                            shards=shards, quantize=quantize)
         return self._build_index(texts, kind=kind, nprobe=nprobe,
-                                 n_queries=n_queries, shards=shards)
+                                 n_queries=n_queries, shards=shards,
+                                 quantize=quantize)
 
     # -- plumbing ---------------------------------------------------------
     def _log(self, stats: dict) -> dict:
@@ -371,7 +388,8 @@ class PlanExecutor:
         recs = self.run(node.child)
         index = node.index or self._corpus_index(
             node.child, [str(t[node.column]) for t in recs], node.column,
-            kind=node.index_kind, nprobe=node.nprobe, shards=node.shards)
+            kind=node.index_kind, nprobe=node.nprobe, shards=node.shards,
+            quantize=node.quantize)
         # a shared stream index can be ahead of this run's pinned snapshot
         # (a commit landed mid-query): bound hits to the snapshot's rows
         cutoff = len(recs) \
@@ -390,7 +408,7 @@ class PlanExecutor:
                                    [str(t[node.right_col]) for t in right],
                                    node.right_col, kind=node.index_kind,
                                    nprobe=node.nprobe, n_queries=len(left),
-                                   shards=node.shards)
+                                   shards=node.shards, quantize=node.quantize)
         cutoff = len(right) \
             if isinstance(N.plain(node.right), N.StreamScan) else None
         scores, idx, stats = _search.sem_sim_join(
@@ -684,7 +702,7 @@ class PartitionedExecutor(PlanExecutor):
                                    [str(t[node.right_col]) for t in right],
                                    node.right_col, kind=node.index_kind,
                                    nprobe=node.nprobe, n_queries=len(left),
-                                   shards=node.shards)
+                                   shards=node.shards, quantize=node.quantize)
         cutoff = len(right) \
             if isinstance(N.plain(node.right), N.StreamScan) else None
         left_texts = [str(t[node.left_col]) for t in left]

@@ -310,10 +310,11 @@ class Extract(LogicalNode):
         return f"Extract[{self.source_field}->{self.out_column}] {self.langex.template!r}"
 
 
-def _index_tag(index_kind: str, nprobe, shards=None) -> str:
+def _index_tag(index_kind: str, nprobe, shards=None, quantize=None) -> str:
     out = ""
     if index_kind == "ivf":
-        out = f", ivf(nprobe={nprobe})" if nprobe else ", ivf"
+        tag = "ivf-int8" if quantize == "int8" else "ivf"
+        out = f", {tag}(nprobe={nprobe})" if nprobe else f", {tag}"
     elif index_kind != "auto":
         out = f", {index_kind}"
     if shards:
@@ -333,13 +334,14 @@ class Search(LogicalNode):
     index_kind: str = "auto"   # "exact" | "ivf" | "auto" (optimizer decides)
     nprobe: int | None = None  # IVF recall knob, installed by the optimizer
     shards: int | None = None  # device-shard layout, installed by the optimizer
+    quantize: str | None = None  # IVF tile precision ("none"|"int8"), rule 5
 
     def columns(self) -> set[str]:
         return self.child.columns()
 
     def label(self) -> str:
         return (f"Search[k={self.k}"
-                f"{_index_tag(self.index_kind, self.nprobe, self.shards)}] "
+                f"{_index_tag(self.index_kind, self.nprobe, self.shards, self.quantize)}] "
                 f"{self.column}~{self.query!r}")
 
 
@@ -353,6 +355,7 @@ class SimJoin(LogicalNode):
     index_kind: str = "auto"
     nprobe: int | None = None
     shards: int | None = None
+    quantize: str | None = None
 
     def columns(self) -> set[str]:
         return (self.left.columns()
@@ -360,5 +363,5 @@ class SimJoin(LogicalNode):
 
     def label(self) -> str:
         return (f"SimJoin[k={self.k}"
-                f"{_index_tag(self.index_kind, self.nprobe, self.shards)}] "
+                f"{_index_tag(self.index_kind, self.nprobe, self.shards, self.quantize)}] "
                 f"{self.left_col}~{self.right_col}")

@@ -26,12 +26,17 @@ smaller bill and only fire when the cost model says so):
                                 row) when the session has an embedder.
   5. ``choose_retrieval``     — every Search/SimJoin node with
                                 ``index_kind="auto"`` gets an exact or IVF
-                                retrieval backend by FLOP cost (build cost
-                                amortized over expected probes vs exact scan;
-                                ``repro.index.backend.choose_backend``) at
-                                the optimizer's ``recall_target``; the choice
-                                (and the IVF ``nprobe`` knob) is installed on
-                                the node and shows up in ``explain_plan``.
+                                retrieval backend by byte-aware cost (build
+                                cost amortized over expected probes vs exact
+                                scan, scan cost priced in HBM bytes per
+                                stored dtype;
+                                ``repro.index.backend.choose_retrieval_config``)
+                                at the optimizer's ``recall_target``; the
+                                choice — kind, IVF ``nprobe``, and tile
+                                precision (int8 tiles + exact rerank when the
+                                byte/recall trade wins and the corpus clears
+                                ``quant_min_corpus``) — is installed on the
+                                node and shows up in ``explain_plan``.
   6. ``plan_partitions``      — with ``n_partitions`` set, operators over
                                 enough rows are cut into Exchange-bounded
                                 fragments (``nodes.Partition`` below,
@@ -71,9 +76,9 @@ import numpy as np
 from repro.core.operators.filter import predicate_prompt
 from repro.core.optimizer import stats
 from repro.core.plan import nodes as N
-from repro.index.backend import (IVF_MIN_CORPUS, SHARD_MIN_CORPUS,
-                                 choose_backend, choose_shards,
-                                 retrieval_costs)
+from repro.index.backend import (IVF_MIN_CORPUS, QUANT_MIN_CORPUS,
+                                 SHARD_MIN_CORPUS, choose_retrieval_config,
+                                 choose_shards)
 
 # per-tuple oracle-equivalent unit costs (cascades mostly pay the proxy)
 GOLD_FILTER_COST = 1.0
@@ -194,7 +199,9 @@ class PlanOptimizer:
                  partition_min_rows: int = 32,
                  broadcast_max_rows: int = 2048,
                  shards: int | str | None = "auto",
-                 shard_min_corpus: int = SHARD_MIN_CORPUS):
+                 shard_min_corpus: int = SHARD_MIN_CORPUS,
+                 quantize: str = "auto",
+                 quant_min_corpus: int = QUANT_MIN_CORPUS):
         self.session = session
         # probe through the executor's cache so sample labels are reused
         self.oracle = oracle if oracle is not None else session.oracle
@@ -219,6 +226,11 @@ class PlanOptimizer:
         # never annotates, so plain CPU runs are untouched); an int pins it
         self.shards = shards
         self.shard_min_corpus = shard_min_corpus
+        # IVF tile precision: "auto" lets the byte-aware cost model pick int8
+        # tiles (+ exact rerank) once the corpus clears quant_min_corpus;
+        # "int8"/"none" pin it
+        self.quantize = quantize
+        self.quant_min_corpus = quant_min_corpus
         self.applied: list[AppliedRewrite] = []
         self._sel_memo: dict[tuple, float] = {}
 
@@ -382,10 +394,14 @@ class PlanOptimizer:
         else:
             return None
         corpus_child = node.child if isinstance(node, N.Search) else node.right
-        kind, nprobe = choose_backend(
+        k = node.k if isinstance(node, (N.Search, N.SimJoin)) else 10
+        cfg = choose_retrieval_config(
             int(n_corpus), max(int(n_queries), 1),
             recall_target=self.recall_target, min_corpus=self.index_min_corpus,
-            shared=self.index_shared)
+            shared=self.index_shared,
+            quantize=node.quantize or self.quantize,  # node pin wins
+            min_quant_corpus=self.quant_min_corpus, k=max(int(k), 1))
+        kind, nprobe, quantize = cfg["kind"], cfg["nprobe"], cfg["quantize"]
         if isinstance(corpus_child, N.StreamScan):
             # don't pin the size-derived nprobe on a stream corpus: it would
             # land in the versioned registry key and churn it as the table
@@ -393,16 +409,21 @@ class PlanOptimizer:
             # keys by recall_target and the index derives nprobe itself
             nprobe = None
         if kind == "ivf":
-            c = retrieval_costs(int(n_corpus), max(int(n_queries), 1),
-                                recall_target=self.recall_target,
-                                shared=self.index_shared)
-            self.applied.append(AppliedRewrite(
-                "choose_retrieval",
-                f"{type(node).__name__.lower()} over ~{n_corpus:.0f} rows -> "
-                f"IVF (nprobe={nprobe}/{c['n_clusters']} clusters, "
-                f"recall_target={self.recall_target}; est. scan units "
-                f"{c['ivf']:.0f} vs exact {c['exact']:.0f})"))
-        return dataclasses.replace(node, index_kind=kind, nprobe=nprobe)
+            c = cfg["costs"]
+            tag = "IVF-int8 (+exact rerank)" if quantize == "int8" else "IVF"
+            detail = (f"{type(node).__name__.lower()} over ~{n_corpus:.0f} "
+                      f"rows -> {tag} (nprobe={nprobe}/{c['n_clusters']} "
+                      f"clusters, recall_target={self.recall_target}; est. "
+                      f"scan units {c['ivf']:.0f} vs exact {c['exact']:.0f}")
+            if quantize == "int8":
+                detail += (f"; int8 {c['ivf_q']:.0f} units, "
+                           f"~{c['ivf_bytes_per_query'] / max(c['ivf_q_bytes_per_query'], 1):.1f}x "
+                           f"fewer scan bytes/query)")
+            else:
+                detail += ")"
+            self.applied.append(AppliedRewrite("choose_retrieval", detail))
+        return dataclasses.replace(node, index_kind=kind, nprobe=nprobe,
+                                   quantize=quantize)
 
     # -- rule 6: partition planning ----------------------------------------
     def _partition_count(self, n_rows: float) -> int:

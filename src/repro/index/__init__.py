@@ -3,23 +3,32 @@
     build_index(vectors, kind="exact"|"ivf"|"auto")   construction
     load_index(path)                                  persistence dispatch
     choose_backend(n_corpus, n_queries, ...)          shared cost model
+    choose_retrieval_config(...)                      + tile precision choice
 
 `VectorIndex` is the exact gold reference; `IVFIndex` prunes with spherical
 k-means inverted lists and a Pallas cluster-scan kernel (see
-`repro.kernels.ivf_scan`).  All similarity consumers — sem_search,
-sem_sim_join, the join sim-prefilter, sem_group_by center scoring, sem_topk
-pivot selection — go through this interface.
+`repro.kernels.ivf_scan`).  ``IVFIndex(quantize="int8")`` stores the tiles
+as symmetric per-vector int8 (`repro.index.quant`), scans them with the
+fused dequantize+score kernel (`repro.kernels.ivf_scan_q`), and exact-
+reranks in fp32.  All similarity consumers — sem_search, sem_sim_join, the
+join sim-prefilter, sem_group_by center scoring, sem_topk pivot selection —
+go through this interface.
 """
 from repro.index.backend import (RetrievalBackend, build_index, choose_backend,
-                                 choose_shards, corpus_fingerprint,
-                                 embedder_key, load_index, nprobe_for_recall,
-                                 retrieval_costs)
+                                 choose_retrieval_config, choose_shards,
+                                 corpus_fingerprint, embedder_key, load_index,
+                                 nprobe_for_recall, retrieval_costs)
 from repro.index.ivf_index import IVFIndex
 from repro.index.kmeans import kmeans
+from repro.index.quant import (bytes_per_vector, dequantize_rows,
+                               quantize_rows, quantize_tiles,
+                               quantized_scores)
 from repro.index.vector_index import VectorIndex
 
 __all__ = [
     "IVFIndex", "RetrievalBackend", "VectorIndex", "build_index",
-    "choose_backend", "choose_shards", "corpus_fingerprint", "embedder_key",
-    "kmeans", "load_index", "nprobe_for_recall", "retrieval_costs",
+    "bytes_per_vector", "choose_backend", "choose_retrieval_config",
+    "choose_shards", "corpus_fingerprint", "dequantize_rows", "embedder_key",
+    "kmeans", "load_index", "nprobe_for_recall", "quantize_rows",
+    "quantize_tiles", "quantized_scores", "retrieval_costs",
 ]

@@ -40,6 +40,14 @@ IVF_BUILD_QUERIES = 10_000   # queries a built index amortizes over (the
 MIN_PROBE_FRAC = 0.02        # recall floor: never probe fewer clusters
 SHARD_MIN_CORPUS = 4096      # below this a device-sharded scan can't pay
                              # the shard_map dispatch + host merge overhead
+QUANT_MIN_CORPUS = 8192      # below this the exact-rerank overhead eats the
+                             # int8 byte win (and fp32 tiles fit anyway)
+NOMINAL_DIM = 64             # byte-cost dim when the plan layer doesn't know
+                             # the embedding width (embeddings don't exist at
+                             # plan time); only the fp32/int8 *ratio* matters
+                             # for the decision, and that is dim-insensitive
+DEFAULT_RERANK_FACTOR = 4    # quantized scan keeps rerank_factor*k
+                             # candidates for the exact fp32 rerank
 
 # score written to masked padding lanes / unfilled slots (finite: TPU-safe).
 # Canonical home is here (numpy-only module) so the IVF index and the
@@ -199,26 +207,58 @@ def nprobe_for_recall(n_clusters: int, recall_target: float) -> int:
 
 
 def retrieval_costs(n_corpus: int, n_queries: int, *,
-                    recall_target: float = 0.95, shared: bool = False) -> dict:
-    """FLOP-proportional costs of serving ``n_queries`` over ``n_corpus``:
-    exact scan vs IVF build (subsampled k-means + one full assignment pass)
-    plus centroid scoring plus the probed-cluster scan.
+                    recall_target: float = 0.95, shared: bool = False,
+                    k: int = 10, dim: int = NOMINAL_DIM,
+                    rerank_factor: int = DEFAULT_RERANK_FACTOR) -> dict:
+    """Byte-aware costs of serving ``n_queries`` over ``n_corpus``: exact
+    scan vs fp32 IVF vs int8 IVF + exact rerank.
+
+    The scan hot loop is memory-bound, so the cost unit is *one fp32 vector
+    streamed from HBM per query* (``4*dim`` bytes); an int8 vector streams
+    ``dim + 4`` bytes (payload + its f32 scale;
+    ``repro.index.quant.bytes_per_vector``) and therefore costs a fraction
+    of a unit, but every query additionally pays ``rerank_factor * k`` fp32
+    rescans for the exact rerank that restores the recall contract.  Build
+    costs stay FLOP-proportional in the same unit (one unit = one
+    vector-vs-query score), exactly as before — quantization adds one cheap
+    streaming pass (``0.25 * n_corpus`` units).
 
     ``shared=True`` models a registry-backed build reused across sessions:
     this batch is charged its per-query share of the build assuming
     ``IVF_BUILD_QUERIES`` lifetime queries.  ``shared=False`` (no registry:
-    the index dies with the call) charges the whole build to this batch."""
+    the index dies with the call) charges the whole build to this batch.
+
+    Returns units (``exact`` / ``ivf`` / ``ivf_q``) plus the raw scanned
+    bytes per query (``*_bytes_per_query``) for explain output."""
+    from repro.index.quant import bytes_per_vector
     kc = default_n_clusters(n_corpus)
     nprobe = nprobe_for_recall(kc, recall_target)
     avg_cluster = n_corpus / max(kc, 1)
+    fp32_vec = bytes_per_vector(dim, "none")
+    int8_frac = bytes_per_vector(dim, "int8") / fp32_vec  # ~0.27 at d=64
     exact = float(n_queries * n_corpus)
     train = train_sample_size(n_corpus, kc)
     build = float(train * kc * IVF_BUILD_ITERS + n_corpus * kc)
+    # one cheap streaming quant pass on top of the k-means build; amortizes
+    # over serving traffic exactly like the rest of the build
+    build_q = build + 0.25 * n_corpus
     if shared:
         build *= n_queries / IVF_BUILD_QUERIES
-    scan = n_queries * (kc + nprobe * avg_cluster)
-    return {"exact": exact, "ivf": build + scan, "n_clusters": kc,
-            "nprobe": nprobe}
+        build_q *= n_queries / IVF_BUILD_QUERIES
+    scanned = kc + nprobe * avg_cluster            # vectors per query
+    scan = n_queries * scanned
+    # quantized: centroids stay fp32 (tiny), probed tiles stream at the int8
+    # fraction, and the rerank exact-rescans rerank_factor*k rows per query
+    rerank = min(rerank_factor * k, nprobe * avg_cluster)
+    scan_q = n_queries * (kc + int8_frac * nprobe * avg_cluster + rerank)
+    return {"exact": exact, "ivf": build + scan, "ivf_q": build_q + scan_q,
+            "n_clusters": kc, "nprobe": nprobe,
+            "exact_bytes_per_query": n_corpus * fp32_vec,
+            "ivf_bytes_per_query": scanned * fp32_vec,
+            "ivf_q_bytes_per_query": (kc * fp32_vec
+                                      + nprobe * avg_cluster
+                                      * bytes_per_vector(dim, "int8")
+                                      + rerank * fp32_vec)}
 
 
 def choose_backend(n_corpus: int, n_queries: int, *,
@@ -233,6 +273,42 @@ def choose_backend(n_corpus: int, n_queries: int, *,
     if c["ivf"] < c["exact"]:
         return "ivf", c["nprobe"]
     return "exact", None
+
+
+def choose_retrieval_config(n_corpus: int, n_queries: int, *,
+                            recall_target: float = 0.95,
+                            min_corpus: int = IVF_MIN_CORPUS,
+                            shared: bool = False, quantize: str = "auto",
+                            min_quant_corpus: int = QUANT_MIN_CORPUS,
+                            k: int = 10,
+                            rerank_factor: int = DEFAULT_RERANK_FACTOR) -> dict:
+    """Full retrieval choice: backend kind + nprobe + tile precision.
+
+    Extends :func:`choose_backend` with the byte/recall trade: when IVF wins
+    and the corpus clears ``min_quant_corpus``, int8 tiles are chosen
+    exactly when their byte-aware cost (``ivf_q``: int8 scan + exact-rerank
+    overhead) beats the fp32 scan.  ``quantize`` pins the answer ("int8" /
+    "none") or lets the cost model decide ("auto"); exact retrieval is
+    always full precision.
+
+    -> {"kind", "nprobe", "quantize", "costs"} — ``costs`` is the
+    :func:`retrieval_costs` dict when IVF was priced, else None."""
+    if quantize not in ("auto", "int8", "none"):
+        raise ValueError(f"quantize={quantize!r} (expected 'auto'|'int8'|'none')")
+    kind, nprobe = choose_backend(n_corpus, n_queries,
+                                  recall_target=recall_target,
+                                  min_corpus=min_corpus, shared=shared)
+    if kind != "ivf":
+        return {"kind": kind, "nprobe": None, "quantize": "none", "costs": None}
+    c = retrieval_costs(n_corpus, n_queries, recall_target=recall_target,
+                        shared=shared, k=k, rerank_factor=rerank_factor)
+    if quantize == "int8":
+        chosen = "int8"
+    elif quantize == "none" or n_corpus < min_quant_corpus:
+        chosen = "none"
+    else:
+        chosen = "int8" if c["ivf_q"] < c["ivf"] else "none"
+    return {"kind": kind, "nprobe": nprobe, "quantize": chosen, "costs": c}
 
 
 # ---------------------------------------------------------------------------

@@ -28,6 +28,18 @@ thread by default (searches keep running against the old store + buffer
 until the atomic swap), synchronously with ``retrain="sync"``, or never
 with ``retrain="off"``.  A sync retrain is bit-identical to a fresh build
 over the concatenated corpus with the same seed/params (tests enforce it).
+
+Quantization: ``quantize="int8"`` stores the tiles as symmetric per-vector
+int8 (`index/quant.py`) — ``d + 4`` HBM bytes per scanned vector instead of
+``4 * d`` — and the cluster scan dequantizes in-kernel
+(`kernels/ivf_scan_q.py`).  Quantized scores rank a candidate pool of
+``rerank_factor * k`` per query, which an exact fp32 rerank
+(:meth:`_exact_rerank`, reading the raw ``self.vectors`` rows the index
+already keeps) rescores before the final top-k — the measured recall@k
+contract is preserved while the scan streams ~4x fewer bytes.  The delta
+side buffer quantizes incrementally in ``add()``; retrains re-quantize from
+the fp32 corpus, so no drift accumulates.  ``quantize="none"`` (default)
+leaves every code path and result bit-identical to the unquantized index.
 """
 from __future__ import annotations
 
@@ -37,10 +49,11 @@ import threading
 
 import numpy as np
 
-from repro.index.backend import (MASKED_SCORE, RetrievalBackend,
-                                 default_n_clusters, nprobe_for_recall,
-                                 train_sample_size)
+from repro.index.backend import (DEFAULT_RERANK_FACTOR, MASKED_SCORE,
+                                 RetrievalBackend, default_n_clusters,
+                                 nprobe_for_recall, train_sample_size)
 from repro.index.kmeans import kmeans
+from repro.index.quant import bytes_per_vector, quantize_rows, quantize_tiles
 
 _LANE = 128        # pad L to the TPU lane width so MXU tiles stay aligned
 _BALANCE_FACTOR = 4  # cap cluster size at this multiple of the mean: every
@@ -56,10 +69,15 @@ class IVFIndex(RetrievalBackend):
                  recall_target: float = 0.95, kmeans_iters: int = 10,
                  block_q: int = 8, seed: int = 0,
                  spill_threshold: float = 0.10, retrain: str = "background",
-                 shards: int | None = None,
+                 shards: int | None = None, quantize: str = "none",
+                 rerank_factor: int = DEFAULT_RERANK_FACTOR,
                  _centroids: np.ndarray | None = None,
                  _assign: np.ndarray | None = None):
         super().__init__(vectors, ids)
+        if quantize not in ("none", "int8"):
+            raise ValueError(f"quantize={quantize!r} (expected 'none'|'int8')")
+        self.quantize = quantize
+        self.rerank_factor = max(int(rerank_factor), 1)
         # shards > 1 distributes the inverted-file tiles across devices and
         # scans probed clusters on their home device (ops.sharded_ivf_search)
         # — scores, and therefore results, are identical to unsharded
@@ -86,6 +104,8 @@ class IVFIndex(RetrievalBackend):
         d = unit.shape[1] if unit.ndim == 2 else 0
         self._delta_unit = np.zeros((0, d), np.float32)
         self._delta_pos = np.zeros(0, np.int64)
+        self._delta_q = np.zeros((0, d), np.int8)
+        self._delta_scales = np.zeros(0, np.float32)
         if _centroids is not None and _assign is not None:  # load() fast path
             self.centroids, self.assign = _centroids, _assign
         else:
@@ -150,13 +170,22 @@ class IVFIndex(RetrievalBackend):
         L = int(max(self.cluster_sizes.max(initial=1), 1))
         L = -(-L // _LANE) * _LANE
         d = unit.shape[1] if unit.ndim == 2 else 0
-        self.store = np.zeros((kc, L, d), np.float32)
+        store = np.zeros((kc, L, d), np.float32)
         self.store_mask = np.zeros((kc, L), np.float32)
         self.store_ids = np.full((kc, L), -1, np.int32)
         for j, m in enumerate(members):
-            self.store[j, : len(m)] = unit[m]
+            store[j, : len(m)] = unit[m]
             self.store_mask[j, : len(m)] = 1.0
             self.store_ids[j, : len(m)] = m
+        if self.quantize == "int8":
+            # quantized tiles replace the fp32 store entirely — the memory
+            # saving is real, not a shadow copy; exact rerank reads the raw
+            # corpus rows the base index already keeps (self.vectors)
+            self.store_q, self.store_scales = quantize_tiles(store)
+            self.store = None
+        else:
+            self.store = store
+            self.store_q = self.store_scales = None
         # worst-case probe floor: any m probed clusters hold at least the sum
         # of the m smallest lists, so k results need at most this many probes
         self._size_cumsum = np.cumsum(np.sort(self.cluster_sizes))
@@ -204,6 +233,14 @@ class IVFIndex(RetrievalBackend):
                 if len(self._delta_unit) else unit
             self._delta_pos = np.concatenate(
                 [self._delta_pos, np.arange(start, start + len(v), dtype=np.int64)])
+            if self.quantize == "int8":
+                # quantize incrementally: per-vector scales are independent,
+                # so appending never re-touches earlier buffer rows
+                dq, dscales = quantize_rows(unit)
+                self._delta_q = np.concatenate([self._delta_q, dq]) \
+                    if len(self._delta_q) else dq
+                self._delta_scales = np.concatenate(
+                    [self._delta_scales, dscales])
             spill = len(self._delta_pos) / max(self.n_clustered, 1)
         if spill > self.spill_threshold and self.retrain_mode != "off":
             self.retrain(wait=self.retrain_mode == "sync")
@@ -247,6 +284,9 @@ class IVFIndex(RetrievalBackend):
                     keep = self._delta_pos >= n  # rows added mid-retrain stay
                     self._delta_unit = self._delta_unit[keep]
                     self._delta_pos = self._delta_pos[keep]
+                    if self.quantize == "int8":
+                        self._delta_q = self._delta_q[keep]
+                        self._delta_scales = self._delta_scales[keep]
                     self.retrains += 1
             finally:
                 with self._mut:
@@ -267,11 +307,15 @@ class IVFIndex(RetrievalBackend):
         nq = len(q)
         with self._mut:   # consistent (store, delta) snapshot vs add/retrain
             centroids, store = self.centroids, self.store
+            store_q, store_scales = self.store_q, self.store_scales
             store_mask, store_ids = self.store_mask, self.store_ids
             cluster_sizes, size_cumsum = self.cluster_sizes, self._size_cumsum
             delta_unit, delta_pos = self._delta_unit, self._delta_pos
+            delta_q, delta_scales = self._delta_q, self._delta_scales
             n_clusters, nprobe_default = self.n_clusters, self.nprobe
-            n_total = len(self.vectors)
+            vectors, n_total = self.vectors, len(self.vectors)
+        quantized = self.quantize == "int8"
+        d = q.shape[1] if q.ndim == 2 else 0
         nd = len(delta_pos)
         k = min(k, n_total if max_pos is None else min(n_total, max_pos))
         # only delta rows inside the snapshot cutoff count toward the probe
@@ -280,10 +324,15 @@ class IVFIndex(RetrievalBackend):
         if nq == 0:  # an upstream operator emptied the query side
             self.last_stats = {"index": self.kind, "scored_vectors": 0,
                                "probed_clusters": 0, "nprobe": 0,
-                               "n_clusters": int(n_clusters), "delta_rows": nd}
+                               "n_clusters": int(n_clusters), "delta_rows": nd,
+                               "quantize": self.quantize, "scanned_bytes": 0,
+                               "reranked": 0}
             return np.zeros((0, k), np.float32), np.zeros((0, k), np.int64)
+        # the quantized scan ranks a wider candidate pool so the exact fp32
+        # rerank has headroom to repair int8 ranking error around the top-k
+        k_cand = min(self.rerank_factor * k, n_total) if quantized else k
         nprobe_eff = min(max(nprobe or nprobe_default,
-                             self._min_probes(k, size_cumsum, nd_floor)),
+                             self._min_probes(k_cand, size_cumsum, nd_floor)),
                          n_clusters)
         # accounting uses the split the dispatch actually runs (clamped to
         # the device count on the shard_map path)
@@ -295,16 +344,37 @@ class IVFIndex(RetrievalBackend):
             # sharded probed-cluster scan; the (small) delta side buffer is
             # exact-scanned on host and concatenated, exactly like
             # ops.ivf_delta_search assembles it
-            scores, probe_blocks = kops.sharded_ivf_search(
-                q, centroids, store, store_mask,
-                nprobe=nprobe_eff, shards=shards, block_q=self.block_q)
+            if quantized:
+                scores, probe_blocks = kops.sharded_ivf_search_q(
+                    q, centroids, store_q, store_scales, store_mask,
+                    nprobe=nprobe_eff, shards=shards, block_q=self.block_q)
+            else:
+                scores, probe_blocks = kops.sharded_ivf_search(
+                    q, centroids, store, store_mask,
+                    nprobe=nprobe_eff, shards=shards, block_q=self.block_q)
             if nd:
-                ds = kops.similarity(q, delta_unit)
+                if quantized:
+                    from repro.index.quant import quantized_scores
+                    qn = q / np.maximum(
+                        np.linalg.norm(q, axis=1, keepdims=True), 1e-9)
+                    ds = quantized_scores(qn, delta_q, delta_scales)
+                else:
+                    ds = kops.similarity(q, delta_unit)
                 scores = np.concatenate(
                     [scores, np.asarray(ds, np.float32)], axis=1)
         elif nd:
-            scores, probe_blocks = kops.ivf_delta_search(
-                q, centroids, store, store_mask, delta_unit,
+            if quantized:
+                scores, probe_blocks = kops.ivf_delta_search_q(
+                    q, centroids, store_q, store_scales, store_mask,
+                    delta_q, delta_scales,
+                    nprobe=nprobe_eff, block_q=self.block_q)
+            else:
+                scores, probe_blocks = kops.ivf_delta_search(
+                    q, centroids, store, store_mask, delta_unit,
+                    nprobe=nprobe_eff, block_q=self.block_q)
+        elif quantized:
+            scores, probe_blocks = kops.ivf_search_q(
+                q, centroids, store_q, store_scales, store_mask,
                 nprobe=nprobe_eff, block_q=self.block_q)
         else:
             scores, probe_blocks = kops.ivf_search(
@@ -317,7 +387,12 @@ class IVFIndex(RetrievalBackend):
             cand_ids = np.concatenate(
                 [cand_ids,
                  np.broadcast_to(delta_pos, (len(probe_blocks), nd))], axis=1)
-        out_s, out_i = self._topk_unique(scores, cand_ids, k, max_pos=max_pos)
+        out_s, out_i = self._topk_unique(scores, cand_ids, k_cand,
+                                         max_pos=max_pos)
+        reranked = 0
+        if quantized:
+            out_s, out_i, reranked = self._exact_rerank(q, out_s, out_i, k,
+                                                        vectors)
 
         scored = nq * nd
         probed_unique = 0
@@ -331,11 +406,20 @@ class IVFIndex(RetrievalBackend):
             if shards:  # each cluster is scanned by its home device only
                 np.add.at(per_shard, uniq // local_kc,
                           real_q * cluster_sizes[uniq])
+        # dtype-aware bytes streamed through the scan: every scored vector
+        # costs its stored width, plus (int8 only) the fp32 rows the exact
+        # rerank re-reads from the raw corpus
+        scanned_bytes = scored * bytes_per_vector(d, self.quantize)
+        if quantized:
+            scanned_bytes += reranked * bytes_per_vector(d, "none")
         self.last_stats = {"index": self.kind, "scored_vectors": scored,
                            "probed_clusters": int(probed_unique),
                            "nprobe": int(nprobe_eff),
                            "n_clusters": int(n_clusters),
-                           "delta_rows": nd, "delta_scored": nq * nd}
+                           "delta_rows": nd, "delta_scored": nq * nd,
+                           "quantize": self.quantize,
+                           "scanned_bytes": int(scanned_bytes),
+                           "reranked": int(reranked)}
         if shards:
             self.last_stats.update(
                 shards=int(shards),
@@ -381,6 +465,36 @@ class IVFIndex(RetrievalBackend):
                     break
         return out_s, out_i
 
+    def _exact_rerank(self, q: np.ndarray, cand_s: np.ndarray,
+                      cand_i: np.ndarray, k: int, vectors: np.ndarray
+                      ) -> tuple[np.ndarray, np.ndarray, int]:
+        """Exact fp32 rescore of the quantized candidate pool: gather the raw
+        corpus rows for each query's top ``rerank_factor*k`` int8 candidates,
+        rescore them in full precision (unit rows x unit query — the same
+        math the fp32 scan computes), keep the top ``k``.  Returned *scores*
+        are therefore exact; int8 error only survives in which rows made the
+        candidate pool, which the pool's width absorbs.  -> (scores [nq, k],
+        ids [nq, k], total rows reranked)."""
+        nq = len(q)
+        qn = q / np.maximum(np.linalg.norm(q, axis=1, keepdims=True), 1e-9)
+        out_s = np.full((nq, k), MASKED_SCORE, np.float32)
+        out_i = np.zeros((nq, k), np.int64)
+        reranked = 0
+        for r in range(nq):
+            valid = cand_s[r] > MASKED_SCORE / 2
+            ids = cand_i[r][valid].astype(np.int64)
+            if not len(ids):
+                continue
+            rows = vectors[ids]
+            rows = rows / np.maximum(
+                np.linalg.norm(rows, axis=1, keepdims=True), 1e-9)
+            exact = (rows @ qn[r]).astype(np.float32)
+            order = np.argsort(-exact, kind="stable")[:k]
+            out_s[r, : len(order)] = exact[order]
+            out_i[r, : len(order)] = ids[order]
+            reranked += len(ids)
+        return out_s, out_i, reranked
+
     def pairwise(self, queries: np.ndarray) -> np.ndarray:
         """Exact full matrix (proxy-calibration consumers need every score)."""
         from repro.kernels import ops as kops
@@ -390,7 +504,12 @@ class IVFIndex(RetrievalBackend):
         out = {**super().describe(), "n_clusters": int(self.n_clusters),
                "nprobe": int(self.nprobe), "block_q": self.block_q,
                "delta_rows": self.delta_rows, "retrains": self.retrains,
-               "spill_threshold": self.spill_threshold}
+               "spill_threshold": self.spill_threshold,
+               "quantize": self.quantize}
+        if self.quantize == "int8":
+            out["rerank_factor"] = self.rerank_factor
+            d = self.vectors.shape[1] if self.vectors.ndim == 2 else 0
+            out["bytes_per_vector"] = bytes_per_vector(d, self.quantize)
         if self.shards:
             out["shards"] = self.shards
         return out
@@ -405,6 +524,11 @@ class IVFIndex(RetrievalBackend):
         np.save(os.path.join(path, "vectors.npy"), vectors)
         np.save(os.path.join(path, "centroids.npy"), centroids)
         np.save(os.path.join(path, "assign.npy"), assign.astype(np.int32))
+        if self.quantize == "int8":
+            with self._mut:
+                np.save(os.path.join(path, "store_q.npy"), self.store_q)
+                np.save(os.path.join(path, "store_scales.npy"),
+                        self.store_scales)
         with open(os.path.join(path, "meta.json"), "w") as f:
             json.dump({"kind": self.kind, "ids": ids,
                        "dim": int(vectors.shape[1]),
@@ -413,7 +537,9 @@ class IVFIndex(RetrievalBackend):
                        "seed": self.seed, "n_base": int(n_base),
                        "spill_threshold": self.spill_threshold,
                        "retrain": self.retrain_mode,
-                       "shards": self.shards}, f)
+                       "shards": self.shards,
+                       "quantize": self.quantize,
+                       "rerank_factor": self.rerank_factor}, f)
 
     @classmethod
     def load(cls, path: str) -> "IVFIndex":
@@ -429,7 +555,17 @@ class IVFIndex(RetrievalBackend):
                   spill_threshold=meta.get("spill_threshold", 0.10),
                   retrain=meta.get("retrain", "background"),
                   shards=meta.get("shards"),
+                  quantize=meta.get("quantize", "none"),
+                  rerank_factor=meta.get("rerank_factor",
+                                         DEFAULT_RERANK_FACTOR),
                   _centroids=centroids, _assign=assign)
+        if idx.quantize == "int8":
+            # the persisted int8 store + scales are authoritative (the
+            # rebuild above re-derives identical arrays — quantization is
+            # deterministic — but round-tripping the saved bytes keeps the
+            # on-disk format the contract, not an implementation detail)
+            idx.store_q = np.load(os.path.join(path, "store_q.npy"))
+            idx.store_scales = np.load(os.path.join(path, "store_scales.npy"))
         if n_base < len(vectors):  # restore the unmerged delta side buffer
             mode, idx.retrain_mode = idx.retrain_mode, "off"
             idx.add(vectors[n_base:], meta["ids"][n_base:])

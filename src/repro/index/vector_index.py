@@ -51,9 +51,12 @@ class VectorIndex(RetrievalBackend):
         psims = np.take_along_axis(sims, part, axis=1)
         order = np.argsort(-psims, axis=1)
         idx = np.take_along_axis(part, order, axis=1)
+        d = self.vectors.shape[1] if self.vectors.ndim == 2 else 0
         self.last_stats = {"index": self.kind,
                            "scored_vectors": int(sims.shape[0] * sims.shape[1]),
-                           "probed_clusters": 0}
+                           "probed_clusters": 0, "quantize": "none",
+                           "scanned_bytes": int(sims.shape[0] * sims.shape[1]
+                                                * 4 * d)}
         return np.take_along_axis(sims, idx, axis=1), idx
 
     def _search_sharded(self, queries: np.ndarray, k: int
@@ -67,9 +70,11 @@ class VectorIndex(RetrievalBackend):
         # the dispatch may clamp to the device count: report the split that
         # actually ran, not the requested layout
         eff = kops.effective_shards(self.shards)
+        d = vectors.shape[1] if vectors.ndim == 2 else 0
         self.last_stats = {
             "index": self.kind, "scored_vectors": int(nq * nc),
-            "probed_clusters": 0, "shards": eff,
+            "probed_clusters": 0, "shards": eff, "quantize": "none",
+            "scanned_bytes": int(nq * nc * 4 * d),
             "scored_vectors_per_shard": int(nq * (-(-nc // max(eff, 1))))}
         return scores, idx
 

@@ -16,6 +16,7 @@ import numpy as np
 from repro.kernels import decode_attention as _da
 from repro.kernels import flash_attention as _fa
 from repro.kernels import ivf_scan as _ivf
+from repro.kernels import ivf_scan_q as _ivfq
 from repro.kernels import ref
 from repro.kernels import rmsnorm as _rn
 from repro.kernels import similarity as _sim
@@ -111,6 +112,57 @@ def ivf_delta_search(queries, centroids, store, mask, delta_vectors, *,
     return np.concatenate([s, np.asarray(ds, np.float32)], axis=1), p
 
 
+def ivf_search_q(queries, centroids, store_q, scales, mask, *, nprobe: int,
+                 block_q: int = 8, impl: str | None = None
+                 ) -> tuple[np.ndarray, np.ndarray]:
+    """Fused *quantized* IVF retrieval: the :func:`ivf_search` pipeline over
+    symmetric per-vector int8 tiles (``store_q`` int8 + ``scales`` f32;
+    `repro.index.quant`), dequantization fused into the cluster scan as one
+    per-lane multiply on the score plane — ``d + 4`` HBM bytes per scanned
+    vector instead of ``4 * d``.
+
+    -> (scores [nq, block_q*nprobe*L] f32, probe_blocks); jnp contract:
+    ``ref.ivf_search_q_ref``."""
+    mode = _resolve(impl)
+    if mode == "ref":
+        s, p = ref.ivf_search_q_ref(
+            jnp.asarray(queries), jnp.asarray(centroids),
+            jnp.asarray(store_q, jnp.int8), jnp.asarray(scales),
+            jnp.asarray(mask), nprobe=nprobe, block_q=block_q)
+    else:
+        s, p = _ivfq.ivf_search_q(queries, centroids, store_q, scales, mask,
+                                  nprobe=nprobe, block_q=block_q,
+                                  interpret=(mode == "interpret"))
+    return np.asarray(s), np.asarray(p)
+
+
+def ivf_delta_search_q(queries, centroids, store_q, scales, mask, delta_q,
+                       delta_scales, *, nprobe: int, block_q: int = 8,
+                       impl: str | None = None
+                       ) -> tuple[np.ndarray, np.ndarray]:
+    """Quantized delta-aware IVF retrieval: the fused quantized probed-
+    cluster scan plus a dequantize-fused exact scan of the int8 streaming
+    delta side buffer, concatenated along the candidate axis.
+
+    -> (scores [nq, block_q*nprobe*L + nd] f32, probe_blocks); jnp contract:
+    ``ref.ivf_delta_search_q_ref``."""
+    mode = _resolve(impl)
+    if mode == "ref":
+        s, p = ref.ivf_delta_search_q_ref(
+            jnp.asarray(queries), jnp.asarray(centroids),
+            jnp.asarray(store_q, jnp.int8), jnp.asarray(scales),
+            jnp.asarray(mask), jnp.asarray(delta_q, jnp.int8),
+            jnp.asarray(delta_scales), nprobe=nprobe, block_q=block_q)
+        return np.asarray(s), np.asarray(p)
+    s, p = ivf_search_q(queries, centroids, store_q, scales, mask,
+                        nprobe=nprobe, block_q=block_q, impl=impl)
+    from repro.index.quant import quantized_scores
+    q = np.asarray(queries, np.float32)
+    q = q / np.maximum(np.linalg.norm(q, axis=-1, keepdims=True), 1e-9)
+    ds = quantized_scores(q, np.asarray(delta_q), np.asarray(delta_scales))
+    return np.concatenate([s, np.asarray(ds, np.float32)], axis=1), p
+
+
 def _n_devices() -> int:
     try:
         return len(jax.devices())
@@ -183,6 +235,30 @@ def sharded_ivf_search(queries, centroids, store, mask, *, nprobe: int,
         s, p = _ivf.sharded_ivf_search(
             queries, centroids, store, mask, nprobe=nprobe, n_shards=shards,
             block_q=block_q, use_pallas=_on_tpu())
+    return np.asarray(s), np.asarray(p)
+
+
+def sharded_ivf_search_q(queries, centroids, store_q, scales, mask, *,
+                         nprobe: int, shards: int, block_q: int = 8,
+                         impl: str | None = None
+                         ) -> tuple[np.ndarray, np.ndarray]:
+    """Device-sharded quantized IVF retrieval: int8 cluster tiles + their
+    scale rows partitioned across ``shards`` devices, global probe
+    selection, per-device fused dequantize+scan of the locally-owned probed
+    clusters combined with one pmax.  Score plane identical to
+    :func:`ivf_search_q` — sharding redistributes scan bytes, never
+    results.  jnp contract: ``ref.sharded_ivf_search_q_ref``."""
+    mode, shards = _resolve_sharded(impl, shards)
+    if mode == "ref" or shards <= 1:
+        s, p = ref.sharded_ivf_search_q_ref(
+            jnp.asarray(queries), jnp.asarray(centroids),
+            jnp.asarray(store_q, jnp.int8), jnp.asarray(scales),
+            jnp.asarray(mask), nprobe=nprobe, n_shards=max(shards, 1),
+            block_q=block_q)
+    else:
+        s, p = _ivfq.sharded_ivf_search_q(
+            queries, centroids, store_q, scales, mask, nprobe=nprobe,
+            n_shards=shards, block_q=block_q, use_pallas=_on_tpu())
     return np.asarray(s), np.asarray(p)
 
 

@@ -131,6 +131,88 @@ def ivf_delta_search_ref(queries, centroids, store, mask, delta_vectors, *,
     return jnp.concatenate([s, ds], axis=1), probe_blocks
 
 
+# -- quantized IVF scan (jnp contracts for kernels/ivf_scan_q) --------------
+
+
+def ivf_scan_q_ref(queries, store_q, scales, mask, probe_blocks, *,
+                   block_q: int = 8, normalize: bool = True):
+    """Reference fused dequantize+score gather-scan: queries [nb*bq, d],
+    store_q [kc, L, d] int8, scales [kc, L] f32, mask [kc, L],
+    probe_blocks [nb, slots] -> [nb*bq, slots*L].
+
+    Dequantization is fused as one per-lane multiply AFTER the matmul (the
+    per-vector scale factors out of the dot product) — exactly what the
+    Pallas kernel does on the MXU output, so the two can never diverge."""
+    q = jnp.asarray(queries, jnp.float32)
+    if normalize:
+        q = _unitize(q)
+    nb, slots = probe_blocks.shape
+    L = store_q.shape[1]
+    qb = q.reshape(nb, block_q, -1)
+    v = jnp.asarray(store_q)[probe_blocks].astype(jnp.float32)  # [nb,slots,L,d]
+    s = jnp.einsum("bqd,bsld->bqsl", qb, v,
+                   preferred_element_type=jnp.float32)
+    s = s * jnp.asarray(scales, jnp.float32)[probe_blocks][:, None]
+    m = jnp.asarray(mask)[probe_blocks]                         # [nb, slots, L]
+    s = jnp.where(m[:, None] > 0, s, MASKED_SCORE)
+    return s.reshape(nb * block_q, slots * L)
+
+
+def ivf_search_q_ref(queries, centroids, store_q, scales, mask, *,
+                     nprobe: int, block_q: int = 8):
+    """jnp reference for `repro.kernels.ivf_scan_q.ivf_search_q`: the exact
+    :func:`ivf_search_ref` pipeline (shared probe selection included) with
+    the quantized cluster scan in stage 3."""
+    q, _ = pad_queries(jnp.asarray(queries, jnp.float32), block_q)
+    q = _unitize(q)
+    probe_blocks = ivf_probes(q, centroids, nprobe, block_q)
+    scores = ivf_scan_q_ref(q, store_q, scales, mask, probe_blocks,
+                            block_q=block_q, normalize=False)
+    return scores[: len(queries)], probe_blocks
+
+
+def ivf_delta_search_q_ref(queries, centroids, store_q, scales, mask,
+                           delta_q, delta_scales, *, nprobe: int,
+                           block_q: int = 8):
+    """Quantized delta-aware IVF reference: the probed quantized main-store
+    scan plus an exact (dequantize-fused) scan of the int8 delta side buffer
+    concatenated along the candidate axis — the numerics contract for
+    ``IVFIndex(quantize="int8").search`` after ``add()``."""
+    s, probe_blocks = ivf_search_q_ref(queries, centroids, store_q, scales,
+                                       mask, nprobe=nprobe, block_q=block_q)
+    q = _unitize(jnp.asarray(queries, jnp.float32))
+    ds = (q @ jnp.asarray(delta_q).astype(jnp.float32).T) \
+        * jnp.asarray(delta_scales, jnp.float32)[None, :]
+    return jnp.concatenate([s, ds], axis=1), probe_blocks
+
+
+def sharded_ivf_search_q_ref(queries, centroids, store_q, scales, mask, *,
+                             nprobe: int, n_shards: int, block_q: int = 8):
+    """jnp contract for ``ops.sharded_ivf_search_q``: identical sharding
+    discipline to :func:`sharded_ivf_search_ref` (cluster tiles partitioned
+    across devices, global probe selection, per-shard scans of locally-owned
+    probed clusters combined by elementwise max) over the quantized store —
+    the combined plane is identical to the unsharded
+    :func:`ivf_search_q_ref`."""
+    q, _ = pad_queries(jnp.asarray(queries, jnp.float32), block_q)
+    q = _unitize(q)
+    probe_blocks = ivf_probes(q, centroids, nprobe, block_q)
+    kc, L, _ = store_q.shape
+    local = max(1, -(-kc // n_shards))
+    nb, slots = probe_blocks.shape
+    combined = jnp.full((nb * block_q, slots * L), MASKED_SCORE, jnp.float32)
+    for s in range(n_shards):
+        lo, hi = s * local, min((s + 1) * local, kc)
+        in_range = (probe_blocks >= lo) & (probe_blocks < hi)   # [nb, slots]
+        safe = jnp.where(in_range, probe_blocks, lo)
+        sc = ivf_scan_q_ref(q, store_q[lo:hi], scales[lo:hi], mask[lo:hi],
+                            safe - lo, block_q=block_q, normalize=False)
+        keep = jnp.repeat(jnp.repeat(in_range, L, axis=1), block_q, axis=0)
+        combined = jnp.maximum(combined,
+                               jnp.where(keep, sc, MASKED_SCORE))
+    return combined[: len(queries)], probe_blocks
+
+
 # -- device-sharded retrieval (jnp contracts for the shard_map wrappers) ----
 
 

@@ -1,0 +1,326 @@
+"""Quantized retrieval hot path: int8 quantization reference, the fused
+dequantize+score kernel vs its jnp contract, IVF int8 + exact-rerank recall,
+the bit-identical ``quantize="none"`` contract, persistence, sharding, the
+byte-aware cost model, and registry key separation across precisions."""
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.index import (IVFIndex, VectorIndex, bytes_per_vector,
+                         choose_backend, choose_retrieval_config,
+                         dequantize_rows, quantize_rows, quantize_tiles,
+                         quantized_scores)
+from repro.index.backend import QUANT_MIN_CORPUS
+from repro.index.quant import INT8_MAX
+from repro.kernels import ops as kops
+from repro.serve import IndexRegistry
+
+
+def _clustered(n, d=32, n_centers=20, noise=0.15, seed=0):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(n_centers, d))
+    centers /= np.linalg.norm(centers, axis=1, keepdims=True)
+    lab = rng.integers(n_centers, size=n)
+    x = centers[lab] + noise * rng.normal(size=(n, d))
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    return np.asarray(x, np.float32), centers
+
+
+def _recall(exact_idx, ann_idx):
+    k = exact_idx.shape[1]
+    return np.mean([len(set(exact_idx[i]) & set(ann_idx[i])) / k
+                    for i in range(len(exact_idx))])
+
+
+# ---------------------------------------------------------------------------
+# quantization reference (pure numpy)
+# ---------------------------------------------------------------------------
+
+
+def test_roundtrip_error_bound():
+    """Per-element |v - dequant(quant(v))| <= scale/2 = absmax/254."""
+    rng = np.random.default_rng(0)
+    v = rng.normal(size=(200, 48)).astype(np.float32) * \
+        rng.uniform(0.01, 10.0, size=(200, 1)).astype(np.float32)
+    q, scales = quantize_rows(v)
+    back = dequantize_rows(q, scales)
+    absmax = np.abs(v).max(axis=1)
+    bound = absmax / (2 * INT8_MAX) + 1e-7
+    assert np.all(np.abs(back - v) <= bound[:, None])
+    assert q.dtype == np.int8 and scales.dtype == np.float32
+    assert q.min() >= -INT8_MAX  # symmetric: -128 never used
+
+
+def test_zero_norm_row_guard():
+    """All-zero rows (tile padding) must quantize with scale pinned to 1.0:
+    no divide-by-zero, no NaN, exact-zero round-trip."""
+    v = np.zeros((3, 16), np.float32)
+    v[1, 4] = 2.5  # one live row between two dead ones
+    with np.errstate(all="raise"):  # a division by zero would raise here
+        q, scales = quantize_rows(v)
+    assert scales[0] == 1.0 and scales[2] == 1.0
+    assert np.all(q[0] == 0) and np.all(q[2] == 0)
+    back = dequantize_rows(q, scales)
+    assert np.all(back[0] == 0.0) and np.all(np.isfinite(back))
+    np.testing.assert_allclose(back[1, 4], 2.5, rtol=0.01)
+    # tile form runs the guard on every padding lane
+    store = np.zeros((2, 8, 16), np.float32)
+    store[0, 0] = v[1]
+    tq, ts = quantize_tiles(store)
+    assert tq.shape == store.shape and ts.shape == (2, 8)
+    assert np.all(ts[0, 1:] == 1.0) and np.all(ts[1] == 1.0)
+
+
+def test_quantized_scores_matches_dequantized_matmul():
+    rng = np.random.default_rng(1)
+    v = rng.normal(size=(50, 24)).astype(np.float32)
+    queries = rng.normal(size=(6, 24)).astype(np.float32)
+    q, scales = quantize_rows(v)
+    fused = quantized_scores(queries, q, scales)
+    explicit = queries @ dequantize_rows(q, scales).T
+    np.testing.assert_allclose(fused, explicit, rtol=1e-5, atol=1e-5)
+
+
+def test_bytes_per_vector():
+    assert bytes_per_vector(64, "none") == 256.0
+    assert bytes_per_vector(64, "int8") == 68.0
+    with pytest.raises(ValueError):
+        bytes_per_vector(64, "int4")
+
+
+# ---------------------------------------------------------------------------
+# kernel vs jnp contract
+# ---------------------------------------------------------------------------
+
+
+def test_ivf_search_q_interpret_matches_ref():
+    """The Pallas kernel body (interpreter) and the jnp contract implement
+    the same fused dequantize+score numerics."""
+    rng = np.random.default_rng(2)
+    kc, L, d = 8, 128, 32
+    store = rng.normal(size=(kc, L, d)).astype(np.float32)
+    mask = (rng.random((kc, L)) > 0.25).astype(np.float32)
+    store[mask == 0] = 0.0
+    store_q, scales = quantize_tiles(store)
+    cents = rng.normal(size=(kc, d)).astype(np.float32)
+    queries = rng.normal(size=(11, d)).astype(np.float32)
+    s_ref, p_ref = kops.ivf_search_q(queries, cents, store_q, scales, mask,
+                                     nprobe=3, impl="ref")
+    s_int, p_int = kops.ivf_search_q(queries, cents, store_q, scales, mask,
+                                     nprobe=3, impl="interpret")
+    np.testing.assert_array_equal(p_ref, p_int)
+    np.testing.assert_allclose(s_ref, s_int, rtol=1e-5, atol=1e-5)
+
+
+def test_sharded_ivf_search_q_matches_unsharded():
+    rng = np.random.default_rng(3)
+    kc, L, d = 10, 128, 32
+    store = rng.normal(size=(kc, L, d)).astype(np.float32)
+    mask = np.ones((kc, L), np.float32)
+    store_q, scales = quantize_tiles(store)
+    cents = rng.normal(size=(kc, d)).astype(np.float32)
+    queries = rng.normal(size=(7, d)).astype(np.float32)
+    s1, p1 = kops.ivf_search_q(queries, cents, store_q, scales, mask,
+                               nprobe=4, impl="ref")
+    s4, p4 = kops.sharded_ivf_search_q(queries, cents, store_q, scales, mask,
+                                       nprobe=4, shards=4)
+    np.testing.assert_array_equal(p1, p4)
+    np.testing.assert_allclose(s1, s4, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# IVFIndex(quantize="int8")
+# ---------------------------------------------------------------------------
+
+
+def test_quantized_rerank_recall_contract():
+    """int8 scan + exact fp32 rerank must hold the measured recall contract:
+    >= 0.99 of the fp32 IVF path's recall@10 vs exact, and rerank scores are
+    exact (match the fp32 scores on shared hits)."""
+    x, centers = _clustered(4000, seed=4)
+    rng = np.random.default_rng(44)
+    queries = np.asarray(
+        centers[rng.integers(len(centers), size=24)]
+        + 0.15 * rng.normal(size=(24, 32)), np.float32)
+    _, exact_idx = VectorIndex(x).search(queries, 10)
+    fp = IVFIndex(x, nprobe=6, seed=5)
+    fp_scores, fp_idx = fp.search(queries, 10)
+    q8 = IVFIndex(x, nprobe=6, seed=5, quantize="int8")
+    q_scores, q_idx = q8.search(queries, 10)
+    assert _recall(exact_idx, q_idx) >= 0.99 * _recall(exact_idx, fp_idx)
+    # rerank scores are exact fp32: identical (to fp tolerance) wherever the
+    # two paths retrieved the same row
+    for r in range(len(queries)):
+        fp_map = dict(zip(fp_idx[r].tolist(), fp_scores[r].tolist()))
+        for i, s in zip(q_idx[r].tolist(), q_scores[r].tolist()):
+            if i in fp_map:
+                assert abs(s - fp_map[i]) < 1e-4
+    st = q8.last_stats
+    assert st["quantize"] == "int8" and st["reranked"] > 0
+    # dtype-aware byte accounting: strictly fewer bytes than the fp32 scan
+    assert st["scanned_bytes"] < fp.last_stats["scanned_bytes"]
+    assert fp.last_stats["quantize"] == "none"
+
+
+def test_quantize_none_bit_identical():
+    x, _ = _clustered(1500, seed=6)
+    queries = x[::201][:8] + 0.01
+    a = IVFIndex(x, nprobe=5, seed=1)
+    b = IVFIndex(x, nprobe=5, seed=1, quantize="none")
+    sa, ia = a.search(queries, 7)
+    sb, ib = b.search(queries, 7)
+    np.testing.assert_array_equal(sa, sb)
+    np.testing.assert_array_equal(ia, ib)
+
+
+def test_quantized_delta_add_and_retrain():
+    """add() quantizes incrementally; new rows are findable immediately and
+    a sync retrain folds them into int8 tiles."""
+    x, _ = _clustered(1200, seed=7)
+    idx = IVFIndex(x, nprobe=4, seed=2, quantize="int8", retrain="off")
+    extra, _ = _clustered(30, seed=77)
+    idx.add(extra)
+    assert len(idx._delta_q) == 30 and len(idx._delta_scales) == 30
+    _, hits = idx.search(extra[:5], 1)
+    np.testing.assert_array_equal(hits[:, 0], np.arange(1200, 1205))
+    idx.retrain(wait=True)
+    assert idx.delta_rows == 0 and idx.store_q.shape[2] == 32
+    _, hits2 = idx.search(extra[:5], 1)
+    np.testing.assert_array_equal(hits2[:, 0], np.arange(1200, 1205))
+
+
+def test_quantized_save_load_roundtrip():
+    x, _ = _clustered(900, seed=8)
+    queries = x[::97][:6] + 0.01
+    idx = IVFIndex(x, nprobe=4, seed=3, quantize="int8", rerank_factor=3)
+    s1, i1 = idx.search(queries, 5)
+    with tempfile.TemporaryDirectory() as td:
+        idx.save(td)
+        loaded = IVFIndex.load(td)
+        assert loaded.quantize == "int8" and loaded.rerank_factor == 3
+        np.testing.assert_array_equal(loaded.store_q, idx.store_q)
+        np.testing.assert_array_equal(loaded.store_scales, idx.store_scales)
+        s2, i2 = loaded.search(queries, 5)
+    np.testing.assert_array_equal(i1, i2)
+    np.testing.assert_allclose(s1, s2, rtol=1e-6)
+
+
+def test_quantized_sharded_matches_unsharded():
+    x, _ = _clustered(2000, seed=9)
+    queries = x[::151][:9] + 0.01
+    plain = IVFIndex(x, nprobe=5, seed=4, quantize="int8")
+    sharded = IVFIndex(x, nprobe=5, seed=4, quantize="int8", shards=4)
+    s1, i1 = plain.search(queries, 6)
+    s2, i2 = sharded.search(queries, 6)
+    np.testing.assert_array_equal(i1, i2)
+    np.testing.assert_allclose(s1, s2, rtol=1e-5, atol=1e-5)
+
+
+def test_int8_store_replaces_fp32_tiles():
+    x, _ = _clustered(800, seed=10)
+    idx = IVFIndex(x, nprobe=4, quantize="int8")
+    assert idx.store is None and idx.store_q.dtype == np.int8
+    assert idx.describe()["quantize"] == "int8"
+    assert idx.describe()["bytes_per_vector"] == bytes_per_vector(32, "int8")
+    fp = IVFIndex(x, nprobe=4)
+    assert fp.store_q is None and fp.describe()["quantize"] == "none"
+
+
+# ---------------------------------------------------------------------------
+# byte-aware cost model + plan integration
+# ---------------------------------------------------------------------------
+
+
+def test_choose_retrieval_config_byte_trade():
+    # legacy 2-tuple contract untouched
+    assert choose_backend(500, 1) == ("exact", None)
+    small = choose_retrieval_config(500, 1)
+    assert small == {"kind": "exact", "nprobe": None, "quantize": "none",
+                     "costs": None}
+    # a registry-amortized serving corpus past QUANT_MIN_CORPUS: the byte
+    # win beats the rerank overhead -> int8
+    big = choose_retrieval_config(50_000, 100, shared=True)
+    assert big["kind"] == "ivf" and big["quantize"] == "int8"
+    assert big["costs"]["ivf_q"] < big["costs"]["ivf"]
+    assert (big["costs"]["ivf_q_bytes_per_query"]
+            < big["costs"]["ivf_bytes_per_query"])
+    # below the quantization floor the same IVF choice stays fp32
+    floor = choose_retrieval_config(QUANT_MIN_CORPUS - 1, 100, shared=True)
+    assert floor["kind"] == "ivf" and floor["quantize"] == "none"
+    # pins override the model in both directions
+    assert choose_retrieval_config(50_000, 100, shared=True,
+                                   quantize="none")["quantize"] == "none"
+    pinned = choose_retrieval_config(QUANT_MIN_CORPUS - 1, 100, shared=True,
+                                     quantize="int8")
+    assert pinned["quantize"] == "int8"
+    with pytest.raises(ValueError):
+        choose_retrieval_config(1000, 1, quantize="int4")
+
+
+def _find_node(root, cls):
+    stack = [root]
+    while stack:
+        n = stack.pop()
+        if isinstance(n, cls):
+            return n
+        stack.extend(n.children())
+    return None
+
+
+def test_optimizer_installs_quantize():
+    from repro.core.backends import synth
+    from repro.core.frame import SemFrame, Session
+    from repro.core.plan import nodes as N
+    from repro.core.plan.optimize import PlanOptimizer
+    records, world, *_ = synth.make_filter_world(40, seed=11)
+    sess = Session(oracle=synth.SimulatedModel(world, "oracle"),
+                   embedder=synth.SimulatedEmbedder(world))
+    right = [{"text": f"doc {i}"} for i in range(3000)]
+    plan = SemFrame(records, sess).lazy().sem_sim_join(
+        right, "claim", "text", k=3).plan
+    opt = PlanOptimizer(sess, index_min_corpus=100, index_shared=True,
+                        quant_min_corpus=100)
+    node = _find_node(opt.optimize(plan), N.SimJoin)
+    assert node is not None
+    assert node.index_kind == "ivf" and node.quantize == "int8"
+    assert any("int8" in r.detail for r in opt.applied
+               if r.rule == "choose_retrieval")
+    # pinning quantize="none" through the node wins over the cost model
+    plan2 = SemFrame(records, sess).lazy().sem_sim_join(
+        right, "claim", "text", k=3, quantize="none").plan
+    opt2 = PlanOptimizer(sess, index_min_corpus=100, index_shared=True,
+                         quant_min_corpus=100)
+    node2 = _find_node(opt2.optimize(plan2), N.SimJoin)
+    assert node2.index_kind == "ivf" and node2.quantize == "none"
+
+
+def test_registry_keys_separate_precisions():
+    """A cached int8 build must never alias the fp32 build of the same
+    corpus: the quantize param lands in both key flavors."""
+    class _E:
+        index_key = "emb-test"
+    texts = ["a", "b", "c"]
+    k_fp = IndexRegistry.key_for(texts, _E(), kind="ivf",
+                                 params={"nprobe": 4})
+    k_q = IndexRegistry.key_for(texts, _E(), kind="ivf",
+                                params={"nprobe": 4, "quantize": "int8"})
+    assert k_fp != k_q
+
+    class _T:
+        table_id = "tbl1"
+    s_fp = IndexRegistry.stream_key_for(_T(), _E(), kind="ivf",
+                                        params={"recall_target": 0.95})
+    s_q = IndexRegistry.stream_key_for(
+        _T(), _E(), kind="ivf",
+        params={"recall_target": 0.95, "quantize": "int8"})
+    assert s_fp != s_q
+
+
+def test_exact_index_reports_scanned_bytes():
+    x, _ = _clustered(300, seed=12)
+    idx = VectorIndex(x)
+    idx.search(x[:4], 5)
+    st = idx.last_stats
+    assert st["scanned_bytes"] == st["scored_vectors"] * 4 * 32
+    assert st["quantize"] == "none"
