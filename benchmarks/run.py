@@ -12,7 +12,7 @@ from benchmarks import (engine_bench, fig6_filter_tradeoff, fig8_groupby,
                         fig9_guarantees, index_bench, kernels_bench,
                         pipeline_bench, quant_bench, serve_bench, shard_bench,
                         stream_bench, table2_factcheck, table3_biodex,
-                        table5_join_plans, table6_7_ranking)
+                        table5_join_plans, table6_7_ranking, trace_bench)
 
 MODULES = {
     "table2": table2_factcheck,
@@ -30,6 +30,7 @@ MODULES = {
     "shard": shard_bench,
     "engine": engine_bench,
     "kernels": kernels_bench,
+    "trace": trace_bench,
 }
 
 

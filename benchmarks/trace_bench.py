@@ -1,0 +1,128 @@
+"""Tracing-overhead benchmark: a 50k-row pipeline traced vs untraced.
+
+The tentpole's overhead contract: span tracing must cost <5% wall time when
+on (spans are per plan stage / operator / batch, never per row) and be
+record-identical in both modes.  Runs the same filter pipeline interleaved
+untraced/traced (min over repeats, so OS noise doesn't land on one mode),
+then runs ``explain_analyze`` over a filter -> join -> topk pipeline and
+checks the StatsStore picked up observed selectivities.  Writes
+``BENCH_trace.json`` plus the exported span artifacts
+(``BENCH_trace_spans.jsonl``, ``BENCH_trace_chrome.json``).
+
+    PYTHONPATH=src python -m benchmarks.trace_bench
+"""
+import json
+import time
+
+from benchmarks._util import emit
+from repro.core.backends import synth
+from repro.core.frame import SemFrame, Session
+from repro.obs import StatsStore, Tracer, explain_analyze
+from repro.obs import trace as T
+
+N_ROWS = 50_000
+REPEATS = 3
+MAX_OVERHEAD = 0.05          # the tentpole's <5% contract
+ABS_SLACK_S = 0.1            # absolute jitter floor for short runs
+
+
+def _session(world):
+    return Session(oracle=synth.SimulatedModel(world, "oracle"),
+                   embedder=synth.SimulatedEmbedder(world), sample_size=40)
+
+
+def _run(records, world, tracer):
+    """One cold-session pipeline run; returns (wall_s, records)."""
+    lz = (SemFrame(records, _session(world)).lazy()
+          .sem_filter("the {claim} is rare"))
+    t0 = time.monotonic()
+    if tracer is None:
+        out = lz.collect()
+    else:
+        with T.activate(tracer):
+            out = lz.collect()
+    return time.monotonic() - t0, out.records
+
+
+def run() -> None:
+    records, world, *_ = synth.make_filter_world(N_ROWS, seed=5)
+    synth.add_phrase_predicate(world, records, "is rare", 0.3, seed=5)
+
+    _run(records, world, None)                   # warm-up (JAX + samplers)
+
+    t_off, t_on = [], []
+    rows_off = rows_on = None
+    tracer = Tracer()
+    for _ in range(REPEATS):                     # interleave the modes
+        dt, rows_off = _run(records, world, None)
+        t_off.append(dt)
+        dt, rows_on = _run(records, world, tracer)
+        t_on.append(dt)
+    t_untraced, t_traced = min(t_off), min(t_on)
+    overhead = t_traced / t_untraced - 1.0
+
+    assert rows_on == rows_off, "tracing changed the result set"
+    spans = tracer.spans()
+    kinds = {s.kind for s in spans}
+    assert spans, "traced run recorded no spans"
+    assert {"plan_stage", "operator"} <= kinds, f"thin span tree: {kinds}"
+    assert t_traced <= t_untraced * (1 + MAX_OVERHEAD) + ABS_SLACK_S, (
+        f"tracing overhead {overhead:.1%} exceeds {MAX_OVERHEAD:.0%} "
+        f"({t_traced:.3f}s vs {t_untraced:.3f}s)")
+
+    n_jsonl = tracer.export_jsonl("BENCH_trace_spans.jsonl")
+    tracer.export_chrome("BENCH_trace_chrome.json")
+    with open("BENCH_trace_chrome.json") as fh:
+        chrome = json.load(fh)                   # must round-trip as JSON
+    assert len(chrome["traceEvents"]) == n_jsonl > 0
+
+    emit("trace/untraced", 1e6 * t_untraced / N_ROWS,
+         wall_s=round(t_untraced, 3), rows=len(rows_off))
+    emit("trace/traced", 1e6 * t_traced / N_ROWS,
+         wall_s=round(t_traced, 3), overhead_pct=round(100 * overhead, 2),
+         spans=len(spans))
+
+    # -- explain_analyze + stats store over a multi-operator pipeline -----
+    left, right, jworld, *_ = synth.make_join_world(40, 8, seed=11)
+    synth.add_phrase_predicate(jworld, left, "is checkable", 0.4, seed=11)
+    lz = (SemFrame(left, _session(jworld)).lazy()
+          .sem_filter("the {abstract} is checkable")
+          .sem_join(right, "the {abstract} reports the {reaction:right}")
+          .sem_topk("most accurate {abstract}", 5))
+    store = StatsStore()
+    t0 = time.monotonic()
+    rep = explain_analyze(lz, stats_store=store)
+    t_ea = time.monotonic() - t0
+    print(rep.render(), flush=True)
+    observed = [r for r in rep.nodes if r.observed is not None]
+    assert observed, "explain_analyze carried no observations"
+    sels = [e["selectivity"] for e in store.snapshot()
+            if e["selectivity"] is not None]
+    assert sels, "stats store learned no selectivities"
+    emit("trace/explain_analyze", 1e6 * t_ea, nodes=len(rep.nodes),
+         observed_nodes=len(observed), drifted=len(rep.drifted),
+         stats_entries=len(store))
+
+    with open("BENCH_trace.json", "w") as fh:
+        json.dump({
+            "n_rows": N_ROWS,
+            "wall_untraced_s": round(t_untraced, 4),
+            "wall_traced_s": round(t_traced, 4),
+            "overhead_pct": round(100 * overhead, 2),
+            "max_overhead_pct": 100 * MAX_OVERHEAD,
+            "identical_records": True,
+            "spans": len(spans),
+            "span_kinds": sorted(kinds),
+            "explain_analyze": {
+                "nodes": len(rep.nodes),
+                "observed_nodes": len(observed),
+                "drifted_nodes": len(rep.drifted),
+                "stats_entries": len(store),
+                "observed_selectivities": [round(s, 4) for s in sels],
+            },
+        }, fh, indent=2)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

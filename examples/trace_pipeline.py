@@ -1,0 +1,72 @@
+"""Observability end to end: EXPLAIN ANALYZE over a filter -> join -> topk
+pipeline, the observed-statistics store, and Perfetto-loadable trace export.
+
+    PYTHONPATH=src python examples/trace_pipeline.py
+"""
+import json
+import tempfile
+
+from repro.core.backends import synth
+from repro.core.frame import SemFrame, Session
+from repro.obs import StatsStore, explain_analyze
+from repro.serve import Gateway
+
+left, right, world, *_ = synth.make_join_world(40, 8, seed=11)
+synth.add_phrase_predicate(world, left, "is checkable", 0.4, seed=11)
+
+
+def session():
+    return Session(oracle=synth.SimulatedModel(world, "oracle"),
+                   embedder=synth.SimulatedEmbedder(world), sample_size=40)
+
+
+def pipeline(sess):
+    return (SemFrame(left, sess).lazy()
+            .sem_filter("the {abstract} is checkable")
+            .sem_join(right, "the {abstract} reports the {reaction:right}")
+            .sem_topk("most accurate {abstract}", 5))
+
+
+# -- EXPLAIN ANALYZE: predicted vs observed, per plan node ------------------
+# The optimizer prices each node from an importance sample; explain_analyze
+# runs the plan under a tracer and prints the prediction next to what the
+# node actually did — flagging nodes where the cost model drifted.
+store = StatsStore()
+report = explain_analyze(pipeline(session()), stats_store=store)
+print(report.render())
+print(f"\nresult rows: {len(report.records)}, "
+      f"drifted nodes: {len(report.drifted)}")
+
+# every executed semantic node also lands in the stats store, keyed by
+# (operator, predicate-fingerprint) — selectivity is a property of the
+# predicate, so observations accumulate across corpora and sessions
+print("\nobserved statistics:")
+for e in store.snapshot():
+    print(f"  {e['operator']}[{e['fingerprint'][:8]}] "
+          f"runs={e['runs']} sel={e['selectivity']} "
+          f"oracle={e['oracle_calls']}")
+
+# -- gateway tracing: spans from every layer, exportable --------------------
+with tempfile.TemporaryDirectory() as tmp:
+    with Gateway(session(), max_inflight=2, trace=True) as gw:
+        sess = gw.submit(pipeline(gw.session))
+        sess.result(timeout=60)
+
+        # the per-session span tree: session -> plan stages -> operators,
+        # plus dispatcher batches fused on the dispatcher thread
+        print("\nsession trace:")
+        for sp in gw.session_trace(sess.sid)[:8]:
+            print(f"  {sp.kind:12s} {sp.name:28s} {sp.dur_s * 1e3:7.2f}ms")
+
+        # span-derived stage breakdown inside the gateway snapshot
+        stages = gw.snapshot()["stages"]
+        ops = {k: v for k, v in stages.items() if k.startswith("operator/")}
+        print("\nstage breakdown:", json.dumps(ops, indent=2)[:400])
+
+        # export: one-span-per-line JSONL, or Chrome trace_event JSON you
+        # can load in Perfetto (https://ui.perfetto.dev) / chrome://tracing
+        n = gw.export_trace(f"{tmp}/trace.jsonl")
+        gw.export_trace(f"{tmp}/trace.json", fmt="chrome")
+        with open(f"{tmp}/trace.json") as fh:
+            events = json.load(fh)["traceEvents"]
+        print(f"\nexported {n} spans ({len(events)} trace events)")

@@ -29,6 +29,8 @@ import dataclasses
 import threading
 import time
 
+from repro.obs import trace as _trace
+
 _ctx = threading.local()
 _add_lock = threading.Lock()  # guards adds into potentially shared OpStats
 
@@ -89,9 +91,9 @@ def record(kind: str, n: int) -> None:
 
 
 def capture() -> tuple:
-    """Snapshot this thread's accounting context (operator + session stats)
-    for re-installation on a fragment worker thread."""
-    return (current(), current_session())
+    """Snapshot this thread's accounting context (operator + session stats
+    + trace context) for re-installation on a fragment worker thread."""
+    return (current(), current_session(), _trace.capture())
 
 
 @contextlib.contextmanager
@@ -100,9 +102,11 @@ def activate(ctx: tuple):
     restores the thread's own context on exit, so pooled threads never leak
     one session's stats into the next."""
     prev = (current(), current_session())
-    _ctx.stats, _ctx.session_stats = ctx
+    _ctx.stats, _ctx.session_stats = ctx[0], ctx[1]
+    trace_ctx = ctx[2] if len(ctx) > 2 else (None, None)
     try:
-        yield
+        with _trace.activate_ctx(trace_ctx):
+            yield
     finally:
         _ctx.stats, _ctx.session_stats = prev
 
@@ -113,10 +117,16 @@ def track(operator: str):
     st = OpStats(operator=operator)
     _ctx.stats = st
     t0 = time.monotonic()
+    span_cm = _trace.span(
+        operator,
+        kind="fragment" if operator.startswith("fragment[") else "operator")
+    sp = span_cm.__enter__()
     try:
         yield st
     finally:
         st.wall_s = time.monotonic() - t0
+        sp.set(**st.as_dict())
+        span_cm.__exit__(None, None, None)
         _ctx.stats = prev
         if prev is not None:  # nested operators roll up into the parent
             with _add_lock:   # the parent may be shared across fragments
@@ -124,6 +134,16 @@ def track(operator: str):
                     prev.add(kind,
                              getattr(st, "cache_hits" if kind == "cache_hit"
                                      else f"{kind}_calls"))
+                # numeric detail keys (scanned_bytes, rerank rows, ...)
+                # merge additively instead of vanishing with the child
+                for k, v in st.details.items():
+                    if isinstance(v, (int, float)) and not isinstance(v, bool):
+                        base = prev.details.get(k, 0)
+                        if isinstance(base, (int, float)) \
+                                and not isinstance(base, bool):
+                            prev.details[k] = base + v
+                    elif k not in prev.details:
+                        prev.details[k] = v
 
 
 @contextlib.contextmanager

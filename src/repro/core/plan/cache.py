@@ -39,6 +39,7 @@ from typing import Sequence
 import numpy as np
 
 from repro.core import accounting
+from repro.obs import trace as _trace
 
 
 class BatchedModelCache:
@@ -92,6 +93,24 @@ class BatchedModelCache:
         Reassembly reads from a batch-local row map, not the backing store:
         one batch may be larger than the cache capacity, in which case
         inserting the tail of the batch evicts its own head."""
+        sp = _trace.NOOP_SPAN
+        if _trace.current_tracer() is not None:
+            # one lookup span per batched cache consult (not per prompt)
+            role = self._ns[0] if self._ns else "private"
+            sp_cm = _trace.span(f"cache/{role}.{kind}", kind="cache_lookup",
+                                prompts=len(prompts))
+            sp = sp_cm.__enter__()
+        else:
+            sp_cm = None
+        try:
+            return self._through_inner(kind, prompts, call,
+                                       extra_key=extra_key, sp=sp)
+        finally:
+            if sp_cm is not None:
+                sp_cm.__exit__(None, None, None)
+
+    def _through_inner(self, kind: str, prompts: Sequence[str], call, *,
+                       extra_key: tuple = (), sp=_trace.NOOP_SPAN):
         keys = [(*self._ns, kind, *extra_key, p) for p in prompts]
         batch_rows: dict[tuple, object] = {}
         fresh: list[tuple[tuple, str]] = []
@@ -110,6 +129,7 @@ class BatchedModelCache:
                 batch_rows[key] = row
             self._insert([k for k, _ in todo], list(rows))
         n_hit = len(prompts) - len(todo)
+        sp.set(hits=n_hit, misses=len(todo))
         with self._lock:
             self.hits += n_hit
             self.misses += len(todo)

@@ -27,6 +27,7 @@ import numpy as np
 
 from repro.core import accounting
 from repro.core.operators import agg as _agg
+from repro.obs import trace as _trace
 from repro.core.operators import filter as _filter
 from repro.core.operators import groupby as _groupby
 from repro.core.operators import join as _join
@@ -44,8 +45,11 @@ class PlanExecutor:
                  use_cache: bool = False, oracle=None, proxy=None,
                  embedder=None, stage_hook=None, index_registry=None,
                  recall_target: float = 0.95,
-                 index_min_corpus: int | None = None):
+                 index_min_corpus: int | None = None, stats_store=None):
         self.session = session
+        # cross-session observed-statistics feed (repro.obs.StatsStore);
+        # None -> no observation overhead
+        self.stats_store = stats_store
         self.stats_log = stats_log if stats_log is not None else []
         if oracle is None:
             oracle = BatchedModelCache(session.oracle) if use_cache else session.oracle
@@ -180,8 +184,18 @@ class PlanExecutor:
                                  quantize=quantize)
 
     # -- plumbing ---------------------------------------------------------
-    def _log(self, stats: dict) -> dict:
+    def _log(self, stats: dict, node=None, *, n_in: int | None = None,
+             n_out: int | None = None) -> dict:
         self.stats_log.append(stats)
+        # observed cardinalities: annotate the active plan-stage span (for
+        # explain_analyze) and feed the cross-session StatsStore
+        if n_in is not None:
+            sp = _trace.current_span()
+            if sp is not None and sp.kind == "plan_stage":
+                sp.set(rows_in=n_in, rows_out=n_out)
+            if self.stats_store is not None and node is not None:
+                self.stats_store.observe_node(node, stats, rows_in=n_in,
+                                              rows_out=n_out or 0)
         # every operator logs right after its model work: together with the
         # descent-time check in run() this yields between pipeline stages,
         # so a cancellation lands before the *next* stage's model calls
@@ -201,7 +215,15 @@ class PlanExecutor:
         if self.stage_hook is not None:
             self.stage_hook(node)
         fn = getattr(self, f"_run_{type(node).__name__.lower()}")
-        return fn(node)
+        if _trace.current_tracer() is None:
+            return fn(node)
+        # one span per plan node; node_id keys the explain_analyze join
+        # between the executed span tree and the optimized plan tree
+        with _trace.span(type(node).__name__, kind="plan_stage",
+                         label=node.label(), node_id=id(node)) as sp:
+            out = fn(node)
+            sp.set(rows_out=len(out))
+            return out
 
     # -- leaves ------------------------------------------------------------
     def _run_scan(self, node: N.Scan) -> list[dict]:
@@ -232,8 +254,9 @@ class PlanExecutor:
                 raise ValueError("optimized sem_filter needs a proxy model in the Session")
             mask, stats = _filter.sem_filter_cascade(
                 recs, node.langex, self.oracle, self.proxy, **self._targets(node))
-        self._log(stats)
-        return [t for t, m in zip(recs, mask) if m]
+        out = [t for t, m in zip(recs, mask) if m]
+        self._log(stats, node, n_in=len(recs), n_out=len(out))
+        return out
 
     # -- join --------------------------------------------------------------
     def _run_join(self, node: N.Join) -> list[dict]:
@@ -250,7 +273,6 @@ class PlanExecutor:
             mask, stats = self._join_prefiltered(node, left, right)
         else:
             mask, stats = _join.sem_join_gold(left, right, node.langex, self.oracle)
-        self._log(stats)
         out = []
         n1, n2 = mask.shape
         for i in range(n1):
@@ -258,6 +280,9 @@ class PlanExecutor:
                 if mask[i, j]:
                     out.append({**left[i],
                                 **{f"right_{k}": v for k, v in right[j].items()}})
+        # candidate space for a join is the pair grid, so selectivity is
+        # matches / (n1*n2) — the quantity the optimizer's join estimate uses
+        self._log(stats, node, n_in=n1 * n2, n_out=len(out))
         return out
 
     def _join_prefiltered(self, node: N.Join, left, right):
@@ -319,7 +344,7 @@ class PlanExecutor:
                             pivot_scores=pivot_scores, seed=s.seed)
         else:
             idx, stats = fn(recs, node.langex, node.k, self.oracle)
-        self._log(stats)
+        self._log(stats, node, n_in=len(recs), n_out=len(idx))
         return [recs[i] for i in idx]
 
     # -- agg ---------------------------------------------------------------
@@ -334,13 +359,13 @@ class PlanExecutor:
                 answer, stats = _agg.sem_agg_hierarchical(
                     sub, node.langex, self.oracle,
                     fanout=node.fanout, partitioner=node.partitioner)
-                self._log(stats)
+                self._log(stats, node, n_in=len(sub), n_out=1)
                 out.append({node.group_by: g, node.out_column: answer})
             return out
         answer, stats = _agg.sem_agg_hierarchical(
             recs, node.langex, self.oracle,
             fanout=node.fanout, partitioner=node.partitioner)
-        self._log(stats)
+        self._log(stats, node, n_in=len(recs), n_out=1)
         return [{node.out_column: answer}]
 
     # -- group_by ----------------------------------------------------------
@@ -358,7 +383,7 @@ class PlanExecutor:
                 accuracy_target=node.accuracy_target,
                 delta=node.delta if node.delta is not None else s.default_delta,
                 sample_size=s.sample_size, seed=s.seed)
-        self._log(res.stats)
+        self._log(res.stats, node, n_in=len(recs), n_out=len(recs))
         return [{**t, "group": int(g), "group_label": res.labels[int(g)]}
                 for t, g in zip(recs, res.assignment)]
 
@@ -366,13 +391,13 @@ class PlanExecutor:
     def _run_map(self, node: N.Map) -> list[dict]:
         recs = self.run(node.child)
         texts, stats = _mapex.sem_map(recs, node.langex, self.oracle)
-        self._log(stats)
+        self._log(stats, node, n_in=len(recs), n_out=len(recs))
         return [{**t, node.out_column: x} for t, x in zip(recs, texts)]
 
     def _run_fusedmap(self, node: N.FusedMap) -> list[dict]:
         recs = self.run(node.child)
         columns, stats = _mapex.sem_map_fused(recs, node.langexes, self.oracle)
-        self._log(stats)
+        self._log(stats, node, n_in=len(recs), n_out=len(recs))
         return [{**t, **{c: col[i] for c, col in zip(node.out_columns, columns)}}
                 for i, t in enumerate(recs)]
 
@@ -380,7 +405,7 @@ class PlanExecutor:
         recs = self.run(node.child)
         texts, stats = _mapex.sem_extract(recs, node.langex, self.oracle,
                                           source_field=node.source_field)
-        self._log(stats)
+        self._log(stats, node, n_in=len(recs), n_out=len(recs))
         return [{**t, node.out_column: x} for t, x in zip(recs, texts)]
 
     # -- similarity family -------------------------------------------------
@@ -398,8 +423,9 @@ class PlanExecutor:
             index, node.query, self.embedder, k=node.k, n_rerank=node.n_rerank,
             rerank_model=self.oracle if node.n_rerank else None,
             records=recs, rerank_langex=node.rerank_langex, max_pos=cutoff)
-        self._log(stats)
-        return [recs[i] for i in hits if i < len(recs)]
+        out = [recs[i] for i in hits if i < len(recs)]
+        self._log(stats, node, n_in=len(recs), n_out=len(out))
+        return out
 
     def _run_simjoin(self, node: N.SimJoin) -> list[dict]:
         left = self.run(node.left)
@@ -414,8 +440,9 @@ class PlanExecutor:
         scores, idx, stats = _search.sem_sim_join(
             [str(t[node.left_col]) for t in left], index, self.embedder,
             k=node.k, max_pos=cutoff)
-        self._log(stats)
-        return self._simjoin_rows(left, right, scores, idx)
+        out = self._simjoin_rows(left, right, scores, idx)
+        self._log(stats, node, n_in=len(left), n_out=len(out))
+        return out
 
     def _simjoin_rows(self, left, right, scores, idx) -> list[dict]:
         out = []
@@ -517,8 +544,9 @@ class PartitionedExecutor(PlanExecutor):
                 recs, node.langex, self.oracle, self.proxy, parts, self._pool,
                 **self._targets(node))
         self._count(len(parts))
-        self._log(stats)
-        return [t for t, m in zip(recs, mask) if m]
+        out = [t for t, m in zip(recs, mask) if m]
+        self._log(stats, node, n_in=len(recs), n_out=len(out))
+        return out
 
     def _part_map(self, node: N.Map) -> list[dict]:
         part = node.child
@@ -533,7 +561,7 @@ class PartitionedExecutor(PlanExecutor):
         texts, stats = parallel.rows_partitioned("sem_map", parts, self._pool,
                                                  frag)
         self._count(len(parts))
-        self._log(stats)
+        self._log(stats, node, n_in=len(recs), n_out=len(recs))
         return [{**t, node.out_column: x} for t, x in zip(recs, texts)]
 
     def _part_fusedmap(self, node: N.FusedMap) -> list[dict]:
@@ -549,7 +577,7 @@ class PartitionedExecutor(PlanExecutor):
         rows, stats = parallel.rows_partitioned("sem_map_fused", parts,
                                                 self._pool, frag)
         self._count(len(parts))
-        self._log(stats)
+        self._log(stats, node, n_in=len(recs), n_out=len(recs))
         return [{**t, **dict(zip(node.out_columns, row))}
                 for t, row in zip(recs, rows)]
 
@@ -567,7 +595,7 @@ class PartitionedExecutor(PlanExecutor):
         texts, stats = parallel.rows_partitioned("sem_extract", parts,
                                                  self._pool, frag)
         self._count(len(parts))
-        self._log(stats)
+        self._log(stats, node, n_in=len(recs), n_out=len(recs))
         return [{**t, node.out_column: x} for t, x in zip(recs, texts)]
 
     # -- top-k ---------------------------------------------------------------
@@ -587,7 +615,7 @@ class PartitionedExecutor(PlanExecutor):
             [list(map(int, p)) for p in parts], pivot_scores=pivot_scores,
             seed=s.seed, fragment_pool=self._pool)
         self._count(len(parts))
-        self._log(stats)
+        self._log(stats, node, n_in=len(recs), n_out=len(idx))
         return [recs[i] for i in idx]
 
     # -- agg -----------------------------------------------------------------
@@ -600,15 +628,20 @@ class PartitionedExecutor(PlanExecutor):
                 recs, node.langex, self.oracle, node.group_by, parts,
                 self._pool, fanout=node.fanout, out_column=node.out_column)
             self._count(len(parts))
-            for stats in stats_list:
-                self._log(stats)
+            for gi, stats in enumerate(stats_list):
+                # observe the node once (first group) — per-group stats all
+                # describe the same logical Agg over the same input rows
+                if gi == 0:
+                    self._log(stats, node, n_in=len(recs), n_out=len(rows))
+                else:
+                    self._log(stats)
             return rows
         parts = self._split(recs, part, fanout=node.fanout)
         answer, stats = parallel.sem_agg_partitioned(
             recs, node.langex, self.oracle, parts, self._pool,
             fanout=node.fanout)
         self._count(len(parts))
-        self._log(stats)
+        self._log(stats, node, n_in=len(recs), n_out=1)
         return [{node.out_column: answer}]
 
     # -- join ----------------------------------------------------------------
@@ -634,7 +667,6 @@ class PartitionedExecutor(PlanExecutor):
                 self._pool, exchange=exchange)
             n_frag = len(lparts) * len(rparts)
         self._count(n_frag)
-        self._log(stats)
         out = []
         n1, n2 = mask.shape
         for i in range(n1):
@@ -642,6 +674,7 @@ class PartitionedExecutor(PlanExecutor):
                 if mask[i, j]:
                     out.append({**left[i],
                                 **{f"right_{k}": v for k, v in right[j].items()}})
+        self._log(stats, node, n_in=n1 * n2, n_out=len(out))
         return out
 
     def _join_prefiltered_partitioned(self, node: N.Join, left, right, lparts):
@@ -732,5 +765,6 @@ class PartitionedExecutor(PlanExecutor):
                               n_partitions=len(lparts))
             stats = st.as_dict()
         self._count(len(lparts))
-        self._log(stats)
-        return self._simjoin_rows(left, right, scores, idx)
+        out = self._simjoin_rows(left, right, scores, idx)
+        self._log(stats, node, n_in=len(left), n_out=len(out))
+        return out

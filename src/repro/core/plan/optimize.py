@@ -170,14 +170,48 @@ def total_cost(node: N.LogicalNode) -> float:
     return estimate_cost(node) + sum(total_cost(c) for c in node.children())
 
 
+def predicted_selectivity(node: N.LogicalNode) -> float | None:
+    """Predicted output/input-fraction for selective nodes; None where the
+    notion doesn't apply (scans, maps).  The join candidate space is the
+    pair grid, matching the executor's observed convention."""
+    if isinstance(node, N.Filter):
+        return (node.selectivity if node.selectivity is not None
+                else DEFAULT_FILTER_SEL)
+    if isinstance(node, N.Join):
+        return DEFAULT_JOIN_SEL
+    if isinstance(node, (N.TopK, N.Search)):
+        n = estimate_cardinality(node.children()[0])
+        return min(float(node.k) / n, 1.0) if n else None
+    if isinstance(node, N.Exchange):
+        return predicted_selectivity(node.child)
+    if isinstance(node, N.Partition):
+        return None
+    return None
+
+
+def predicted_node_metrics(node: N.LogicalNode) -> dict:
+    """The cost model's per-node predictions in one place — the single
+    source of truth behind both ``explain_plan`` (planning time) and
+    ``explain_analyze``'s predicted column (after a traced run)."""
+    target = node.child if isinstance(node, (N.Exchange, N.Partition)) else node
+    return {
+        "rows": estimate_cardinality(node),
+        "selectivity": predicted_selectivity(node),
+        "oracle_calls": estimate_cost(target),
+    }
+
+
 def explain_plan(node: N.LogicalNode, *, indent: str = "") -> str:
+    pred = predicted_node_metrics(node)
     extra = ""
+    if pred["selectivity"] is not None:
+        extra += f", sel~{pred['selectivity']:.2f}"
     if isinstance(node, N.Exchange) and node.n_partitions > 1:
         # cost share of one fragment at this boundary (the merged operator's
         # own bill split across partitions)
-        extra = f", frag_oracle~{estimate_cost(node.child) / node.n_partitions:.0f}"
+        extra += f", frag_oracle~{pred['oracle_calls'] / node.n_partitions:.0f}"
     out = [f"{indent}{node.label()}  "
-           f"(rows~{estimate_cardinality(node):.0f}, "
+           f"(rows~{pred['rows']:.0f}, "
            f"oracle~{estimate_cost(node):.0f}{extra})"]
     for c in node.children():
         out.append(explain_plan(c, indent=indent + "  "))

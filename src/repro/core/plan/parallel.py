@@ -36,6 +36,7 @@ import numpy as np
 
 from repro.core import accounting
 from repro.core.langex import as_langex
+from repro.obs import trace as _trace
 from repro.core.operators.agg import _agg_prompt
 from repro.core.operators.filter import predicate_prompt
 from repro.core.operators.join import _pair_prompts
@@ -55,6 +56,12 @@ def run_fragments(pool, tasks):
     task is wrapped to carry the submitting thread's accounting context so
     fragment model calls are attributed exactly like serial ones."""
     tasks = list(tasks)
+    # annotate the owning operator span with the fan-out shape (fragment
+    # spans themselves come from the per-fragment ``accounting.track``)
+    sp = _trace.current_span()
+    if sp is not None:
+        sp.set(n_fragments=len(tasks),
+               fragment_pooled=pool is not None and len(tasks) > 1)
     if pool is None or len(tasks) <= 1:
         return [t() for t in tasks]
     ctx = accounting.capture()

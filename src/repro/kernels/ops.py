@@ -7,6 +7,7 @@
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 
 import jax
@@ -20,8 +21,34 @@ from repro.kernels import ivf_scan_q as _ivfq
 from repro.kernels import ref
 from repro.kernels import rmsnorm as _rn
 from repro.kernels import similarity as _sim
+from repro.obs import trace as _trace
 
 DEFAULT_IMPL = "auto"
+
+
+@contextlib.contextmanager
+def _kernel_span(name: str, mode: str, **attrs):
+    """Kernel-dispatch observability, active only under a tracer: a
+    ``jax.named_scope`` so the dispatch is labeled in XLA/Perfetto device
+    profiles, plus a ``kind="kernel"`` trace span so host-side kernel time
+    is attributed to the owning operator span.  Yields the span (None when
+    tracing is off — the zero-overhead default path)."""
+    if _trace.current_tracer() is None:
+        yield None
+        return
+    with jax.named_scope(f"repro.{name}"):
+        with _trace.span(f"kernel/{name}", kind="kernel",
+                         impl=mode, **attrs) as sp:
+            yield sp
+
+
+def _ready(out, sp):
+    """Under a tracer, block until device work finishes so the enclosing
+    kernel span measures compute, not dispatch; untraced calls keep jax's
+    async dispatch (the ``np.asarray`` conversions sync anyway)."""
+    if sp is not None:
+        out = jax.block_until_ready(out)
+    return out
 
 
 def _on_tpu() -> bool:
@@ -62,11 +89,15 @@ def _sim_ref_jit(q, c, normalize=True):
 def similarity(queries, corpus, *, normalize: bool = True,
                impl: str | None = None, **kw) -> np.ndarray:
     mode = _resolve(impl)
-    if mode == "ref":
-        return np.asarray(_sim_ref_jit(jnp.asarray(queries), jnp.asarray(corpus),
-                                       normalize=normalize))
-    return np.asarray(_sim.similarity(queries, corpus, normalize=normalize,
-                                      interpret=(mode == "interpret"), **kw))
+    with _kernel_span("similarity", mode, nq=len(queries),
+                      nc=len(corpus)) as sp:
+        if mode == "ref":
+            out = _sim_ref_jit(jnp.asarray(queries), jnp.asarray(corpus),
+                               normalize=normalize)
+        else:
+            out = _sim.similarity(queries, corpus, normalize=normalize,
+                                  interpret=(mode == "interpret"), **kw)
+        return np.asarray(_ready(out, sp))
 
 
 def ivf_search(queries, centroids, store, mask, *, nprobe: int,
@@ -78,14 +109,19 @@ def ivf_search(queries, centroids, store, mask, *, nprobe: int,
     -> (scores [nq, block_q*nprobe*L] f32, probe_blocks [nb, block_q*nprobe]);
     masked/padded candidates score ``ref.MASKED_SCORE``."""
     mode = _resolve(impl)
-    if mode == "ref":
-        s, p = ref.ivf_search_ref(jnp.asarray(queries), jnp.asarray(centroids),
-                                  jnp.asarray(store), jnp.asarray(mask),
-                                  nprobe=nprobe, block_q=block_q)
-    else:
-        s, p = _ivf.ivf_search(queries, centroids, store, mask, nprobe=nprobe,
-                               block_q=block_q, interpret=(mode == "interpret"))
-    return np.asarray(s), np.asarray(p)
+    with _kernel_span("ivf_search", mode, nq=len(queries),
+                      nprobe=nprobe) as sp:
+        if mode == "ref":
+            s, p = ref.ivf_search_ref(jnp.asarray(queries),
+                                      jnp.asarray(centroids),
+                                      jnp.asarray(store), jnp.asarray(mask),
+                                      nprobe=nprobe, block_q=block_q)
+        else:
+            s, p = _ivf.ivf_search(queries, centroids, store, mask,
+                                   nprobe=nprobe, block_q=block_q,
+                                   interpret=(mode == "interpret"))
+        s = _ready(s, sp)
+        return np.asarray(s), np.asarray(p)
 
 
 def ivf_delta_search(queries, centroids, store, mask, delta_vectors, *,
@@ -124,16 +160,19 @@ def ivf_search_q(queries, centroids, store_q, scales, mask, *, nprobe: int,
     -> (scores [nq, block_q*nprobe*L] f32, probe_blocks); jnp contract:
     ``ref.ivf_search_q_ref``."""
     mode = _resolve(impl)
-    if mode == "ref":
-        s, p = ref.ivf_search_q_ref(
-            jnp.asarray(queries), jnp.asarray(centroids),
-            jnp.asarray(store_q, jnp.int8), jnp.asarray(scales),
-            jnp.asarray(mask), nprobe=nprobe, block_q=block_q)
-    else:
-        s, p = _ivfq.ivf_search_q(queries, centroids, store_q, scales, mask,
-                                  nprobe=nprobe, block_q=block_q,
-                                  interpret=(mode == "interpret"))
-    return np.asarray(s), np.asarray(p)
+    with _kernel_span("ivf_search_q", mode, nq=len(queries),
+                      nprobe=nprobe) as sp:
+        if mode == "ref":
+            s, p = ref.ivf_search_q_ref(
+                jnp.asarray(queries), jnp.asarray(centroids),
+                jnp.asarray(store_q, jnp.int8), jnp.asarray(scales),
+                jnp.asarray(mask), nprobe=nprobe, block_q=block_q)
+        else:
+            s, p = _ivfq.ivf_search_q(queries, centroids, store_q, scales,
+                                      mask, nprobe=nprobe, block_q=block_q,
+                                      interpret=(mode == "interpret"))
+        s = _ready(s, sp)
+        return np.asarray(s), np.asarray(p)
 
 
 def ivf_delta_search_q(queries, centroids, store_q, scales, mask, delta_q,
@@ -205,15 +244,20 @@ def sharded_search(queries, corpus, k: int, *, shards: int,
     identical to a full exact scan (``ref.sharded_search_ref`` is the jnp
     contract).  -> (scores [nq, k], global idx [nq, k])."""
     mode, shards = _resolve_sharded(impl, shards)
-    if mode == "ref" or shards <= 1:
-        s, i = ref.sharded_search_ref(jnp.asarray(queries), jnp.asarray(corpus),
-                                      k, max(shards, 1), normalize=normalize)
+    with _kernel_span("sharded_search", mode, nq=len(queries),
+                      nc=len(corpus), shards=shards) as sp:
+        if mode == "ref" or shards <= 1:
+            s, i = ref.sharded_search_ref(jnp.asarray(queries),
+                                          jnp.asarray(corpus), k,
+                                          max(shards, 1), normalize=normalize)
+            s = _ready(s, sp)
+            return np.asarray(s), np.asarray(i, np.int64)
+        vals, idx = _sim.sharded_similarity_topk(
+            queries, corpus, k, n_shards=shards, normalize=normalize,
+            use_pallas=_on_tpu())
+        s, i = ref.shard_topk_merge(vals, idx, k)
+        s = _ready(s, sp)
         return np.asarray(s), np.asarray(i, np.int64)
-    vals, idx = _sim.sharded_similarity_topk(
-        queries, corpus, k, n_shards=shards, normalize=normalize,
-        use_pallas=_on_tpu())
-    s, i = ref.shard_topk_merge(vals, idx, k)
-    return np.asarray(s), np.asarray(i, np.int64)
 
 
 def sharded_ivf_search(queries, centroids, store, mask, *, nprobe: int,
@@ -226,16 +270,19 @@ def sharded_ivf_search(queries, centroids, store, mask, *, nprobe: int,
     — sharding redistributes scan work, never results.  jnp contract:
     ``ref.sharded_ivf_search_ref``."""
     mode, shards = _resolve_sharded(impl, shards)
-    if mode == "ref" or shards <= 1:
-        s, p = ref.sharded_ivf_search_ref(
-            jnp.asarray(queries), jnp.asarray(centroids), jnp.asarray(store),
-            jnp.asarray(mask), nprobe=nprobe, n_shards=max(shards, 1),
-            block_q=block_q)
-    else:
-        s, p = _ivf.sharded_ivf_search(
-            queries, centroids, store, mask, nprobe=nprobe, n_shards=shards,
-            block_q=block_q, use_pallas=_on_tpu())
-    return np.asarray(s), np.asarray(p)
+    with _kernel_span("sharded_ivf_search", mode, nq=len(queries),
+                      nprobe=nprobe, shards=shards) as sp:
+        if mode == "ref" or shards <= 1:
+            s, p = ref.sharded_ivf_search_ref(
+                jnp.asarray(queries), jnp.asarray(centroids),
+                jnp.asarray(store), jnp.asarray(mask), nprobe=nprobe,
+                n_shards=max(shards, 1), block_q=block_q)
+        else:
+            s, p = _ivf.sharded_ivf_search(
+                queries, centroids, store, mask, nprobe=nprobe,
+                n_shards=shards, block_q=block_q, use_pallas=_on_tpu())
+        s = _ready(s, sp)
+        return np.asarray(s), np.asarray(p)
 
 
 def sharded_ivf_search_q(queries, centroids, store_q, scales, mask, *,
@@ -249,17 +296,20 @@ def sharded_ivf_search_q(queries, centroids, store_q, scales, mask, *,
     :func:`ivf_search_q` — sharding redistributes scan bytes, never
     results.  jnp contract: ``ref.sharded_ivf_search_q_ref``."""
     mode, shards = _resolve_sharded(impl, shards)
-    if mode == "ref" or shards <= 1:
-        s, p = ref.sharded_ivf_search_q_ref(
-            jnp.asarray(queries), jnp.asarray(centroids),
-            jnp.asarray(store_q, jnp.int8), jnp.asarray(scales),
-            jnp.asarray(mask), nprobe=nprobe, n_shards=max(shards, 1),
-            block_q=block_q)
-    else:
-        s, p = _ivfq.sharded_ivf_search_q(
-            queries, centroids, store_q, scales, mask, nprobe=nprobe,
-            n_shards=shards, block_q=block_q, use_pallas=_on_tpu())
-    return np.asarray(s), np.asarray(p)
+    with _kernel_span("sharded_ivf_search_q", mode, nq=len(queries),
+                      nprobe=nprobe, shards=shards) as sp:
+        if mode == "ref" or shards <= 1:
+            s, p = ref.sharded_ivf_search_q_ref(
+                jnp.asarray(queries), jnp.asarray(centroids),
+                jnp.asarray(store_q, jnp.int8), jnp.asarray(scales),
+                jnp.asarray(mask), nprobe=nprobe, n_shards=max(shards, 1),
+                block_q=block_q)
+        else:
+            s, p = _ivfq.sharded_ivf_search_q(
+                queries, centroids, store_q, scales, mask, nprobe=nprobe,
+                n_shards=shards, block_q=block_q, use_pallas=_on_tpu())
+        s = _ready(s, sp)
+        return np.asarray(s), np.asarray(p)
 
 
 def rmsnorm(x, scale, *, eps: float = 1e-5, impl: str | None = None, **kw):

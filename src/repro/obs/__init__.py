@@ -1,0 +1,24 @@
+"""Observability for the semantic-operator stack: span tracing, EXPLAIN
+ANALYZE, and the cross-session observed-statistics store (ROADMAP open
+item #1's substrate — the optimizer can't adapt to what it can't see)."""
+from repro.obs.stats_store import (ObservedStats, StatsStore,  # noqa: F401
+                                   node_fingerprint, predicate_fingerprint)
+from repro.obs.trace import (NOOP_SPAN, Span, Tracer, activate,  # noqa: F401
+                             activate_ctx, capture, current_span,
+                             current_tracer, span, span_in)
+
+__all__ = [
+    "Tracer", "Span", "NOOP_SPAN", "span", "span_in", "activate",
+    "activate_ctx", "capture", "current_span", "current_tracer",
+    "StatsStore", "ObservedStats", "predicate_fingerprint",
+    "node_fingerprint", "explain_analyze", "ExplainAnalyzeReport",
+]
+
+
+def __getattr__(name):
+    # explain_analyze pulls in the plan executor; import lazily so
+    # core modules can import repro.obs without a cycle
+    if name in ("explain_analyze", "ExplainAnalyzeReport"):
+        from repro.obs import analyze
+        return getattr(analyze, name)
+    raise AttributeError(name)

@@ -1,0 +1,223 @@
+"""Process-wide observed-statistics store for adaptive optimization.
+
+The optimizer prices plans from a static importance sample; this store is
+the feedback path: every executed plan node reports its observed
+cardinalities, model-call bill, and wall time keyed by
+``(operator, predicate-fingerprint)``, so a future adaptive optimizer (and
+``explain_analyze`` today) can compare the cost model's predictions with
+what the same predicate actually did across sessions.
+
+The fingerprint hashes the semantics of the node — the natural-language
+template / query / target columns — not the input data, so observations
+for one predicate accumulate across corpora of different sizes (selectivity
+is a property of the predicate, per the paper's proxy-calibration setup).
+
+Persistence is a small JSON document saved alongside the semantic cache
+(the gateway saves it in ``close()``); ``load()`` merges additively so
+multiple processes can fold their runs together.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import threading
+
+
+def predicate_fingerprint(operator: str, *parts) -> str:
+    """Stable 16-hex-char fingerprint of an operator's semantic identity."""
+    h = hashlib.sha1()
+    h.update(operator.encode())
+    for p in parts:
+        h.update(b"\x1f")
+        h.update(str(p).encode())
+    return h.hexdigest()[:16]
+
+
+def node_fingerprint(node) -> str | None:
+    """Fingerprint a plan node by its semantic payload (duck-typed so this
+    module stays import-free of the plan IR).  Returns None for nodes with
+    no semantic identity worth accumulating (scans, limits, exchanges)."""
+    kind = type(node).__name__
+    parts = []
+    for attr in ("langex", "template", "query", "instruction"):
+        v = getattr(node, attr, None)
+        if v is None:
+            continue
+        # langex objects carry the natural-language template
+        v = getattr(v, "template", v)
+        parts.append(v)
+    for attr in ("on", "columns", "by", "k", "fields"):
+        v = getattr(node, attr, None)
+        if v is not None and not callable(v):  # some IRs expose columns()
+            parts.append(f"{attr}={v}")
+    if not parts:
+        return None
+    return predicate_fingerprint(kind, *parts)
+
+
+_SUM_FIELDS = ("rows_in", "rows_out", "oracle_calls", "proxy_calls",
+               "embed_calls", "compare_calls", "generate_calls",
+               "cache_hits")
+
+
+@dataclasses.dataclass
+class ObservedStats:
+    operator: str
+    fingerprint: str
+    runs: int = 0
+    rows_in: int = 0
+    rows_out: int = 0
+    oracle_calls: int = 0
+    proxy_calls: int = 0
+    embed_calls: int = 0
+    compare_calls: int = 0
+    generate_calls: int = 0
+    cache_hits: int = 0
+    wall_s: float = 0.0
+    details: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def selectivity(self) -> float | None:
+        if self.rows_in <= 0:
+            return None
+        return self.rows_out / self.rows_in
+
+    @property
+    def mean_wall_s(self) -> float:
+        return self.wall_s / self.runs if self.runs else 0.0
+
+    @property
+    def oracle_calls_per_row(self) -> float:
+        return self.oracle_calls / self.rows_in if self.rows_in else 0.0
+
+    def as_dict(self) -> dict:
+        d = {"operator": self.operator, "fingerprint": self.fingerprint,
+             "runs": self.runs, "wall_s": round(self.wall_s, 6),
+             "selectivity": (round(self.selectivity, 6)
+                             if self.selectivity is not None else None),
+             "details": dict(self.details)}
+        for f in _SUM_FIELDS:
+            d[f] = getattr(self, f)
+        return d
+
+
+class StatsStore:
+    """Accumulates ``ObservedStats`` keyed by (operator, fingerprint)."""
+
+    def __init__(self, path: str | None = None):
+        self._lock = threading.Lock()
+        self._stats: dict[tuple[str, str], ObservedStats] = {}
+        self.path = path
+        if path and os.path.exists(path):
+            self.load(path)
+
+    def observe(self, operator: str, fingerprint: str, *, rows_in: int = 0,
+                rows_out: int = 0, wall_s: float = 0.0,
+                stats: dict | None = None, **details) -> ObservedStats:
+        with self._lock:
+            key = (operator, fingerprint)
+            obs = self._stats.get(key)
+            if obs is None:
+                obs = self._stats[key] = ObservedStats(operator, fingerprint)
+            obs.runs += 1
+            obs.rows_in += int(rows_in)
+            obs.rows_out += int(rows_out)
+            obs.wall_s += float(wall_s)
+            if stats:
+                for f in ("oracle_calls", "proxy_calls", "embed_calls",
+                          "compare_calls", "generate_calls", "cache_hits"):
+                    v = stats.get(f)
+                    if isinstance(v, (int, float)) and not isinstance(v, bool):
+                        setattr(obs, f, getattr(obs, f) + int(v))
+            for k, v in details.items():
+                if isinstance(v, (int, float)) and not isinstance(v, bool):
+                    obs.details[k] = obs.details.get(k, 0) + v
+            return obs
+
+    def observe_node(self, node, stats: dict | None, *, rows_in: int,
+                     rows_out: int, wall_s: float = 0.0) -> ObservedStats | None:
+        """Record one plan-node execution; skips nodes with no semantic
+        fingerprint (scans, limits)."""
+        fp = node_fingerprint(node)
+        if fp is None:
+            return None
+        operator = (stats or {}).get("operator") or type(node).__name__.lower()
+        numeric_details = {
+            k: v for k, v in (stats or {}).items()
+            if k not in ("operator", "wall_s") and k not in _SUM_FIELDS
+            and isinstance(v, (int, float)) and not isinstance(v, bool)}
+        if stats and not wall_s:
+            wall_s = float(stats.get("wall_s") or 0.0)
+        return self.observe(operator, fp, rows_in=rows_in, rows_out=rows_out,
+                            wall_s=wall_s, stats=stats, **numeric_details)
+
+    # -- queries ---------------------------------------------------------
+    def get(self, operator: str, fingerprint: str) -> ObservedStats | None:
+        with self._lock:
+            return self._stats.get((operator, fingerprint))
+
+    def selectivity(self, operator: str, fingerprint: str) -> float | None:
+        obs = self.get(operator, fingerprint)
+        return obs.selectivity if obs is not None else None
+
+    def selectivity_for_node(self, node) -> float | None:
+        """Observed selectivity for a plan node, any operator — the lookup
+        the adaptive optimizer will use."""
+        fp = node_fingerprint(node)
+        if fp is None:
+            return None
+        with self._lock:
+            for (_, f), obs in self._stats.items():
+                if f == fp and obs.selectivity is not None:
+                    return obs.selectivity
+        return None
+
+    def snapshot(self) -> list[dict]:
+        with self._lock:
+            entries = list(self._stats.values())
+        return [e.as_dict() for e in sorted(
+            entries, key=lambda e: (e.operator, e.fingerprint))]
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._stats)
+
+    # -- persistence -----------------------------------------------------
+    def save(self, path: str | None = None) -> str:
+        path = path or self.path
+        if not path:
+            raise ValueError("StatsStore.save() needs a path")
+        doc = {"version": 1, "entries": self.snapshot()}
+        tmp = f"{path}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(doc, f, indent=1)
+        os.replace(tmp, path)
+        return path
+
+    def load(self, path: str) -> int:
+        """Merge a saved store additively into this one."""
+        with open(path) as f:
+            doc = json.load(f)
+        n = 0
+        for e in doc.get("entries", ()):
+            counts = {f: e.get(f, 0) for f in _SUM_FIELDS
+                      if f not in ("rows_in", "rows_out")}
+            with self._lock:
+                key = (e["operator"], e["fingerprint"])
+                obs = self._stats.get(key)
+                if obs is None:
+                    obs = self._stats[key] = ObservedStats(
+                        e["operator"], e["fingerprint"])
+                obs.runs += e.get("runs", 0)
+                obs.rows_in += e.get("rows_in", 0)
+                obs.rows_out += e.get("rows_out", 0)
+                obs.wall_s += e.get("wall_s", 0.0)
+                for f, v in counts.items():
+                    setattr(obs, f, getattr(obs, f) + v)
+                for k, v in (e.get("details") or {}).items():
+                    if isinstance(v, (int, float)) and not isinstance(v, bool):
+                        obs.details[k] = obs.details.get(k, 0) + v
+            n += 1
+        return n

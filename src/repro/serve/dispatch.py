@@ -29,6 +29,7 @@ from typing import Sequence
 import numpy as np
 
 from repro.core import accounting
+from repro.obs import trace as _trace
 
 
 class DispatchError(RuntimeError):
@@ -50,9 +51,12 @@ class _ParkedCall:
 
 class MicroBatchDispatcher:
     def __init__(self, *, oracle, proxy=None, embedder=None, store=None,
-                 window_s: float = 0.002, max_batch: int = 64):
+                 window_s: float = 0.002, max_batch: int = 64, tracer=None):
         self._backends = {"oracle": oracle, "proxy": proxy, "embed": embedder}
         self._store = store
+        # fused batches run on the dispatcher thread, outside any session's
+        # trace context: batch spans root on the tracer handle directly
+        self._tracer = tracer
         self.window_s = window_s
         self.max_batch = max_batch
         self._cv = threading.Condition()
@@ -152,6 +156,13 @@ class MicroBatchDispatcher:
 
     def _execute(self, key: tuple, calls: list[_ParkedCall]) -> None:
         role, kind, extra = key
+        with _trace.span_in(self._tracer, f"dispatch/{role}.{kind}",
+                            "dispatch_batch", role=role, call_kind=kind) as sp:
+            self._execute_batch(key, calls, sp)
+
+    def _execute_batch(self, key: tuple, calls: list[_ParkedCall],
+                       sp) -> None:
+        role, kind, extra = key
         try:
             # dedup across all parked calls; first requester owns the prompt
             owner_of: dict[str, _ParkedCall] = {}
@@ -183,6 +194,11 @@ class MicroBatchDispatcher:
                     self._store.put_many(
                         [(role, kind, *extra, p) for p in todo], answered,
                         owners=[owner_of[p].tag for p in todo])
+            # batch fusion width + dedup/store effect, on the batch span
+            sp.set(fused_calls=len(calls), unique_prompts=len(order),
+                   backend_prompts=len(todo),
+                   store_hits=len(order) - len(todo),
+                   sessions=len({c.tag for c in calls}))
             prompt_sets = [set(c.prompts) for c in calls]
             with self._cv:
                 self.fused_batches += 1

@@ -41,6 +41,8 @@ from concurrent.futures import ThreadPoolExecutor
 
 from repro.core import accounting
 from repro.core.plan.cache import BatchedModelCache
+from repro.obs import StatsStore
+from repro.obs import trace as _trace
 from repro.core.plan.execute import PartitionedExecutor
 from repro.core.plan.nodes import LogicalNode
 from repro.core.plan.optimize import PlanOptimizer
@@ -75,8 +77,24 @@ class Gateway:
                  history_limit: int = 1024,
                  index_registry: IndexRegistry | None = None,
                  n_partitions: int | None = None,
-                 fragment_workers: int = 4):
+                 fragment_workers: int = 4,
+                 trace: "bool | _trace.Tracer" = False,
+                 stats_store: StatsStore | None = None):
         self.session = session
+        # trace=True builds a gateway-lifetime tracer (or pass your own);
+        # spans from every layer — session, plan stage, operator, fragment,
+        # dispatcher batch, kernel, index build, cache lookup — parent into
+        # per-session roots, exportable via export_trace()/session_trace()
+        if trace is True:
+            self.tracer = _trace.Tracer()
+        else:
+            self.tracer = trace if isinstance(trace, _trace.Tracer) else None
+        # observed operator statistics keyed by (operator, fingerprint),
+        # persisted alongside the semantic cache when it persists
+        self._stats_path = f"{persist_path}.stats.json" if persist_path \
+            else None
+        self.stats_store = stats_store if stats_store is not None \
+            else StatsStore(self._stats_path)
         self.store = store if store is not None else SharedSemanticCache(
             capacity=cache_capacity, ttl_s=cache_ttl_s,
             persist_path=persist_path)
@@ -89,7 +107,8 @@ class Gateway:
             proxy=_raw(session.proxy) if session.proxy is not None else None,
             embedder=_raw(session.embedder)
             if session.embedder is not None else None,
-            store=self.store, window_s=window_s, max_batch=max_batch)
+            store=self.store, window_s=window_s, max_batch=max_batch,
+            tracer=self.tracer)
         self.metrics = GatewayMetrics()
         self.max_pending = max_pending
         self.optimizer_kw = dict(optimizer_kw or {})
@@ -254,9 +273,16 @@ class Gateway:
             proxy=proxy, embedder=embedder,
             stage_hook=lambda node: sess.check(),
             index_registry=self.index_registry,
-            fragment_pool=self._fragment_pool, **exec_kw)
+            fragment_pool=self._fragment_pool,
+            stats_store=self.stats_store, **exec_kw)
         try:
-            with accounting.session_scope(sess.sid) as st:
+            # the tracer (when on) wraps the whole session in one root span;
+            # fragment/dispatcher threads parent into it via the captured
+            # accounting context / the dispatcher's tracer handle
+            with _trace.activate(self.tracer), \
+                    _trace.span_in(self.tracer, sess.sid, "session",
+                                   sid=sess.sid, tenant=sess.tenant) as sp, \
+                    accounting.session_scope(sess.sid) as st:
                 sess.stats = st
                 # pin floating StreamScans to the versions current NOW: one
                 # run never sees two versions even while writers commit
@@ -274,6 +300,7 @@ class Gateway:
                         rewrites=[str(r) for r in optimizer.applied])
                     sess.stats_log.append(opt_st.as_dict())
                 records = executor.run(plan)
+                sp.set(rows_out=len(records), status=DONE)
             self._resolve(sess, DONE, records=records)
         except SessionCancelled as exc:
             self._resolve(sess, CANCELLED, error=exc)
@@ -302,9 +329,33 @@ class Gateway:
 
     def snapshot(self) -> dict:
         snap = self.metrics.snapshot(store=self.store,
-                                     dispatcher=self.dispatcher)
+                                     dispatcher=self.dispatcher,
+                                     tracer=self.tracer)
         snap.update(self.index_registry.metrics())
         return snap
+
+    # -- trace / stats export ---------------------------------------------
+    def export_trace(self, path: str, *, fmt: str = "jsonl") -> int:
+        """Write every span recorded so far; ``fmt`` is ``"jsonl"`` (one
+        span per line) or ``"chrome"`` (Perfetto-loadable trace_event
+        JSON).  Returns the span count; raises if tracing is off."""
+        if self.tracer is None:
+            raise RuntimeError("gateway built without trace=True")
+        if fmt == "chrome":
+            return self.tracer.export_chrome(path)
+        if fmt == "jsonl":
+            return self.tracer.export_jsonl(path)
+        raise ValueError(f"unknown trace format {fmt!r}")
+
+    def session_trace(self, sid: str) -> list:
+        """All spans belonging to one serve session (its root span plus
+        every descendant, across worker/fragment threads)."""
+        if self.tracer is None:
+            raise RuntimeError("gateway built without trace=True")
+        out = []
+        for root in self.tracer.session_spans(sid):
+            out.extend(self.tracer.subtree(root))
+        return sorted(out, key=lambda s: s.t0)
 
     def close(self) -> None:
         # drain subscriptions BEFORE closing workers (in-flight runs still
@@ -327,6 +378,10 @@ class Gateway:
         if self._fragment_pool is not None:
             self._fragment_pool.shutdown(wait=True)
         self.dispatcher.close()
+        if self._stats_path:
+            # observed operator statistics persist next to the semantic
+            # cache, so the next process prices plans from observed reality
+            self.stats_store.save(self._stats_path)
         self.store.close()
 
     def __enter__(self) -> "Gateway":

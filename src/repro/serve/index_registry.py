@@ -35,6 +35,7 @@ from collections import OrderedDict
 
 from repro.index.backend import (RetrievalBackend, corpus_fingerprint,
                                  embedder_key)
+from repro.obs import trace as _trace
 
 
 class IndexRegistry:
@@ -131,7 +132,12 @@ class IndexRegistry:
         if latch is None:
             return idx
         try:
-            built = builder()
+            # build races are won once per key: the span measures the single
+            # process-wide build this session actually paid for
+            with _trace.span(f"index_build/{kind}", kind="index_build",
+                             corpus_rows=len(texts)) as sp:
+                built = builder()
+                sp.set(index_kind=built.kind)
             with self._lock:
                 self.builds += 1
             self._install(key, built, embedder)
@@ -178,7 +184,9 @@ class IndexRegistry:
             if have is None:
                 idx = None
             if idx is None:
-                built = builder(table.snapshot(target))
+                with _trace.span(f"index_build/{kind}", kind="index_build",
+                                 table=table.table_id, version=target):
+                    built = builder(table.snapshot(target))
                 with self._lock:
                     self.builds += 1
             else:
@@ -186,13 +194,20 @@ class IndexRegistry:
                 if delta.appends_only and not delta.added:
                     built = idx                 # net no-op commits
                 elif delta.appends_only and updater is not None:
-                    updater(idx, [r for _, r in delta.added])
+                    with _trace.span(f"index_update/{kind}",
+                                     kind="index_build",
+                                     table=table.table_id, version=target,
+                                     delta_rows=len(delta.added)):
+                        updater(idx, [r for _, r in delta.added])
                     built = idx
                     with self._lock:
                         self.updates += 1
                         self.delta_rows += len(delta.added)
                 else:                           # updates/deletes: rebuild
-                    built = builder(table.snapshot(target))
+                    with _trace.span(f"index_build/{kind}",
+                                     kind="index_build",
+                                     table=table.table_id, version=target):
+                        built = builder(table.snapshot(target))
                     with self._lock:
                         self.builds += 1
             self._install(key, built, embedder, version=target)

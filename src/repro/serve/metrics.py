@@ -2,18 +2,72 @@
 
 One ``GatewayMetrics`` per gateway, fed by the worker threads as sessions
 resolve; ``snapshot()`` folds in the shared store's and dispatcher's own
-counters to report the serving headline numbers — sessions/s, p50/p95
+counters to report the serving headline numbers — sessions/s, p50/p95/p99
 end-to-end latency, and the cross-query cache hit rate (the fraction of all
 prompt lookups answered by another session's work, in-window or from the
 shared store).
+
+Latency percentiles come from a fixed-bucket log-scale histogram over the
+gateway's *whole* life, not a sliding sample window: a ``deque(maxlen=N)``
+silently biases the tail toward the most recent sessions once a long-lived
+gateway wraps, while the histogram is O(buckets) memory with a bounded
+relative error (each bucket spans ~7.5%, so a reported percentile is within
+half a bucket of the true latency).
 """
 from __future__ import annotations
 
+import math
 import threading
 import time
-from collections import deque
 
-import numpy as np
+
+class LatencyHistogram:
+    """Log-scale fixed-bucket histogram over [LO, HI) seconds with under/
+    overflow buckets; ``percentile()`` returns the geometric midpoint of the
+    bucket holding the requested rank."""
+
+    LO = 1e-4          # 100 µs
+    HI = 1e4           # ~2.8 h
+    PER_DECADE = 32    # bucket width ratio 10**(1/32) ≈ 1.075
+
+    def __init__(self):
+        self._n = int(math.ceil(math.log10(self.HI / self.LO)
+                                * self.PER_DECADE))
+        # [underflow] + self._n log buckets + [overflow]
+        self.counts = [0] * (self._n + 2)
+        self.total = 0
+        self._log_lo = math.log10(self.LO)
+
+    def _bucket(self, x: float) -> int:
+        if x < self.LO:
+            return 0
+        if x >= self.HI:
+            return self._n + 1
+        return 1 + int((math.log10(x) - self._log_lo) * self.PER_DECADE)
+
+    def record(self, x: float) -> None:
+        self.counts[self._bucket(float(x))] += 1
+        self.total += 1
+
+    def percentile(self, q: float) -> float | None:
+        if not self.total:
+            return None
+        rank = q / 100.0 * (self.total - 1)
+        acc = 0
+        for i, c in enumerate(self.counts):
+            acc += c
+            if acc > rank:
+                if i == 0:
+                    return self.LO
+                if i == self._n + 1:
+                    return self.HI
+                lo = 10 ** (self._log_lo + (i - 1) / self.PER_DECADE)
+                hi = lo * 10 ** (1 / self.PER_DECADE)
+                return math.sqrt(lo * hi)  # geometric midpoint
+        return self.HI  # pragma: no cover - acc always exceeds rank
+
+    def __len__(self) -> int:
+        return self.total
 
 
 class GatewayMetrics:
@@ -32,9 +86,9 @@ class GatewayMetrics:
         self.emission_errors = 0
         self.fragments_run = 0    # partition fragments executed
         self.partitioned_ops = 0  # operators that ran fragment-parallel
-        # percentiles are computed over a sliding window so a long-lived
-        # gateway's metrics stay O(1) in memory
-        self.latencies: deque[float] = deque(maxlen=4096)
+        # O(1)-memory, unbiased over the gateway's whole life (see module
+        # docstring); field name kept from the deque era
+        self.latencies = LatencyHistogram()
 
     def on_submit(self) -> None:
         with self._lock:
@@ -76,12 +130,12 @@ class GatewayMetrics:
             else:
                 self.failed += 1
             if latency_s is not None:
-                self.latencies.append(latency_s)
+                self.latencies.record(latency_s)
 
-    def snapshot(self, *, store=None, dispatcher=None) -> dict:
+    def snapshot(self, *, store=None, dispatcher=None, tracer=None) -> dict:
         with self._lock:
             elapsed = max(time.monotonic() - self.started_at, 1e-9)
-            lat = np.asarray(self.latencies, float)
+            lat = self.latencies
             out = {
                 "submitted": self.submitted, "completed": self.completed,
                 "failed": self.failed, "cancelled": self.cancelled,
@@ -94,11 +148,17 @@ class GatewayMetrics:
                 "partitioned_ops": self.partitioned_ops,
                 "elapsed_s": round(elapsed, 4),
                 "throughput_rps": round(self.completed / elapsed, 4),
-                "p50_latency_s": round(float(np.percentile(lat, 50)), 4)
-                if lat.size else None,
-                "p95_latency_s": round(float(np.percentile(lat, 95)), 4)
-                if lat.size else None,
+                "p50_latency_s": round(lat.percentile(50), 4)
+                if len(lat) else None,
+                "p95_latency_s": round(lat.percentile(95), 4)
+                if len(lat) else None,
+                "p99_latency_s": round(lat.percentile(99), 4)
+                if len(lat) else None,
             }
+        if tracer is not None:
+            # span-derived per-stage wall/count/call breakdown (inclusive
+            # wall per span kind/name; see Tracer.stage_summary)
+            out["stages"] = tracer.stage_summary()
         if store is not None:
             out["cache"] = store.stats()
         if dispatcher is not None:

@@ -34,6 +34,7 @@ from collections import Counter
 from typing import Any
 
 from repro.core.plan import nodes as N
+from repro.obs import trace as _trace
 
 
 def find_stream_tables(plan: N.LogicalNode) -> list:
@@ -184,6 +185,15 @@ class Subscription:
             self._run_once(versions)
 
     def _run_once(self, versions: dict[str, int]) -> None:
+        # subscription threads run outside any session's trace context:
+        # emission spans root on the gateway's tracer handle directly
+        with _trace.span_in(getattr(self.gateway, "tracer", None),
+                            f"emission/{self.tenant}", "emission",
+                            tenant=self.tenant,
+                            version=max(versions.values())) as sp:
+            self._run_pinned(versions, sp)
+
+    def _run_pinned(self, versions: dict[str, int], sp) -> None:
         from repro.serve.gateway import AdmissionError
         pinned = pin_stream_scans(self.plan, versions)
         sess = None
@@ -208,6 +218,7 @@ class Subscription:
             with self._cv:
                 if self._cancelled:
                     return                      # cancellation is not an error
+            sp.set(sid=getattr(sess, "sid", None), error=repr(exc))
             self._push(Emission(versions=versions, records=None, added=[],
                                 removed=[], sid=getattr(sess, "sid", None),
                                 error=exc))
@@ -215,6 +226,8 @@ class Subscription:
         added, removed = _diff(self.last_records, records)
         self.last_records = records
         self._last_versions = versions
+        sp.set(sid=sess.sid, rows_out=len(records), added=len(added),
+               removed=len(removed))
         self._push(Emission(versions=versions, records=records, added=added,
                             removed=removed, sid=sess.sid))
 
