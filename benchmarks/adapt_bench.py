@@ -1,0 +1,171 @@
+"""Adaptive re-optimization benchmark: the three feedback timescales.
+
+Part A (drifting selectivity): a broad(0.9) -> narrow(0.05) filter chain
+above a ``sem_map`` — unprobeable at plan time, so the static plan runs the
+expensive as-written order.  One observed run warms the stats store; the
+adaptive second run promotes the narrow filter mid-query and must cut the
+oracle bill by >= 25% while staying record-identical.
+
+Part B (multi-query sharing): N concurrent gateway sessions over the same
+fingerprinted subplan materialize it exactly once (``matview_builds == 1``)
+and serve the rest from the view.
+
+Part C (mid-query re-plans): the retrieval switch (planned IVF over an
+overestimated corpus -> observed-small exact) and the fragment resize
+(4 planned fragments -> 1 for the observed survivor count), each asserted
+record-identical to the static plan.  Writes ``BENCH_adapt.json``.
+
+    PYTHONPATH=src python -m benchmarks.adapt_bench
+"""
+import json
+import time
+
+from benchmarks._util import emit
+from repro.core.backends import synth
+from repro.core.frame import SemFrame, Session
+from repro.obs.stats_store import StatsStore
+
+N_ROWS = 120
+N_SESSIONS = 6
+MIN_SAVINGS_PCT = 25.0
+
+
+def _world(n=N_ROWS, seed=8):
+    records, world, *_ = synth.make_filter_world(n, seed=seed)
+    synth.add_phrase_predicate(world, records, "is broad", 0.9, seed=seed)
+    synth.add_phrase_predicate(world, records, "is narrow", 0.05, seed=seed)
+    return records, world
+
+
+def _session(world, *, sample_size=40):
+    return Session(oracle=synth.SimulatedModel(world, "oracle"),
+                   embedder=synth.SimulatedEmbedder(world),
+                   sample_size=sample_size)
+
+
+def _chain(records, world, log):
+    return (SemFrame(records, _session(world), log).lazy()
+            .sem_map("a short note on {claim}", out_column="note")
+            .sem_filter("the {claim} is broad")
+            .sem_filter("the {claim} is narrow"))
+
+
+def _calls(log, kind="oracle_calls"):
+    return sum(st.get(kind, 0) for st in log)
+
+
+def run() -> None:
+    from repro.serve import Gateway
+
+    # -- A: drift workload, warm-store adaptive vs static ------------------
+    records, world = _world()
+    store = StatsStore()
+    warm_log = []
+    t0 = time.monotonic()
+    first = _chain(records, world, warm_log).collect(stats_store=store)
+    t_first = time.monotonic() - t0
+
+    static_log, adaptive_log = [], []
+    static = _chain(records, world, static_log).collect()
+    t0 = time.monotonic()
+    frame = _chain(records, world, adaptive_log)
+    adaptive = frame.collect(adaptive=True, stats_store=store)
+    t_adaptive = time.monotonic() - t0
+
+    identical = adaptive.records == static.records == first.records
+    calls_static = _calls(static_log)
+    calls_adaptive = _calls(adaptive_log)
+    saved_pct = 100.0 * (calls_static - calls_adaptive) / max(calls_static, 1)
+    replans = [e.kind for e in frame._exec_pair[2].replans]
+    emit("adapt/static", 1e6 * t_first, oracle_calls=calls_static,
+         rows_out=len(static.records))
+    emit("adapt/adaptive_warm", 1e6 * t_adaptive, oracle_calls=calls_adaptive,
+         saved_pct=round(saved_pct, 1), identical_records=identical,
+         reorders=replans.count("reorder_filters"))
+
+    # -- B: matview sharing across concurrent sessions ---------------------
+    mv_records, mv_world = _world(n=60, seed=9)
+    sess = _session(mv_world, sample_size=30)
+    frames = [SemFrame(mv_records, sess).lazy()
+              .sem_filter("the {claim} is broad") for _ in range(N_SESSIONS)]
+    t0 = time.monotonic()
+    with Gateway(sess, max_inflight=4, window_s=0.005, matview=True) as gw:
+        handles = [gw.submit(f) for f in frames]
+        rows = [h.result(timeout=300) for h in handles]
+        snap = gw.snapshot()
+    t_mv = time.monotonic() - t0
+    mv_identical = all(r == rows[0] for r in rows)
+    emit("adapt/matview", 1e6 * t_mv / N_SESSIONS,
+         sessions=N_SESSIONS, builds=snap["matview_builds"],
+         hits=snap["matview_hits"], identical_records=mv_identical,
+         rows_served=snap["matview_rows_served"])
+
+    # -- C: retrieval switch + fragment resize, record-identical -----------
+    sw_records, sw_world, *_ = synth.make_filter_world(400, seed=27)
+    synth.add_phrase_predicate(sw_world, sw_records, "is narrow", 0.04,
+                               seed=27)
+
+    def search_pipe(log=None):
+        return (SemFrame(sw_records, _session(sw_world), log).lazy()
+                .sem_map("a short note on {claim}", out_column="note")
+                .sem_filter("the {claim} is narrow")
+                .sem_search("claim", "claim text 3", k=30))
+
+    kw = dict(index_min_corpus=100, index_shared=True)
+    sw_static = search_pipe().collect(**kw)
+    sw_frame = search_pipe()
+    sw_adaptive = sw_frame.collect(adaptive=True, **kw)
+    sw_events = [e for e in sw_frame._exec_pair[2].replans
+                 if e.kind == "switch_retrieval"]
+    sw_identical = sw_adaptive.records == sw_static.records
+
+    rz_records, rz_world = _world(n=200, seed=5)
+
+    def resize_pipe():
+        return (SemFrame(rz_records, _session(rz_world)).lazy()
+                .sem_map("a short note on {claim}", out_column="note")
+                .sem_filter("the {claim} is narrow")
+                .sem_filter("the {claim} is broad"))
+
+    rz_static = resize_pipe().collect(n_partitions=4)
+    rz_frame = resize_pipe()
+    rz_adaptive = rz_frame.collect(adaptive=True, n_partitions=4)
+    rz_events = [e for e in rz_frame._exec_pair[2].replans
+                 if e.kind == "resize_fragments"]
+    rz_identical = rz_adaptive.records == rz_static.records
+    emit("adapt/replans", 0.0, retrieval_switches=len(sw_events),
+         fragment_resizes=len(rz_events),
+         switch_identical=sw_identical, resize_identical=rz_identical)
+
+    with open("BENCH_adapt.json", "w") as fh:
+        json.dump({
+            "drift": {"oracle_calls_static": calls_static,
+                      "oracle_calls_adaptive": calls_adaptive,
+                      "saved_pct": round(saved_pct, 1),
+                      "identical_records": identical,
+                      "replans": replans},
+            "matview": {"sessions": N_SESSIONS,
+                        "builds": snap["matview_builds"],
+                        "hits": snap["matview_hits"],
+                        "identical_records": mv_identical},
+            "replan_kinds": {"retrieval_switches": len(sw_events),
+                             "fragment_resizes": len(rz_events),
+                             "switch_identical": sw_identical,
+                             "resize_identical": rz_identical},
+        }, fh, indent=2)
+
+    assert identical, "adaptive run diverged from the static records"
+    assert saved_pct >= MIN_SAVINGS_PCT, (
+        f"adaptive saved only {saved_pct:.1f}% oracle calls "
+        f"(need >= {MIN_SAVINGS_PCT}%)")
+    assert snap["matview_builds"] == 1, (
+        f"{N_SESSIONS} sessions materialized the shared subplan "
+        f"{snap['matview_builds']} times (want exactly 1)")
+    assert snap["matview_hits"] == N_SESSIONS - 1
+    assert mv_identical, "matview-served sessions diverged"
+    assert sw_events and sw_identical, "retrieval switch missing or diverged"
+    assert rz_events and rz_identical, "fragment resize missing or diverged"
+
+
+if __name__ == "__main__":
+    run()

@@ -35,6 +35,8 @@ from repro.core.backends.base import CountedEmbedder, CountedModel
 from repro.core.langex import as_langex
 from repro.core.operators import search as _search
 from repro.core.plan import nodes as PN
+from repro.core.plan.adaptive import (AdaptivePlanExecutor, AdaptivePolicy,
+                                      adaptive_default)
 from repro.core.plan.execute import PartitionedExecutor, PlanExecutor
 from repro.core.plan.optimize import PlanOptimizer, explain_plan, total_cost
 
@@ -305,17 +307,36 @@ class LazySemFrame:
             self._exec_pair[2].close(wait=False)  # executor's fragment pool
         opt_kw = dict(opt_kw)
         fragment_workers = opt_kw.pop("fragment_workers", 0)
+        # adaptive=True (or adaptive_policy=...) swaps in the mid-query
+        # re-optimizing executor; the REPRO_ADAPTIVE env flips the default
+        policy = opt_kw.pop("adaptive_policy", None)
+        adaptive = opt_kw.pop("adaptive", None)
+        if adaptive is None:
+            adaptive = policy is not None or adaptive_default()
+        matviews = opt_kw.pop("matviews", None)
         # the executor's "auto" index builds (join sim-prefilter) must obey
-        # the same retrieval knobs the optimizer plans with
-        exec_kw = {k: opt_kw[k] for k in ("recall_target", "index_min_corpus")
+        # the same retrieval knobs the optimizer plans with; the stats store
+        # feeds both the executor (observation) and optimizer (costing)
+        exec_kw = {k: opt_kw[k]
+                   for k in ("recall_target", "index_min_corpus",
+                             "stats_store")
                    if k in opt_kw}
-        executor = PartitionedExecutor(self.session, stats_log=self.stats_log,
-                                       use_cache=True,
-                                       fragment_workers=fragment_workers,
-                                       **exec_kw)
+        if adaptive:
+            executor = AdaptivePlanExecutor(
+                self.session, stats_log=self.stats_log, use_cache=True,
+                fragment_workers=fragment_workers, matviews=matviews,
+                policy=policy if isinstance(policy, AdaptivePolicy) else None,
+                **exec_kw)
+        else:
+            executor = PartitionedExecutor(
+                self.session, stats_log=self.stats_log, use_cache=True,
+                fragment_workers=fragment_workers, matviews=matviews,
+                **exec_kw)
         optimizer = PlanOptimizer(self.session, oracle=executor.oracle,
                                   proxy=executor.proxy,
                                   seed=self.session.seed, **opt_kw)
+        if adaptive:
+            executor.optimizer = optimizer
         self._exec_pair = (key, optimizer, executor)
         return optimizer, executor
 
@@ -338,7 +359,9 @@ class LazySemFrame:
         return SemFrame(records, self.session, self.stats_log)
 
     def explain(self, *, optimize: bool = True, **opt_kw) -> str:
-        out = ["== logical plan (as written) ==", explain_plan(self.plan),
+        store = opt_kw.get("stats_store")
+        out = ["== logical plan (as written) ==",
+               explain_plan(self.plan, stats_store=store),
                f"-- estimated oracle calls: {total_cost(self.plan):.0f}"]
         if optimize:
             optimizer, _ = self._optimizer_and_executor(**opt_kw)
@@ -346,7 +369,8 @@ class LazySemFrame:
                 plan = optimizer.optimize(self.plan)
             if st.lm_calls or st.cache_hits:  # probes are real model traffic
                 self.stats_log.append(st.as_dict())
-            out += ["", "== optimized plan ==", explain_plan(plan),
+            out += ["", "== optimized plan ==",
+                    explain_plan(plan, stats_store=store),
                     f"-- estimated oracle calls: {total_cost(plan):.0f}",
                     "", "== applied rewrites =="]
             out += [f" * {r}" for r in optimizer.applied] or [" (none)"]

@@ -18,12 +18,19 @@ Four pieces:
                    plan fragments over row partitions (``plan.parallel``)
                    with guarantee-preserving merge semantics;
   * ``parallel`` — the partitioned operator implementations + fragment
-                   scheduling.
+                   scheduling;
+  * ``adaptive`` — :class:`AdaptivePlanExecutor`, mid-query re-optimization:
+                   filter chains re-ranked on live blended selectivities,
+                   retrieval re-chosen on observed corpus size, fragments
+                   re-sized on observed row counts — record-identical by the
+                   strict-mode equivalence contract.
 
 ``SemFrame.lazy()`` is the entry point; the default eager path builds the
 same single-node plans and executes them immediately (identical behavior and
 stats to the pre-plan-layer code).
 """
+from repro.core.plan.adaptive import (AdaptivePlanExecutor, AdaptivePolicy,
+                                      adaptive_default)
 from repro.core.plan.cache import BatchedModelCache
 from repro.core.plan.execute import PartitionedExecutor, PlanExecutor
 from repro.core.plan.nodes import (Agg, Exchange, Extract, Filter, FusedMap,
@@ -32,8 +39,9 @@ from repro.core.plan.nodes import (Agg, Exchange, Extract, Filter, FusedMap,
 from repro.core.plan.optimize import PlanOptimizer, explain_plan
 
 __all__ = [
-    "Agg", "BatchedModelCache", "Exchange", "Extract", "Filter", "FusedMap",
-    "GroupBy", "Join", "LogicalNode", "Map", "Partition",
-    "PartitionedExecutor", "PlanExecutor", "PlanOptimizer", "Scan", "Search",
-    "SimJoin", "TopK", "explain_plan",
+    "AdaptivePlanExecutor", "AdaptivePolicy", "Agg", "BatchedModelCache",
+    "Exchange", "Extract", "Filter", "FusedMap", "GroupBy", "Join",
+    "LogicalNode", "Map", "Partition", "PartitionedExecutor", "PlanExecutor",
+    "PlanOptimizer", "Scan", "Search", "SimJoin", "TopK", "adaptive_default",
+    "explain_plan",
 ]

@@ -45,11 +45,19 @@ class PlanExecutor:
                  use_cache: bool = False, oracle=None, proxy=None,
                  embedder=None, stage_hook=None, index_registry=None,
                  recall_target: float = 0.95,
-                 index_min_corpus: int | None = None, stats_store=None):
+                 index_min_corpus: int | None = None, stats_store=None,
+                 matviews=None):
         self.session = session
         # cross-session observed-statistics feed (repro.obs.StatsStore);
         # None -> no observation overhead
         self.stats_store = stats_store
+        # semantic materialized-view registry (repro.serve.matview): when
+        # installed, every materializable subplan consults it by plan
+        # fingerprint before executing, so concurrent sessions sharing a
+        # subplan compute it once
+        self.matviews = matviews
+        self._matview_fp: dict[int, str | None] = {}
+        self._matview_active: set[str] = set()
         self.stats_log = stats_log if stats_log is not None else []
         if oracle is None:
             oracle = BatchedModelCache(session.oracle) if use_cache else session.oracle
@@ -168,12 +176,14 @@ class PlanExecutor:
     def _corpus_index(self, child: N.LogicalNode, texts: list[str], column: str,
                       *, kind: str = "auto", nprobe: int | None = None,
                       n_queries: int = 1, shards: int | None = None,
-                      quantize: str | None = None):
+                      quantize: str | None = None, index_auto: bool = False):
         """Executor delta routing: a StreamScan corpus under a registry goes
         through the versioned reuse path; everything else builds (or fetches
         by content fingerprint) as before.  ``child`` is unwrapped through
         Partition/Exchange markers — fragmentation never changes what corpus
-        an index covers."""
+        an index covers.  ``index_auto`` flags an optimizer-estimated (not
+        user-pinned) kind; the base executor honors the plan as written and
+        the adaptive subclass may re-choose on observed corpus size."""
         child = N.plain(child)
         if self.index_registry is not None and isinstance(child, N.StreamScan):
             return self._build_stream_index(child, column, len(texts), kind=kind,
@@ -215,6 +225,9 @@ class PlanExecutor:
         if self.stage_hook is not None:
             self.stage_hook(node)
         fn = getattr(self, f"_run_{type(node).__name__.lower()}")
+        if self.matviews is not None:
+            inner = fn
+            fn = lambda n: self._matview_dispatch(n, inner)
         if _trace.current_tracer() is None:
             return fn(node)
         # one span per plan node; node_id keys the explain_analyze join
@@ -224,6 +237,31 @@ class PlanExecutor:
             out = fn(node)
             sp.set(rows_out=len(out))
             return out
+
+    def _matview_dispatch(self, node: N.LogicalNode, inner) -> list[dict]:
+        """Consult the materialized-view registry before executing a
+        materializable subplan.  Exchange/Partition wrappers fingerprint as
+        their wrapped operator, so the consult happens at the outermost
+        wrapper; ``_matview_active`` keeps the in-progress key from being
+        re-consulted by the nested run() of the same subplan (the compute
+        path descends through the very nodes that produced the key)."""
+        key = self.matviews.key_for(node, memo=self._matview_fp)
+        if key is None or key in self._matview_active:
+            return inner(node)
+        self._matview_active.add(key)
+        try:
+            records, hit = self.matviews.get_or_compute(
+                key, lambda: inner(node), wait_hook=self.stage_hook)
+        finally:
+            self._matview_active.discard(key)
+        if hit:
+            self.stats_log.append({"operator": "matview_hit",
+                                   "rows_out": len(records),
+                                   "key": key[:16]})
+            sp = _trace.current_span()
+            if sp is not None and sp.kind == "plan_stage":
+                sp.set(matview=True, rows_out=len(records))
+        return records
 
     # -- leaves ------------------------------------------------------------
     def _run_scan(self, node: N.Scan) -> list[dict]:
@@ -414,7 +452,7 @@ class PlanExecutor:
         index = node.index or self._corpus_index(
             node.child, [str(t[node.column]) for t in recs], node.column,
             kind=node.index_kind, nprobe=node.nprobe, shards=node.shards,
-            quantize=node.quantize)
+            quantize=node.quantize, index_auto=node.index_auto)
         # a shared stream index can be ahead of this run's pinned snapshot
         # (a commit landed mid-query): bound hits to the snapshot's rows
         cutoff = len(recs) \
@@ -434,7 +472,8 @@ class PlanExecutor:
                                    [str(t[node.right_col]) for t in right],
                                    node.right_col, kind=node.index_kind,
                                    nprobe=node.nprobe, n_queries=len(left),
-                                   shards=node.shards, quantize=node.quantize)
+                                   shards=node.shards, quantize=node.quantize,
+                                   index_auto=node.index_auto)
         cutoff = len(right) \
             if isinstance(N.plain(node.right), N.StreamScan) else None
         scores, idx, stats = _search.sem_sim_join(
@@ -735,7 +774,8 @@ class PartitionedExecutor(PlanExecutor):
                                    [str(t[node.right_col]) for t in right],
                                    node.right_col, kind=node.index_kind,
                                    nprobe=node.nprobe, n_queries=len(left),
-                                   shards=node.shards, quantize=node.quantize)
+                                   shards=node.shards, quantize=node.quantize,
+                                   index_auto=node.index_auto)
         cutoff = len(right) \
             if isinstance(N.plain(node.right), N.StreamScan) else None
         left_texts = [str(t[node.left_col]) for t in left]

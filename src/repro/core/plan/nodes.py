@@ -182,6 +182,7 @@ class Join(LogicalNode):
     project_fn: Callable | None = None
     force_plan: str | None = None
     prefilter_k: int | None = None  # sim-join candidate prefilter (optimizer)
+    selectivity: float | None = None  # pair-grid match rate (stats feedback)
 
     def __post_init__(self):
         self.langex = _lx(self.langex)
@@ -196,7 +197,8 @@ class Join(LogicalNode):
     def label(self) -> str:
         mode = "cascade" if self.is_cascade else "gold"
         pf = f", prefilter_k={self.prefilter_k}" if self.prefilter_k else ""
-        return f"Join[{mode}{pf}] {self.langex.template!r}"
+        sel = f", sel~{self.selectivity:.3f}" if self.selectivity is not None else ""
+        return f"Join[{mode}{pf}{sel}] {self.langex.template!r}"
 
 
 @dataclasses.dataclass
@@ -335,6 +337,9 @@ class Search(LogicalNode):
     nprobe: int | None = None  # IVF recall knob, installed by the optimizer
     shards: int | None = None  # device-shard layout, installed by the optimizer
     quantize: str | None = None  # IVF tile precision ("none"|"int8"), rule 5
+    # True when rule 5 chose index_kind from a cardinality *estimate* (vs a
+    # user pin): only then may the adaptive executor re-choose at run time
+    index_auto: bool = False
 
     def columns(self) -> set[str]:
         return self.child.columns()
@@ -356,6 +361,7 @@ class SimJoin(LogicalNode):
     nprobe: int | None = None
     shards: int | None = None
     quantize: str | None = None
+    index_auto: bool = False   # kind chosen from an estimate (see Search)
 
     def columns(self) -> set[str]:
         return (self.left.columns()

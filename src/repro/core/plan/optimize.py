@@ -60,10 +60,19 @@ smaller bill and only fire when the cost model says so):
                                 process has devices and the corpus clears
                                 ``shard_min_corpus``).
 
+Feedback: constructed with a ``stats_store`` (``repro.obs.stats_store``),
+the optimizer runs a zeroth pass — ``feedback_costing`` — that installs
+observed selectivities on Filter/Join nodes whose semantic fingerprint the
+store has seen before, shrinkage-blended with the model prior by evidence
+mass, and rules 3/5/6 price from the blended numbers.  A recurring
+predicate is thus costed from what it actually did last time, not from the
+static default.
+
 ``explain_plan`` renders a plan tree with per-node cardinality and
 oracle-call estimates (plus, on Exchange boundaries, the partition count and
-per-fragment cost share); ``LazySemFrame.explain()`` shows before/after plus
-the applied rewrite list.
+per-fragment cost share, and — given a ``stats_store`` — the observed
+selectivity next to the model's guess); ``LazySemFrame.explain()`` shows
+before/after plus the applied rewrite list.
 """
 from __future__ import annotations
 
@@ -119,7 +128,8 @@ def estimate_cardinality(node: N.LogicalNode) -> float:
         sel = node.selectivity if node.selectivity is not None else DEFAULT_FILTER_SEL
         return sel * estimate_cardinality(node.child)
     if isinstance(node, N.Join):
-        return (DEFAULT_JOIN_SEL * estimate_cardinality(node.left)
+        sel = node.selectivity if node.selectivity is not None else DEFAULT_JOIN_SEL
+        return (sel * estimate_cardinality(node.left)
                 * estimate_cardinality(node.right))
     if isinstance(node, N.SimJoin):
         return node.k * estimate_cardinality(node.left)
@@ -178,7 +188,8 @@ def predicted_selectivity(node: N.LogicalNode) -> float | None:
         return (node.selectivity if node.selectivity is not None
                 else DEFAULT_FILTER_SEL)
     if isinstance(node, N.Join):
-        return DEFAULT_JOIN_SEL
+        return (node.selectivity if node.selectivity is not None
+                else DEFAULT_JOIN_SEL)
     if isinstance(node, (N.TopK, N.Search)):
         n = estimate_cardinality(node.children()[0])
         return min(float(node.k) / n, 1.0) if n else None
@@ -201,11 +212,29 @@ def predicted_node_metrics(node: N.LogicalNode) -> dict:
     }
 
 
-def explain_plan(node: N.LogicalNode, *, indent: str = "") -> str:
+def shrinkage_blend(prior: float, observed: float, weight: float,
+                    prior_strength: float) -> float:
+    """Observed statistic blended with its model prior, shrunk by evidence
+    mass: ``weight`` is the (possibly decayed) run count behind the
+    observation, ``prior_strength`` the pseudo-run weight of the prior.  A
+    once-seen predicate moves the estimate a little; a recurring one
+    dominates it."""
+    w = max(float(weight), 0.0)
+    return (prior_strength * prior + w * observed) / (prior_strength + w)
+
+
+def explain_plan(node: N.LogicalNode, *, indent: str = "",
+                 stats_store=None) -> str:
     pred = predicted_node_metrics(node)
     extra = ""
     if pred["selectivity"] is not None:
         extra += f", sel~{pred['selectivity']:.2f}"
+    if stats_store is not None:
+        # observed reality next to the model's guess, when the store has
+        # seen this predicate before (keyed by semantic fingerprint)
+        obs = stats_store.stats_for_node(node)
+        if obs is not None and obs.selectivity is not None:
+            extra += f", sel_obs={obs.selectivity:.2f} (w={obs.runs:.1f})"
     if isinstance(node, N.Exchange) and node.n_partitions > 1:
         # cost share of one fragment at this boundary (the merged operator's
         # own bill split across partitions)
@@ -214,7 +243,8 @@ def explain_plan(node: N.LogicalNode, *, indent: str = "") -> str:
            f"(rows~{pred['rows']:.0f}, "
            f"oracle~{estimate_cost(node):.0f}{extra})"]
     for c in node.children():
-        out.append(explain_plan(c, indent=indent + "  "))
+        out.append(explain_plan(c, indent=indent + "  ",
+                                stats_store=stats_store))
     return "\n".join(out)
 
 
@@ -235,7 +265,9 @@ class PlanOptimizer:
                  shards: int | str | None = "auto",
                  shard_min_corpus: int = SHARD_MIN_CORPUS,
                  quantize: str = "auto",
-                 quant_min_corpus: int = QUANT_MIN_CORPUS):
+                 quant_min_corpus: int = QUANT_MIN_CORPUS,
+                 stats_store=None,
+                 prior_strength: float = 4.0):
         self.session = session
         # probe through the executor's cache so sample labels are reused
         self.oracle = oracle if oracle is not None else session.oracle
@@ -265,6 +297,11 @@ class PlanOptimizer:
         # "int8"/"none" pin it
         self.quantize = quantize
         self.quant_min_corpus = quant_min_corpus
+        # runtime feedback: observed (operator, fingerprint) statistics from
+        # prior executions, blended with the model prior at prior_strength
+        # pseudo-runs (see shrinkage_blend)
+        self.stats_store = stats_store
+        self.prior_strength = prior_strength
         self.applied: list[AppliedRewrite] = []
         self._sel_memo: dict[tuple, float] = {}
 
@@ -277,6 +314,7 @@ class PlanOptimizer:
 
     def optimize(self, plan: N.LogicalNode) -> N.LogicalNode:
         self.applied = []  # per-run; the selectivity memo persists across runs
+        plan = self._feedback_costing(plan)
         plan = self._transform(plan, self._fuse_maps)
         for _ in range(8):  # pushdown to fixpoint (filters sink through join stacks)
             before = len(self.applied)
@@ -287,6 +325,49 @@ class PlanOptimizer:
         plan = self._transform(plan, self._inject_sim_prefilter)
         plan = self._transform(plan, self._choose_retrieval)
         plan = self._transform(plan, self._plan_partitions)
+        return plan
+
+    # -- rule 0: feedback-informed initial costing -------------------------
+    def _blend_with_store(self, node, prior: float) -> tuple[float, float] | None:
+        """(blended selectivity, evidence weight) from the stats store for a
+        node's fingerprint, or None when the store has never seen it."""
+        if self.stats_store is None:
+            return None
+        obs = self.stats_store.stats_for_node(node)
+        if obs is None or obs.selectivity is None:
+            return None
+        return (shrinkage_blend(prior, obs.selectivity, obs.runs,
+                                self.prior_strength), obs.runs)
+
+    def _feedback_costing(self, plan):
+        """Zeroth pass: install observed selectivities (shrinkage-blended
+        with the default prior) on Filter/Join nodes the stats store has
+        seen before, so every later rule prices from history."""
+        if self.stats_store is None:
+            return plan
+        installed: list[str] = []
+
+        def fn(node):
+            if isinstance(node, N.Filter) and node.selectivity is None:
+                prior = DEFAULT_FILTER_SEL
+            elif isinstance(node, N.Join) and node.selectivity is None:
+                prior = DEFAULT_JOIN_SEL
+            else:
+                return None
+            blended = self._blend_with_store(node, prior)
+            if blended is None:
+                return None
+            sel, weight = blended
+            installed.append(f"{node.langex.template!r} sel~{sel:.2f} "
+                             f"(w={weight:.1f})")
+            return dataclasses.replace(node, selectivity=sel)
+
+        plan = self._transform(plan, fn)
+        if installed:
+            self.applied.append(AppliedRewrite(
+                "feedback_costing",
+                f"{len(installed)} node(s) costed from observed history: "
+                + "; ".join(installed)))
         return plan
 
     # -- rule 1: map fusion ------------------------------------------------
@@ -340,7 +421,15 @@ class PlanOptimizer:
 
     # -- rule 3: filter chain reordering -----------------------------------
     def _filter_unit_cost(self, f: N.Filter) -> float:
-        return CASCADE_FILTER_COST if f.is_cascade else GOLD_FILTER_COST
+        unit = CASCADE_FILTER_COST if f.is_cascade else GOLD_FILTER_COST
+        if self.stats_store is not None:
+            # observed oracle calls per input row refine the static unit
+            # cost (a well-cached or proxy-heavy predicate bills far less)
+            obs = self.stats_store.stats_for_node(f)
+            if obs is not None and obs.rows_in > 0:
+                unit = shrinkage_blend(unit, obs.oracle_calls_per_row,
+                                       obs.runs, self.prior_strength)
+        return unit
 
     def _probe_selectivity(self, f: N.Filter, base: N.LogicalNode,
                            base_records: list, idx: np.ndarray,
@@ -398,6 +487,10 @@ class PlanOptimizer:
             len(base_records), self.sample_size, self.seed, scores=scores)
         sels = [self._probe_selectivity(f, base, base_records, idx, probs)
                 for f in chain_bottom_up]
+        # fold in observed history: the importance-sample probe is the prior,
+        # the store's EWMA selectivity the evidence
+        sels = [b[0] if (b := self._blend_with_store(f, s)) is not None else s
+                for f, s in zip(chain_bottom_up, sels)]
         # optimal chain order: ascending cost / (1 - selectivity)
         rank = [self._filter_unit_cost(f) / max(1.0 - s, 1e-6)
                 for f, s in zip(chain_bottom_up, sels)]
@@ -456,18 +549,22 @@ class PlanOptimizer:
             else:
                 detail += ")"
             self.applied.append(AppliedRewrite("choose_retrieval", detail))
+        # index_auto marks the choice as estimate-derived: the adaptive
+        # executor may re-choose at run time when the real corpus size
+        # drifts from n_corpus (user pins returned above, so stay fixed)
         return dataclasses.replace(node, index_kind=kind, nprobe=nprobe,
-                                   quantize=quantize)
+                                   quantize=quantize, index_auto=True)
 
     # -- rule 6: partition planning ----------------------------------------
     def _partition_count(self, n_rows: float) -> int:
         """Fragments for an operator over ``n_rows`` input rows: the
-        configured count, capped so no fragment is empty."""
-        if not self.n_partitions or self.n_partitions < 2:
-            return 1
-        if n_rows < self.partition_min_rows:
-            return 1
-        return max(1, min(self.n_partitions, int(n_rows)))
+        configured count, capped so no fragment is empty.  Shared with the
+        adaptive executor (``parallel.partition_count``) so a mid-query
+        resize recomputes exactly the planner's sizing rule on observed
+        rows."""
+        from repro.core.plan.parallel import partition_count
+        return partition_count(n_rows, self.n_partitions,
+                               self.partition_min_rows)
 
     def _shard_count(self, n_corpus: float) -> int:
         if self.shards in (None, 0, 1) or n_corpus < 1:

@@ -88,6 +88,20 @@ def contiguous_partitions(n: int, n_partitions: int) -> list[np.ndarray]:
     return [np.arange(lo, hi) for lo, hi in zip(bounds, bounds[1:])]
 
 
+def partition_count(n_rows: float, configured: int | None,
+                    min_rows: int) -> int:
+    """Fragments for an operator over ``n_rows`` rows: the configured count,
+    gated by ``min_rows`` and capped so no fragment is empty.  One
+    definition shared by the optimizer (estimated rows, plan time) and the
+    adaptive executor (observed rows, run time), so a mid-query fragment
+    resize is exactly the partitioning the planner would have chosen had it
+    known the true cardinality — bit-identical output either way (the
+    contiguous gather is a positional concat)."""
+    if not configured or configured < 2 or n_rows < min_rows:
+        return 1
+    return max(1, min(int(configured), int(n_rows)))
+
+
 def hash_partitions(records, n_partitions: int, key: str) -> list[np.ndarray]:
     """Rows bucketed by the group key's *equality class* (built-in ``hash``,
     under which 1, 1.0 and True coincide exactly as they do in the

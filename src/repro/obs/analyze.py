@@ -34,6 +34,7 @@ class NodeReport:
     predicted: dict
     observed: dict | None          # None when the node never ran directly
     drift: list[str] = dataclasses.field(default_factory=list)
+    replanned: str | None = None   # adaptive executor's mid-query decision
 
     def render(self) -> str:
         pad = "  " * self.depth
@@ -56,6 +57,8 @@ class NodeReport:
         line += "  (" + ", ".join(cols) + ")"
         if self.drift:
             line += "  !! drift: " + ", ".join(self.drift)
+        if self.replanned:
+            line += f"  >> replanned: {self.replanned}"
         return line
 
 
@@ -133,7 +136,8 @@ def _walk(node: N.LogicalNode, depth: int, by_node: dict, children: dict,
             r = _drift_ratio(pred["oracle_calls"], observed["oracle_calls"])
             if r > 1 + tolerance:
                 drift.append(f"oracle {r:.1f}x")
-    out.append(NodeReport(node, depth, pred, observed, drift))
+    replanned = sp.attrs.get("replanned") if sp is not None else None
+    out.append(NodeReport(node, depth, pred, observed, drift, replanned))
     for c in node.children():
         _walk(c, depth + 1, by_node, children, tolerance, out)
 

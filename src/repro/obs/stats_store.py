@@ -15,6 +15,15 @@ is a property of the predicate, per the paper's proxy-calibration setup).
 Persistence is a small JSON document saved alongside the semantic cache
 (the gateway saves it in ``close()``); ``load()`` merges additively so
 multiple processes can fold their runs together.
+
+Windowing: a feedback loop must weight the last five minutes over last
+month's sessions, so the store supports exponential decay — with
+``decay < 1`` every accumulator (runs, rows, calls, wall) is multiplied by
+``decay`` before each new observation folds in, making the stored values
+exponentially-weighted sums whose ratios (selectivity, calls/row) become
+EWMAs.  ``load(path, discount=...)`` down-weights a persisted store the
+same way, so history carried across processes arrives as a prior, not a
+veto.  The default ``decay=1.0`` keeps the original additive semantics.
 """
 from __future__ import annotations
 
@@ -64,17 +73,19 @@ _SUM_FIELDS = ("rows_in", "rows_out", "oracle_calls", "proxy_calls",
 
 @dataclasses.dataclass
 class ObservedStats:
+    # accumulators are ints under the default additive semantics and become
+    # exponentially-weighted float sums once the store decays (decay < 1)
     operator: str
     fingerprint: str
-    runs: int = 0
-    rows_in: int = 0
-    rows_out: int = 0
-    oracle_calls: int = 0
-    proxy_calls: int = 0
-    embed_calls: int = 0
-    compare_calls: int = 0
-    generate_calls: int = 0
-    cache_hits: int = 0
+    runs: float = 0
+    rows_in: float = 0
+    rows_out: float = 0
+    oracle_calls: float = 0
+    proxy_calls: float = 0
+    embed_calls: float = 0
+    compare_calls: float = 0
+    generate_calls: float = 0
+    cache_hits: float = 0
     wall_s: float = 0.0
     details: dict = dataclasses.field(default_factory=dict)
 
@@ -93,25 +104,47 @@ class ObservedStats:
         return self.oracle_calls / self.rows_in if self.rows_in else 0.0
 
     def as_dict(self) -> dict:
+        rnd = lambda v: v if isinstance(v, int) else round(v, 4)
         d = {"operator": self.operator, "fingerprint": self.fingerprint,
-             "runs": self.runs, "wall_s": round(self.wall_s, 6),
+             "runs": rnd(self.runs), "wall_s": round(self.wall_s, 6),
              "selectivity": (round(self.selectivity, 6)
                              if self.selectivity is not None else None),
-             "details": dict(self.details)}
+             "details": {k: rnd(v) if isinstance(v, (int, float))
+                         and not isinstance(v, bool) else v
+                         for k, v in self.details.items()}}
         for f in _SUM_FIELDS:
-            d[f] = getattr(self, f)
+            d[f] = rnd(getattr(self, f))
         return d
 
 
 class StatsStore:
     """Accumulates ``ObservedStats`` keyed by (operator, fingerprint)."""
 
-    def __init__(self, path: str | None = None):
+    def __init__(self, path: str | None = None, *, decay: float = 1.0,
+                 load_discount: float = 1.0):
+        if not 0.0 < decay <= 1.0:
+            raise ValueError(f"decay={decay} (expected 0 < decay <= 1)")
         self._lock = threading.Lock()
         self._stats: dict[tuple[str, str], ObservedStats] = {}
+        self.decay = decay
         self.path = path
         if path and os.path.exists(path):
-            self.load(path)
+            self.load(path, discount=load_discount)
+
+    def _age(self, obs: ObservedStats) -> None:
+        """Apply one step of exponential decay (lock held). runs becomes the
+        EWMA weight mass, so ratio properties stay unbiased."""
+        if self.decay >= 1.0:
+            return
+        d = self.decay
+        obs.runs *= d
+        obs.wall_s *= d
+        for f in _SUM_FIELDS:
+            setattr(obs, f, getattr(obs, f) * d)
+        for k in obs.details:
+            v = obs.details[k]
+            if isinstance(v, (int, float)) and not isinstance(v, bool):
+                obs.details[k] = v * d
 
     def observe(self, operator: str, fingerprint: str, *, rows_in: int = 0,
                 rows_out: int = 0, wall_s: float = 0.0,
@@ -121,6 +154,7 @@ class StatsStore:
             obs = self._stats.get(key)
             if obs is None:
                 obs = self._stats[key] = ObservedStats(operator, fingerprint)
+            self._age(obs)
             obs.runs += 1
             obs.rows_in += int(rows_in)
             obs.rows_out += int(rows_out)
@@ -165,13 +199,19 @@ class StatsStore:
     def selectivity_for_node(self, node) -> float | None:
         """Observed selectivity for a plan node, any operator — the lookup
         the adaptive optimizer will use."""
+        obs = self.stats_for_node(node)
+        return obs.selectivity if obs is not None else None
+
+    def stats_for_node(self, node) -> ObservedStats | None:
+        """Full observed entry for a plan node's fingerprint, any operator
+        — selectivity plus the run weight the shrinkage blend needs."""
         fp = node_fingerprint(node)
         if fp is None:
             return None
         with self._lock:
             for (_, f), obs in self._stats.items():
-                if f == fp and obs.selectivity is not None:
-                    return obs.selectivity
+                if f == fp and obs.runs > 0:
+                    return obs
         return None
 
     def snapshot(self) -> list[dict]:
@@ -196,10 +236,17 @@ class StatsStore:
         os.replace(tmp, path)
         return path
 
-    def load(self, path: str) -> int:
-        """Merge a saved store additively into this one."""
+    def load(self, path: str, *, discount: float = 1.0) -> int:
+        """Merge a saved store into this one.  ``discount`` scales every
+        incoming accumulator (1.0 = the original additive merge): a
+        down-weighted load makes cross-process history a shrinkage prior
+        that fresh observations quickly outvote, instead of a month of
+        stale sessions outvoting the last five minutes."""
+        if not 0.0 <= discount <= 1.0:
+            raise ValueError(f"discount={discount} (expected 0 <= d <= 1)")
         with open(path) as f:
             doc = json.load(f)
+        scale = (lambda v: v) if discount == 1.0 else (lambda v: v * discount)
         n = 0
         for e in doc.get("entries", ()):
             counts = {f: e.get(f, 0) for f in _SUM_FIELDS
@@ -210,14 +257,14 @@ class StatsStore:
                 if obs is None:
                     obs = self._stats[key] = ObservedStats(
                         e["operator"], e["fingerprint"])
-                obs.runs += e.get("runs", 0)
-                obs.rows_in += e.get("rows_in", 0)
-                obs.rows_out += e.get("rows_out", 0)
-                obs.wall_s += e.get("wall_s", 0.0)
+                obs.runs += scale(e.get("runs", 0))
+                obs.rows_in += scale(e.get("rows_in", 0))
+                obs.rows_out += scale(e.get("rows_out", 0))
+                obs.wall_s += scale(e.get("wall_s", 0.0))
                 for f, v in counts.items():
-                    setattr(obs, f, getattr(obs, f) + v)
+                    setattr(obs, f, getattr(obs, f) + scale(v))
                 for k, v in (e.get("details") or {}).items():
                     if isinstance(v, (int, float)) and not isinstance(v, bool):
-                        obs.details[k] = obs.details.get(k, 0) + v
+                        obs.details[k] = obs.details.get(k, 0) + scale(v)
             n += 1
         return n

@@ -22,7 +22,12 @@ package makes *many concurrent* pipelines cheap by sharing work across them:
                    sharing: concurrent sessions over the same corpus trigger
                    exactly one embed+build (exact or IVF); streaming corpora
                    use versioned keys (``get_or_update``) so an append
-                   embeds/indexes only the delta rows.
+                   embeds/indexes only the delta rows;
+  * ``matview``  — :class:`MatViewRegistry`, multi-query subplan sharing:
+                   concurrent sessions whose plans contain the same
+                   fingerprinted subtree (normalized predicate + corpus
+                   version) latch exactly one computation and serve the rest
+                   from the materialization (``Gateway(matview=True)``).
 
 Streaming corpora (``repro.stream.CorpusTable``) plug in through
 ``Gateway.subscribe(pipeline)``: a continuous query re-executed on every
@@ -38,6 +43,7 @@ from repro.serve.dispatch import (DispatchedEmbedder, DispatchedModel,
                                   DispatchError, MicroBatchDispatcher)
 from repro.serve.gateway import AdmissionError, Gateway
 from repro.serve.index_registry import IndexRegistry
+from repro.serve.matview import MatViewRegistry, plan_fingerprint
 from repro.serve.metrics import GatewayMetrics
 from repro.serve.session import (ServeSession, SessionCancelled,
                                  SessionDeadlineExceeded)
@@ -46,6 +52,7 @@ from repro.serve.store import SharedSemanticCache
 __all__ = [
     "AdmissionError", "DispatchError", "DispatchedEmbedder",
     "DispatchedModel", "Gateway", "GatewayMetrics", "IndexRegistry",
-    "MicroBatchDispatcher", "ServeSession", "SessionCancelled",
-    "SessionDeadlineExceeded", "SharedSemanticCache",
+    "MatViewRegistry", "MicroBatchDispatcher", "ServeSession",
+    "SessionCancelled", "SessionDeadlineExceeded", "SharedSemanticCache",
+    "plan_fingerprint",
 ]

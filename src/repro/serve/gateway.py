@@ -33,6 +33,7 @@ into the right ``session_scope``, and per-session fragment counts feed
 """
 from __future__ import annotations
 
+import dataclasses
 import threading
 import time
 import uuid
@@ -40,6 +41,7 @@ from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 
 from repro.core import accounting
+from repro.core.plan.adaptive import AdaptivePlanExecutor, AdaptivePolicy
 from repro.core.plan.cache import BatchedModelCache
 from repro.obs import StatsStore
 from repro.obs import trace as _trace
@@ -49,6 +51,7 @@ from repro.core.plan.optimize import PlanOptimizer
 from repro.serve.dispatch import (DispatchedEmbedder, DispatchedModel,
                                   MicroBatchDispatcher)
 from repro.serve.index_registry import IndexRegistry
+from repro.serve.matview import MatViewRegistry
 from repro.serve.metrics import GatewayMetrics
 from repro.serve.session import (CANCELLED, DONE, EXPIRED, FAILED, RUNNING,
                                  ServeSession, SessionCancelled,
@@ -79,7 +82,12 @@ class Gateway:
                  n_partitions: int | None = None,
                  fragment_workers: int = 4,
                  trace: "bool | _trace.Tracer" = False,
-                 stats_store: StatsStore | None = None):
+                 stats_store: StatsStore | None = None,
+                 stats_decay: float = 1.0,
+                 stats_load_discount: float = 1.0,
+                 adaptive: "bool | AdaptivePolicy" = False,
+                 matview: "bool | MatViewRegistry" = False,
+                 matview_capacity: int = 64):
         self.session = session
         # trace=True builds a gateway-lifetime tracer (or pass your own);
         # spans from every layer — session, plan stage, operator, fragment,
@@ -94,7 +102,23 @@ class Gateway:
         self._stats_path = f"{persist_path}.stats.json" if persist_path \
             else None
         self.stats_store = stats_store if stats_store is not None \
-            else StatsStore(self._stats_path)
+            else StatsStore(self._stats_path, decay=stats_decay,
+                            load_discount=stats_load_discount)
+        # adaptive=True (or a policy) runs sessions on AdaptivePlanExecutor:
+        # mid-query filter re-ranking, retrieval switching, fragment resizing
+        # from observed cardinalities — record-identical by the strict-mode
+        # contract (core.plan.adaptive)
+        if isinstance(adaptive, AdaptivePolicy):
+            self._adaptive_policy: AdaptivePolicy | None = adaptive
+        else:
+            self._adaptive_policy = AdaptivePolicy() if adaptive else None
+        # matview=True (or a registry) shares materialized subplan results
+        # across concurrent sessions by plan fingerprint
+        if isinstance(matview, MatViewRegistry):
+            self.matviews: MatViewRegistry | None = matview
+        else:
+            self.matviews = MatViewRegistry(capacity=matview_capacity) \
+                if matview else None
         self.store = store if store is not None else SharedSemanticCache(
             capacity=cache_capacity, ttl_s=cache_ttl_s,
             persist_path=persist_path)
@@ -268,13 +292,18 @@ class Gateway:
         exec_kw = {k: self.optimizer_kw[k]
                    for k in ("recall_target", "index_min_corpus")
                    if k in self.optimizer_kw}
-        executor = PartitionedExecutor(
+        if self._adaptive_policy is not None:
+            exec_cls = AdaptivePlanExecutor
+            exec_kw["policy"] = self._adaptive_policy
+        else:
+            exec_cls = PartitionedExecutor
+        executor = exec_cls(
             self.session, stats_log=sess.stats_log, oracle=oracle,
             proxy=proxy, embedder=embedder,
             stage_hook=lambda node: sess.check(),
             index_registry=self.index_registry,
             fragment_pool=self._fragment_pool,
-            stats_store=self.stats_store, **exec_kw)
+            stats_store=self.stats_store, matviews=self.matviews, **exec_kw)
         try:
             # the tracer (when on) wraps the whole session in one root span;
             # fragment/dispatcher threads parent into it via the captured
@@ -293,7 +322,13 @@ class Gateway:
                     optimizer = PlanOptimizer(
                         self.session, oracle=oracle, proxy=proxy,
                         seed=self.session.seed,
-                        **{"index_shared": True, **self.optimizer_kw})
+                        **{"index_shared": True,
+                           "stats_store": self.stats_store,
+                           **self.optimizer_kw})
+                    if self._adaptive_policy is not None:
+                        # re-plans reuse the planner's own knobs (partition
+                        # counts, quantization policy)
+                        executor.optimizer = optimizer
                     with accounting.track("plan_optimize") as opt_st:
                         plan = optimizer.optimize(plan)
                     opt_st.details.update(
@@ -313,6 +348,10 @@ class Gateway:
             # ran single-partition)
             self.metrics.on_fragments(executor.fragments_run,
                                       executor.partitioned_ops)
+            replans = getattr(executor, "replans", ())
+            if replans:
+                self.metrics.on_replans(len(replans))
+                sess.replans = [dataclasses.asdict(e) for e in replans]
 
     # -- lifecycle ---------------------------------------------------------
     def wait_all(self, timeout: float | None = None) -> bool:
@@ -332,6 +371,8 @@ class Gateway:
                                      dispatcher=self.dispatcher,
                                      tracer=self.tracer)
         snap.update(self.index_registry.metrics())
+        if self.matviews is not None:
+            snap.update(self.matviews.metrics())
         return snap
 
     # -- trace / stats export ---------------------------------------------

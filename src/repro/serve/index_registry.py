@@ -27,6 +27,11 @@ evicted key's embedder pin AND any stale build latch (waiters re-race
 instead of deadlocking), so a long-lived gateway doesn't leak pinned
 embedders.  ``metrics()`` reports builds / shared hits / delta updates /
 evictions for benchmarks and the gateway snapshot.
+
+``repro.serve.matview`` applies the same win-or-wait latch protocol one
+level up — to whole materialized subplans keyed by plan fingerprint — so
+the sharing ladder is prompt (dispatcher) -> index build (here) -> subplan
+(MatViewRegistry).
 """
 from __future__ import annotations
 

@@ -86,6 +86,7 @@ class GatewayMetrics:
         self.emission_errors = 0
         self.fragments_run = 0    # partition fragments executed
         self.partitioned_ops = 0  # operators that ran fragment-parallel
+        self.replans = 0          # mid-query re-plan decisions (adaptive)
         # O(1)-memory, unbiased over the gateway's whole life (see module
         # docstring); field name kept from the deque era
         self.latencies = LatencyHistogram()
@@ -107,6 +108,13 @@ class GatewayMetrics:
             self.emissions += 1
             if error:
                 self.emission_errors += 1
+
+    def on_replans(self, n: int) -> None:
+        """Per-session re-plan roll-up (adaptive executor decisions)."""
+        if not n:
+            return
+        with self._lock:
+            self.replans += n
 
     def on_fragments(self, n_fragments: int, n_ops: int) -> None:
         """Per-session partition-fragment roll-up (reported by the worker
@@ -146,6 +154,7 @@ class GatewayMetrics:
                 "emission_errors": self.emission_errors,
                 "fragments_run": self.fragments_run,
                 "partitioned_ops": self.partitioned_ops,
+                "replans": self.replans,
                 "elapsed_s": round(elapsed, 4),
                 "throughput_rps": round(self.completed / elapsed, 4),
                 "p50_latency_s": round(lat.percentile(50), 4)

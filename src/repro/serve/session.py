@@ -48,6 +48,8 @@ class ServeSession:
     error: BaseException | None = None
     stats: OpStats | None = None          # per-session accounting roll-up
     stats_log: list = dataclasses.field(default_factory=list)
+    # mid-query re-plan decisions (adaptive executor), as plain dicts
+    replans: list = dataclasses.field(default_factory=list)
     started_at: float | None = None
     finished_at: float | None = None
     _cancel: threading.Event = dataclasses.field(default_factory=threading.Event)
@@ -101,6 +103,8 @@ class ServeSession:
         out = {"sid": self.sid, "tenant": self.tenant, "status": self.status,
                "rows": len(self.records) if self.records is not None else None,
                "latency_s": self.latency_s}
+        if self.replans:
+            out["replans"] = len(self.replans)
         if self.stats is not None:
             out["stats"] = self.stats.as_dict()
         return out

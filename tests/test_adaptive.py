@@ -1,0 +1,396 @@
+"""Adaptive re-optimization + multi-query plan sharing (PR 8).
+
+Three timescales of feedback are covered here:
+
+  * cross-session — StatsStore EWMA decay / discounted load, feedback-
+    informed initial costing (``sel_obs`` in explain output);
+  * mid-query — the AdaptivePlanExecutor's greedy filter re-ranking,
+    retrieval switching, and fragment resizing, each asserted *record-
+    identical* to the static plan (the strict equivalence contract) while
+    visibly cutting the oracle bill on drifting workloads;
+  * multi-query — the MatViewRegistry materializing a shared subplan
+    exactly once across concurrent gateway sessions.
+
+The drifting workloads put filter chains above a ``sem_map`` on purpose:
+a non-Scan base is unprobeable at plan time (rule 3 needs base records),
+so the static plan keeps the as-written order and only the feedback loop —
+warm store at plan time, live blending mid-query — can recover the cheap
+order.
+"""
+import pytest
+
+from repro.core.backends import synth
+from repro.core.frame import SemFrame, Session
+from repro.core.plan import AdaptivePlanExecutor, PartitionedExecutor
+from repro.obs.analyze import explain_analyze
+from repro.obs.stats_store import StatsStore
+from repro.serve import Gateway, MatViewRegistry, plan_fingerprint
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _session(world, *, with_proxy=False, sample_size=60):
+    return Session(
+        oracle=synth.SimulatedModel(world, "oracle"),
+        proxy=synth.SimulatedModel(world, "proxy") if with_proxy else None,
+        embedder=synth.SimulatedEmbedder(world), sample_size=sample_size)
+
+
+def _frame(records, world, *, log=None, **kw):
+    return SemFrame(records, _session(world, **kw), log)
+
+
+def _calls(log, kind="oracle_calls"):
+    return sum(st.get(kind, 0) for st in log)
+
+
+def _drift_world(n=80, seed=7):
+    """Claims corpus with a broad (~0.9) and a narrow (~0.05) predicate:
+    the as-written order (broad first) is the expensive one."""
+    records, world, *_ = synth.make_filter_world(n, seed=seed)
+    synth.add_phrase_predicate(world, records, "is broad", 0.9, seed=seed)
+    synth.add_phrase_predicate(world, records, "is narrow", 0.05, seed=seed)
+    return records, world
+
+
+def _chain(frame):
+    return (frame.lazy()
+            .sem_map("a short note on {claim}", out_column="note")
+            .sem_filter("the {claim} is broad")
+            .sem_filter("the {claim} is narrow"))
+
+
+# ---------------------------------------------------------------------------
+# stats store: EWMA decay + discounted load
+# ---------------------------------------------------------------------------
+
+
+def test_stats_store_ewma_decay_weights_recent():
+    s = StatsStore(decay=0.5)
+    s.observe("filter", "fp", rows_in=100, rows_out=10)
+    s.observe("filter", "fp", rows_in=100, rows_out=90)
+    obs = s.get("filter", "fp")
+    # runs is the EWMA weight mass, not a plain count
+    assert obs.runs == pytest.approx(1.5)
+    # additive semantics would average to 0.5; the EWMA leans recent
+    assert obs.selectivity == pytest.approx(95 / 150)
+    assert obs.selectivity > 0.6
+
+
+def test_stats_store_load_discount_downweights_history(tmp_path):
+    a = StatsStore()
+    for _ in range(4):
+        a.observe("filter", "fp", rows_in=50, rows_out=10,
+                  stats={"oracle_calls": 50})
+    path = a.save(str(tmp_path / "stats.json"))
+
+    b = StatsStore()
+    b.load(path, discount=0.5)
+    obs = b.get("filter", "fp")
+    assert obs.runs == pytest.approx(2.0)
+    assert obs.oracle_calls == pytest.approx(100.0)
+    # ratios survive the discount: it shrinks weight, not the estimate
+    assert obs.selectivity == pytest.approx(0.2)
+
+    c = StatsStore()
+    c.load(path)                      # identity merge keeps additive ints
+    assert c.get("filter", "fp").runs == 4
+
+
+# ---------------------------------------------------------------------------
+# equivalence: adaptive == static
+# ---------------------------------------------------------------------------
+
+
+def test_cold_adaptive_matches_static_records_and_bill():
+    """With an empty store every live blend equals the plan-time prior, so
+    the greedy chain replays the static order exactly: same records, same
+    oracle bill."""
+    records, world = _drift_world()
+    slog, alog = [], []
+    static = _chain(_frame(records, world, log=slog)).collect()
+    adaptive = _chain(_frame(records, world, log=alog)).collect(adaptive=True)
+    assert adaptive.records == static.records
+    assert _calls(alog) == _calls(slog)
+
+
+def test_adaptive_matches_static_across_operators():
+    """Operator zoo: gold filter + join, cascade filter (tau calibration),
+    topk + agg — adaptive runs must be record-identical, cascades also
+    bill-identical (same tau thresholds imply same oracle region)."""
+    left, right, world, *_ = synth.make_join_world(24, 8, seed=21)
+    synth.add_phrase_predicate(world, left, "is checkable", 0.5, seed=21)
+
+    def joined(f):
+        return (f.lazy().sem_filter("the {abstract} is checkable")
+                .sem_join(right, "the {abstract} reports the {reaction:right}"))
+    s = joined(_frame(left, world)).collect()
+    a = joined(_frame(left, world)).collect(adaptive=True)
+    assert a.records == s.records
+
+    def simjoined(f):
+        return f.lazy().sem_sim_join(right, "abstract", "reaction", k=2)
+    ss = simjoined(_frame(left, world)).collect()
+    sa = simjoined(_frame(left, world)).collect(adaptive=True)
+    assert sa.records == ss.records
+
+    records, cworld, *_ = synth.make_filter_world(90, seed=22)
+    synth.add_phrase_predicate(cworld, records, "is checkable", 0.4, seed=22)
+    clog_s, clog_a = [], []
+    cs = (_frame(records, cworld, with_proxy=True, log=clog_s).lazy()
+          .sem_filter("the {claim} is checkable",
+                      recall_target=0.9, precision_target=0.85).collect())
+    ca = (_frame(records, cworld, with_proxy=True, log=clog_a).lazy()
+          .sem_filter("the {claim} is checkable",
+                      recall_target=0.9, precision_target=0.85)
+          .collect(adaptive=True))
+    assert ca.records == cs.records
+    st_s = next(st for st in clog_s if st["operator"] == "sem_filter")
+    st_a = next(st for st in clog_a if st["operator"] == "sem_filter")
+    assert st_a["tau_plus"] == st_s["tau_plus"]
+    assert st_a["tau_minus"] == st_s["tau_minus"]
+    assert st_a["oracle_calls"] == st_s["oracle_calls"]
+    assert st_a["proxy_calls"] == st_s["proxy_calls"]
+
+    rrecords, rworld, *_ = synth.make_rank_world(32, compare_noise=0.0,
+                                                 seed=23)
+
+    def ranked(f):
+        return (f.lazy().sem_topk("most accurate {abstract}", k=8)
+                .sem_map("a group for {abstract}", out_column="bucket")
+                .sem_agg("summarize: {abstract}", group_by="bucket",
+                         fanout=4))
+    rsess = Session(oracle=synth.SimulatedModel(rworld, "oracle"),
+                    embedder=synth.SimulatedEmbedder(rworld), sample_size=30)
+    rs = ranked(SemFrame(rrecords, rsess)).collect()
+    ra = ranked(SemFrame(rrecords, Session(
+        oracle=synth.SimulatedModel(rworld, "oracle"),
+        embedder=synth.SimulatedEmbedder(rworld),
+        sample_size=30))).collect(adaptive=True)
+    assert ra.records == rs.records
+
+
+def test_cascade_is_an_immovable_barrier():
+    """A gold filter may never jump a cascade: the cascade's tau calibrates
+    on its input set.  Even when a warm store makes the trailing narrow
+    filter look cheapest, execution order — and therefore the cascade's
+    input set, thresholds, and the full oracle+proxy bill — must match the
+    static plan."""
+    records, world = _drift_world(n=60, seed=9)
+    synth.add_phrase_predicate(world, records, "is plausible", 0.5, seed=9)
+
+    def chain(frame):
+        return (frame.lazy()
+                .sem_map("a short note on {claim}", out_column="note")
+                .sem_filter("the {claim} is broad")
+                .sem_filter("the {claim} is plausible",
+                            recall_target=0.9, precision_target=0.85)
+                .sem_filter("the {claim} is narrow"))
+
+    store = StatsStore()
+    chain(_frame(records, world, with_proxy=True)).collect(stats_store=store)
+
+    slog, alog = [], []
+    static = chain(_frame(records, world, with_proxy=True, log=slog)).collect()
+    f = chain(_frame(records, world, with_proxy=True, log=alog))
+    adaptive = f.collect(adaptive=True, stats_store=store)
+    assert adaptive.records == static.records
+    assert _calls(alog) == _calls(slog)
+    assert _calls(alog, "proxy_calls") == _calls(slog, "proxy_calls")
+    ex = f._exec_pair[2]
+    assert not any(e.kind == "reorder_filters" for e in ex.replans)
+
+
+# ---------------------------------------------------------------------------
+# mid-query re-optimization: the three re-plan kinds
+# ---------------------------------------------------------------------------
+
+
+def test_warm_store_reorders_chain_and_cuts_bill():
+    """The drift workload: broad(0.9) then narrow(0.05) as written.  After
+    one observed run the adaptive executor promotes the narrow filter —
+    record-identical, and the oracle bill drops from ~1.9N to ~1.05N."""
+    records, world = _drift_world()
+    store = StatsStore()
+    warm = _chain(_frame(records, world)).collect(stats_store=store)
+
+    slog, alog = [], []
+    static = _chain(_frame(records, world, log=slog)).collect()
+    f = _chain(_frame(records, world, log=alog))
+    adaptive = f.collect(adaptive=True, stats_store=store)
+
+    assert adaptive.records == static.records == warm.records
+    assert _calls(alog) < 0.8 * _calls(slog)
+    ex = f._exec_pair[2]
+    assert isinstance(ex, AdaptivePlanExecutor)
+    assert any(e.kind == "reorder_filters" for e in ex.replans)
+
+
+def test_retrieval_switch_on_observed_corpus_is_record_identical():
+    """Rule 5 prices the search corpus at the default filter selectivity
+    (the chain sits above a map, so nothing is probeable) and plans IVF;
+    the filter actually keeps ~4% of rows, so the adaptive executor
+    re-chooses exact retrieval mid-query.  Records must match the static
+    run (k >= surviving corpus puts IVF in its degenerate full-scan
+    regime, so the planned backend is exact-equivalent here)."""
+    records, world, *_ = synth.make_filter_world(400, seed=27)
+    synth.add_phrase_predicate(world, records, "is narrow", 0.04, seed=27)
+
+    def pipe(frame):
+        return (frame.lazy()
+                .sem_map("a short note on {claim}", out_column="note")
+                .sem_filter("the {claim} is narrow")
+                .sem_search("claim", "claim text 3", k=30))
+
+    kw = dict(index_min_corpus=100, index_shared=True)
+    f_s = pipe(_frame(records, world))
+    static = f_s.collect(**kw)
+    assert any(r.rule == "choose_retrieval" and "IVF" in r.detail
+               for r in f_s.last_rewrites)
+
+    f_a = pipe(_frame(records, world))
+    adaptive = f_a.collect(adaptive=True, **kw)
+    assert adaptive.records == static.records
+    ex = f_a._exec_pair[2]
+    switches = [e for e in ex.replans if e.kind == "switch_retrieval"]
+    assert switches and "-> exact" in switches[0].reason
+
+
+def test_fragment_resize_on_observed_rows():
+    """Rule 6 plans 4 fragments for the second filter from the estimated
+    ~100 input rows; the narrow filter actually leaves ~10, so the adaptive
+    executor resizes to a single fragment — identical records (partitioned
+    operators are output-identical by construction)."""
+    records, world = _drift_world(n=200, seed=5)
+
+    def pipe(frame):
+        return (frame.lazy()
+                .sem_map("a short note on {claim}", out_column="note")
+                .sem_filter("the {claim} is narrow")
+                .sem_filter("the {claim} is broad"))
+
+    static = pipe(_frame(records, world)).collect(n_partitions=4)
+    f = pipe(_frame(records, world))
+    adaptive = f.collect(adaptive=True, n_partitions=4)
+    assert adaptive.records == static.records
+    ex = f._exec_pair[2]
+    assert any(e.kind == "resize_fragments" for e in ex.replans)
+
+
+# ---------------------------------------------------------------------------
+# explain surfaces
+# ---------------------------------------------------------------------------
+
+
+def test_explain_plan_prints_observed_selectivity():
+    records, world = _drift_world(n=40, seed=11)
+    store = StatsStore()
+    _chain(_frame(records, world)).collect(stats_store=store)
+    cold = _chain(_frame(records, world)).explain()
+    warm = _chain(_frame(records, world)).explain(stats_store=store)
+    assert "sel_obs=" not in cold
+    assert "sel_obs=" in warm
+
+
+def test_explain_analyze_marks_replanned_nodes():
+    """Live (executor-only) feedback: the store goes to explain_analyze's
+    named parameter, so plan-time costing stays cold and the promotion
+    happens mid-query — the promoted node carries the >> replanned marker."""
+    records, world = _drift_world(n=60, seed=13)
+    synth.add_phrase_predicate(world, records, "is typical", 0.5, seed=13)
+
+    def chain3(frame):
+        return (frame.lazy()
+                .sem_map("a short note on {claim}", out_column="note")
+                .sem_filter("the {claim} is broad")
+                .sem_filter("the {claim} is narrow")
+                .sem_filter("the {claim} is typical"))
+
+    store = StatsStore()
+    rep1 = explain_analyze(chain3(_frame(records, world)), stats_store=store)
+    rep2 = explain_analyze(chain3(_frame(records, world)), stats_store=store,
+                           adaptive=True)
+    assert rep2.records == rep1.records
+    text = rep2.render()
+    assert ">> replanned:" in text
+    assert "reorder_filters" in text
+
+
+def test_repro_adaptive_env_flips_default(monkeypatch):
+    records, world = _drift_world(n=8, seed=2)
+    monkeypatch.setenv("REPRO_ADAPTIVE", "1")
+    f = _frame(records, world).lazy().sem_filter("the {claim} is broad")
+    f.collect()
+    assert isinstance(f._exec_pair[2], AdaptivePlanExecutor)
+    monkeypatch.setenv("REPRO_ADAPTIVE", "0")
+    g = _frame(records, world).lazy().sem_filter("the {claim} is broad")
+    g.collect()
+    assert type(g._exec_pair[2]) is PartitionedExecutor
+
+
+# ---------------------------------------------------------------------------
+# multi-query: materialized subplan sharing
+# ---------------------------------------------------------------------------
+
+
+def test_plan_fingerprint_identity_and_registry_unit():
+    records, world = _drift_world(n=10, seed=3)
+    f1 = _frame(records, world).lazy().sem_filter("the {claim} is broad")
+    f2 = _frame(records, world).lazy().sem_filter("the {claim} is broad")
+    f3 = _frame(records, world).lazy().sem_filter("the {claim} is narrow")
+    fp1, fp2, fp3 = (plan_fingerprint(f.plan) for f in (f1, f2, f3))
+    assert fp1 == fp2
+    assert fp1 != fp3
+
+    reg = MatViewRegistry(capacity=4)
+    # a bare scan is never worth materializing
+    assert reg.key_for(f1.plan.child) is None
+    assert reg.key_for(f1.plan) == fp1
+
+    rows1, hit1 = reg.get_or_compute(fp1, lambda: [{"a": 1}])
+    rows2, hit2 = reg.get_or_compute(
+        fp1, lambda: (_ for _ in ()).throw(AssertionError("recomputed")))
+    assert (hit1, hit2) == (False, True)
+    assert rows1 == rows2 == [{"a": 1}]
+    assert rows1 is not rows2          # callers never alias the stored view
+    m = reg.metrics()
+    assert m["matview_builds"] == 1
+    assert m["matview_hits"] == 1
+
+
+def test_gateway_matview_materializes_shared_subplan_once():
+    """N concurrent sessions over the same fingerprinted subplan: exactly
+    one computation, the rest served from the view."""
+    records, world = _drift_world(n=40, seed=17)
+    sess = _session(world, sample_size=30)
+    frames = [SemFrame(records, sess).lazy()
+              .sem_filter("the {claim} is broad") for _ in range(6)]
+    with Gateway(sess, max_inflight=4, window_s=0.02, matview=True) as gw:
+        handles = [gw.submit(f) for f in frames]
+        results = [h.result(timeout=60) for h in handles]
+        snap = gw.snapshot()
+    assert snap["matview_builds"] == 1
+    assert snap["matview_hits"] == 5
+    assert all(r == results[0] for r in results)
+    assert results[0] is not results[1]
+
+
+def test_gateway_adaptive_counts_replans():
+    records, world = _drift_world(n=60, seed=4)
+    sess = _session(world, sample_size=30)
+
+    def pipe():
+        return (SemFrame(records, sess).lazy()
+                .sem_map("a short note on {claim}", out_column="note")
+                .sem_filter("the {claim} is broad")
+                .sem_filter("the {claim} is narrow"))
+
+    with Gateway(sess, max_inflight=2, window_s=0.02, adaptive=True) as gw:
+        r1 = gw.submit(pipe()).result(timeout=60)
+        r2 = gw.submit(pipe()).result(timeout=60)   # warm store: reorders
+        snap = gw.snapshot()
+    assert r1 == r2
+    assert snap["replans"] >= 1
