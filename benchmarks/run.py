@@ -8,10 +8,10 @@ import argparse
 import sys
 import time
 
-from benchmarks import (adapt_bench, engine_bench, fig6_filter_tradeoff,
-                        fig8_groupby, fig9_guarantees, index_bench,
-                        kernels_bench, pipeline_bench, quant_bench,
-                        serve_bench, shard_bench, stream_bench,
+from benchmarks import (adapt_bench, audit_bench, engine_bench,
+                        fig6_filter_tradeoff, fig8_groupby, fig9_guarantees,
+                        index_bench, kernels_bench, pipeline_bench,
+                        quant_bench, serve_bench, shard_bench, stream_bench,
                         table2_factcheck, table3_biodex, table5_join_plans,
                         table6_7_ranking, trace_bench)
 
@@ -33,6 +33,7 @@ MODULES = {
     "kernels": kernels_bench,
     "trace": trace_bench,
     "adapt": adapt_bench,
+    "audit": audit_bench,
 }
 
 

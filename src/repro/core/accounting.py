@@ -43,11 +43,15 @@ class OpStats:
     embed_calls: int = 0
     compare_calls: int = 0
     generate_calls: int = 0
+    audit_calls: int = 0   # gold re-judgments by the GuaranteeAuditor — a
+                           # dedicated kind so query bills are bit-identical
+                           # with auditing on or off
     cache_hits: int = 0    # prompts served by BatchedModelCache, not a model
     wall_s: float = 0.0
     details: dict = dataclasses.field(default_factory=dict)
 
-    _KINDS = ("oracle", "proxy", "embed", "compare", "generate", "cache_hit")
+    _KINDS = ("oracle", "proxy", "embed", "compare", "generate", "audit",
+              "cache_hit")
 
     def add(self, kind: str, n: int) -> None:
         attr = "cache_hits" if kind == "cache_hit" else f"{kind}_calls"
@@ -65,7 +69,7 @@ class OpStats:
             "operator": self.operator, "oracle_calls": self.oracle_calls,
             "proxy_calls": self.proxy_calls, "embed_calls": self.embed_calls,
             "compare_calls": self.compare_calls, "generate_calls": self.generate_calls,
-            "cache_hits": self.cache_hits,
+            "audit_calls": self.audit_calls, "cache_hits": self.cache_hits,
             "lm_calls": self.lm_calls, "wall_s": round(self.wall_s, 4), **self.details,
         }
 
@@ -92,8 +96,10 @@ def record(kind: str, n: int) -> None:
 
 def capture() -> tuple:
     """Snapshot this thread's accounting context (operator + session stats
-    + trace context) for re-installation on a fragment worker thread."""
-    return (current(), current_session(), _trace.capture())
+    + trace context + active auditor) for re-installation on a fragment
+    worker thread."""
+    from repro.obs import audit as _audit
+    return (current(), current_session(), _trace.capture(), _audit.capture())
 
 
 @contextlib.contextmanager
@@ -101,11 +107,13 @@ def activate(ctx: tuple):
     """Install a captured context on the current thread (fragment workers);
     restores the thread's own context on exit, so pooled threads never leak
     one session's stats into the next."""
+    from repro.obs import audit as _audit
     prev = (current(), current_session())
     _ctx.stats, _ctx.session_stats = ctx[0], ctx[1]
     trace_ctx = ctx[2] if len(ctx) > 2 else (None, None)
+    auditor = ctx[3] if len(ctx) > 3 else None
     try:
-        with _trace.activate_ctx(trace_ctx):
+        with _trace.activate_ctx(trace_ctx), _audit.activate_ctx(auditor):
             yield
     finally:
         _ctx.stats, _ctx.session_stats = prev

@@ -45,7 +45,7 @@ class CountedModel:
     keep their per-kind breakdown columns."""
 
     def __init__(self, model, role: str):
-        assert role in ("oracle", "proxy")
+        assert role in ("oracle", "proxy", "audit")
         self._m = model
         self.role = role
 

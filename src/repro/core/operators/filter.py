@@ -14,6 +14,7 @@ import numpy as np
 from repro.core import accounting
 from repro.core.langex import as_langex
 from repro.core.optimizer import cascades
+from repro.obs import audit as _audit
 
 PREDICATE_INSTRUCTION = (
     "Claim: {claim}\nIs the claim true for this input? Answer <true> or <false>.\nAnswer:")
@@ -51,6 +52,10 @@ def sem_filter_cascade(records: list[dict], langex, oracle, proxy, *,
             np.asarray(scores, float), oracle_fn,
             recall_target=recall_target, precision_target=precision_target,
             delta=delta, sample_size=sample_size, seed=seed)
+        _audit.emit_cascade("Filter", lx.template, res,
+                            lambda idx: [prompts[i] for i in idx],
+                            recall_target=recall_target,
+                            precision_target=precision_target)
         st.details.update(tau_plus=res.tau_plus, tau_minus=res.tau_minus,
                           oracle_calls_cascade=res.oracle_calls,
                           auto_accepted=res.auto_accepted,

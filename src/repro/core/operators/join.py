@@ -20,6 +20,7 @@ from repro.core.operators.filter import predicate_prompt
 from repro.core.optimizer import cascades, stats
 from repro.index.quantile import quantile_calibrate
 from repro.index.vector_index import VectorIndex
+from repro.obs import audit as _audit
 
 PROJECT_INSTRUCTION = (
     "{rendered}\nPredict the most likely value of the missing right-hand "
@@ -120,6 +121,11 @@ def sem_join_cascade(left: list[dict], right: list[dict], langex, oracle,
             return passed
 
         res = cascades.execute_plan(chosen, oracle_fn)
+        _audit.emit_cascade(
+            "Join", lx.template, res,
+            lambda idx: _pair_prompts(
+                lx, left, right, [(int(i) // n2, int(i) % n2) for i in idx]),
+            recall_target=recall_target, precision_target=precision_target)
         st.details.update(plan=chosen.name, tau_plus=res.tau_plus, tau_minus=res.tau_minus,
                           plan_costs={p.name: p.total_cost for p in plans},
                           oracle_calls_cascade=res.oracle_calls,

@@ -23,6 +23,9 @@ class CascadeResult:
     auto_accepted: int
     auto_rejected: int
     oracle_region: int
+    judged: np.ndarray | None = None  # bool [N] — rows decided by an oracle
+                                      # label (mid region); auto-decisions
+                                      # are ~judged (the audit population)
 
 
 def run_cascade(proxy_scores: np.ndarray,
@@ -77,7 +80,7 @@ def run_cascade(proxy_scores: np.ndarray,
         passed=passed, tau_plus=float(tau_plus), tau_minus=float(tau_minus),
         oracle_calls=len(uniq) + len(need), sample_size=s,
         auto_accepted=int(auto.sum()), auto_rejected=int((a < tau_minus).sum()),
-        oracle_region=int(mid.sum()),
+        oracle_region=int(mid.sum()), judged=mid.copy(),
     )
 
 
@@ -133,4 +136,4 @@ def execute_plan(plan: PlanEstimate, oracle_fn: Callable[[np.ndarray], np.ndarra
                          oracle_calls=len(known) + len(need), sample_size=len(plan.sample.idx),
                          auto_accepted=int(auto.sum()),
                          auto_rejected=int((a < plan.tau_minus).sum()),
-                         oracle_region=int(mid.sum()))
+                         oracle_region=int(mid.sum()), judged=mid)

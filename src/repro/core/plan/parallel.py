@@ -36,6 +36,7 @@ import numpy as np
 
 from repro.core import accounting
 from repro.core.langex import as_langex
+from repro.obs import audit as _audit
 from repro.obs import trace as _trace
 from repro.core.operators.agg import _agg_prompt
 from repro.core.operators.filter import predicate_prompt
@@ -262,6 +263,10 @@ def sem_filter_cascade_partitioned(records, langex, oracle, proxy, parts,
             scores, oracle_fn, recall_target=recall_target,
             precision_target=precision_target, delta=delta,
             sample_size=sample_size, seed=seed)
+        _audit.emit_cascade("Filter", lx.template, res,
+                            lambda idx: [prompts[i] for i in idx],
+                            recall_target=recall_target,
+                            precision_target=precision_target)
         st.details.update(tau_plus=res.tau_plus, tau_minus=res.tau_minus,
                           oracle_calls_cascade=res.oracle_calls,
                           auto_accepted=res.auto_accepted,

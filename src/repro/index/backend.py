@@ -56,6 +56,28 @@ DEFAULT_RERANK_FACTOR = 4    # quantized scan keeps rerank_factor*k
 MASKED_SCORE = -1e30
 
 
+def exact_topk(vectors: np.ndarray, queries: np.ndarray, k: int
+               ) -> tuple[np.ndarray, np.ndarray]:
+    """Brute-force exact top-k by unit-normalized inner product.
+
+    Shared gold reference for the guarantee auditor's sampled recall@k
+    re-scans (and anything else needing a small exact answer without
+    building a ``VectorIndex``).  Pure numpy: never billed, safe on the
+    audit worker thread.  -> (scores [nq, k], indices [nq, k]) descending.
+    """
+    v = np.atleast_2d(np.asarray(vectors, np.float32))
+    q = np.atleast_2d(np.asarray(queries, np.float32))
+    v = v / np.maximum(np.linalg.norm(v, axis=1, keepdims=True), 1e-9)
+    q = q / np.maximum(np.linalg.norm(q, axis=1, keepdims=True), 1e-9)
+    k = max(1, min(int(k), len(v)))
+    scores = q @ v.T                                  # [nq, nc]
+    part = np.argpartition(-scores, k - 1, axis=1)[:, :k]
+    rows = np.arange(len(q))[:, None]
+    order = np.argsort(-scores[rows, part], axis=1, kind="stable")
+    idx = part[rows, order]
+    return scores[rows, idx], idx
+
+
 def train_sample_size(n_corpus: int, n_clusters: int) -> int:
     """Quantizer training subsample (FAISS-style): k-means sees at most
     ``IVF_TRAIN_PER_CLUSTER`` points per centroid; the full corpus is only

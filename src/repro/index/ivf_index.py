@@ -54,6 +54,7 @@ from repro.index.backend import (DEFAULT_RERANK_FACTOR, MASKED_SCORE,
                                  nprobe_for_recall, train_sample_size)
 from repro.index.kmeans import kmeans
 from repro.index.quant import bytes_per_vector, quantize_rows, quantize_tiles
+from repro.obs import audit as _audit
 
 _LANE = 128        # pad L to the TPU lane width so MXU tiles stay aligned
 _BALANCE_FACTOR = 4  # cap cluster size at this multiple of the mean: every
@@ -424,6 +425,16 @@ class IVFIndex(RetrievalBackend):
             self.last_stats.update(
                 shards=int(shards),
                 scored_vectors_per_shard=int(per_shard.max()) + nq * nd)
+        # guarantee auditing: a budgeted sample of these queries gets an
+        # exact re-scan of the same snapshot (vectors is the under-lock
+        # reference; appends/retrain replace the arrays, never mutate them),
+        # estimating live recall@k against recall_target — covering the
+        # delta-buffer and int8 paths by construction
+        _audit.emit_search(self, q, out_s, out_i, k,
+                           vectors=vectors,
+                           n_cut=n_total if max_pos is None
+                           else min(n_total, max_pos),
+                           recall_target=self.recall_target)
         return out_s, out_i
 
     def _topk_unique(self, scores: np.ndarray, cand_ids: np.ndarray, k: int,

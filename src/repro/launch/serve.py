@@ -26,9 +26,11 @@ def _sim_session(n_records: int, seed: int):
     left, right, world, *_ = synth.make_join_world(n_records, 10, seed=seed)
     synth.add_phrase_predicate(world, left, "is checkable", 0.3, seed=seed)
     synth.add_phrase_predicate(world, left, "is in English", 0.85, seed=seed)
+    # proxy quality / sample size chosen so guaranteed cascades calibrate
+    # real auto-accept/reject regions (--audit then has decisions to sample)
     sess = Session(oracle=synth.SimulatedModel(world, "oracle"),
-                   proxy=synth.SimulatedModel(world, "proxy"),
-                   embedder=synth.SimulatedEmbedder(world), sample_size=40,
+                   proxy=synth.SimulatedModel(world, "proxy", alpha=2.5),
+                   embedder=synth.SimulatedEmbedder(world), sample_size=100,
                    seed=seed)
     return sess, left, right, SemFrame
 
@@ -63,6 +65,12 @@ def main() -> None:
     ap.add_argument("--deadline", type=float, default=None,
                     help="per-session deadline in seconds")
     ap.add_argument("--no-optimize", action="store_true")
+    ap.add_argument("--audit", action="store_true",
+                    help="enable online guarantee auditing (background gold "
+                         "re-judgments of sampled cascade decisions)")
+    ap.add_argument("--metrics-dump", type=str, default=None, metavar="PATH",
+                    help="write the Prometheus text exposition of all "
+                         "gateway/audit metrics to PATH before shutdown")
     ap.add_argument("--max-seq", type=int, default=256, help="engine backend")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -81,7 +89,8 @@ def main() -> None:
                  window_s=args.window_ms / 1e3, max_batch=args.max_batch,
                  cache_ttl_s=args.cache_ttl,
                  cache_capacity=args.cache_capacity,
-                 persist_path=args.persist)
+                 persist_path=args.persist,
+                 audit=True if args.audit else None)
 
     def submit_with_backpressure(pipeline, **kw):
         while True:
@@ -94,9 +103,12 @@ def main() -> None:
         sf = SemFrame(left, gw.session).lazy()
         if args.backend == "sim":
             # half the tenants share the checkable predicate — the
-            # cross-query sharing regime
+            # cross-query sharing regime; with --audit the filters run as
+            # guaranteed cascades so the auditor has decisions to sample
+            targets = ({"recall_target": 0.9, "precision_target": 0.9}
+                       if args.audit else {})
             sf = sf.sem_filter("the {abstract} is checkable" if i % 2 == 0
-                               else "the {abstract} is in English")
+                               else "the {abstract} is in English", **targets)
             return sf.sem_join(right,
                                "the {abstract} reports the {reaction:right}")
         return (sf.sem_map("one-line gist of {doc}", out_column="gist")
@@ -125,6 +137,13 @@ def main() -> None:
               f"{snap['dispatch']['requested_prompts']} requested)")
         print("[serve]", json.dumps({k: v for k, v in snap.items()
                                      if k in ("cache", "dispatch")}))
+        if gw.auditor is not None:
+            gw.auditor.drain()
+            print("[serve] audit", json.dumps(gw.auditor.report()))
+        if args.metrics_dump:
+            with open(args.metrics_dump, "w", encoding="utf-8") as fh:
+                fh.write(gw.metrics_text())
+            print(f"[serve] metrics exposition written to {args.metrics_dump}")
     finally:
         gw.close()
 

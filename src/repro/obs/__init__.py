@@ -12,7 +12,16 @@ __all__ = [
     "activate_ctx", "capture", "current_span", "current_tracer",
     "StatsStore", "ObservedStats", "predicate_fingerprint",
     "node_fingerprint", "explain_analyze", "ExplainAnalyzeReport",
+    "GuaranteeAuditor", "AuditPolicy", "AuditBudgeter", "ViolationEvent",
+    "wilson_interval", "clopper_pearson", "binomial_interval",
+    "MetricsRegistry", "parse_exposition",
 ]
+
+_AUDIT_NAMES = frozenset({
+    "GuaranteeAuditor", "AuditPolicy", "AuditBudgeter", "ViolationEvent",
+    "wilson_interval", "clopper_pearson", "binomial_interval",
+})
+_METRICS_NAMES = frozenset({"MetricsRegistry", "parse_exposition"})
 
 
 def __getattr__(name):
@@ -21,4 +30,12 @@ def __getattr__(name):
     if name in ("explain_analyze", "ExplainAnalyzeReport"):
         from repro.obs import analyze
         return getattr(analyze, name)
+    # audit pulls in accounting/backends lazily, metrics is standalone;
+    # both stay lazy here so `import repro.obs` keeps no heavy edges
+    if name in _AUDIT_NAMES:
+        from repro.obs import audit
+        return getattr(audit, name)
+    if name in _METRICS_NAMES:
+        from repro.obs import metrics
+        return getattr(metrics, name)
     raise AttributeError(name)

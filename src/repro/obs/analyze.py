@@ -19,8 +19,9 @@ from repro.core import accounting
 from repro.core.plan import nodes as N
 from repro.core.plan.execute import PlanExecutor
 from repro.core.plan.optimize import predicted_node_metrics
+from repro.obs import audit as _audit
 from repro.obs import trace as _trace
-from repro.obs.stats_store import StatsStore
+from repro.obs.stats_store import StatsStore, node_fingerprint
 from repro.obs.trace import Span, Tracer
 
 _OBS_COUNTERS = ("oracle_calls", "proxy_calls", "embed_calls", "cache_hits",
@@ -35,6 +36,8 @@ class NodeReport:
     observed: dict | None          # None when the node never ran directly
     drift: list[str] = dataclasses.field(default_factory=list)
     replanned: str | None = None   # adaptive executor's mid-query decision
+    audit: dict | None = None      # GuaranteeAuditor CI estimate for this
+                                   # node's predicate fingerprint
 
     def render(self) -> str:
         pad = "  " * self.depth
@@ -54,6 +57,19 @@ class NodeReport:
         cols.append(f"wall {obs['wall_s'] * 1e3:.1f}ms")
         if obs.get("scanned_bytes"):
             cols.append(f"bytes {obs['scanned_bytes']}")
+        if obs.get("tau_plus") is not None:
+            cols.append(f"tau {obs['tau_plus']:.2f}/{obs['tau_minus']:.2f}")
+        if self.audit is not None:
+            # the audited guarantee next to the calibrated thresholds: CI
+            # bounds on live precision/recall from gold re-judgments
+            for kind, tag in (("precision", "P"), ("recall", "R")):
+                ci = self.audit.get(kind)
+                if ci is not None:
+                    cols.append(f"audit {tag}~{ci['point']:.2f}"
+                                f"[{ci['lo']:.2f},{ci['hi']:.2f}] "
+                                f"n={ci['n']}")
+            if self.audit.get("violations"):
+                cols.append(f"violations={self.audit['violations']}")
         line += "  (" + ", ".join(cols) + ")"
         if self.drift:
             line += "  !! drift: " + ", ".join(self.drift)
@@ -95,6 +111,7 @@ def _observed_for(sp: Span, children: dict) -> dict:
     attrs already include nested roll-ups via ``accounting.track``), wall
     minus the time spent in child plan stages."""
     agg = dict.fromkeys(_OBS_COUNTERS, 0)
+    taus: dict = {}
     child_stage_wall = 0.0
     stack = list(children.get(sp.span_id, ()))
     while stack:
@@ -107,12 +124,18 @@ def _observed_for(sp: Span, children: dict) -> dict:
                 v = c.attrs.get(k, 0)
                 if isinstance(v, (int, float)) and not isinstance(v, bool):
                     agg[k] += int(v)
+            # calibrated cascade thresholds land on the operator span via
+            # accounting.track's detail flattening
+            for k in ("tau_plus", "tau_minus"):
+                if k not in taus and isinstance(c.attrs.get(k), float):
+                    taus[k] = c.attrs[k]
             continue  # roll-ups make descending double-count
         stack.extend(children.get(c.span_id, ()))
     rows_in = sp.attrs.get("rows_in")
     rows_out = sp.attrs.get("rows_out", 0)
     return {
         **agg,
+        **taus,
         "rows_in": rows_in,
         "rows_out": rows_out,
         "selectivity": (rows_out / rows_in if rows_in else None),
@@ -122,7 +145,7 @@ def _observed_for(sp: Span, children: dict) -> dict:
 
 
 def _walk(node: N.LogicalNode, depth: int, by_node: dict, children: dict,
-          tolerance: float, out: list) -> None:
+          tolerance: float, out: list, auditor=None) -> None:
     pred = predicted_node_metrics(node)
     sp = by_node.get(id(node))
     observed = _observed_for(sp, children) if sp is not None else None
@@ -137,14 +160,18 @@ def _walk(node: N.LogicalNode, depth: int, by_node: dict, children: dict,
             if r > 1 + tolerance:
                 drift.append(f"oracle {r:.1f}x")
     replanned = sp.attrs.get("replanned") if sp is not None else None
-    out.append(NodeReport(node, depth, pred, observed, drift, replanned))
+    audit = auditor.report_for(node_fingerprint(node)) \
+        if auditor is not None else None
+    out.append(NodeReport(node, depth, pred, observed, drift, replanned,
+                          audit))
     for c in node.children():
-        _walk(c, depth + 1, by_node, children, tolerance, out)
+        _walk(c, depth + 1, by_node, children, tolerance, out, auditor)
 
 
 def explain_analyze(frame, *, optimize: bool = True, tolerance: float = 0.5,
                     tracer: Tracer | None = None,
                     stats_store: StatsStore | None = None,
+                    auditor=None,
                     **opt_kw) -> ExplainAnalyzeReport:
     """Run a ``LazySemFrame`` plan traced, and return a report comparing the
     cost model's per-node predictions with the observed execution.
@@ -152,6 +179,11 @@ def explain_analyze(frame, *, optimize: bool = True, tolerance: float = 0.5,
     The frame's cached (optimizer, executor) pair is reused, so an
     ``explain()`` or earlier ``collect()`` shares probe labels and the
     batched cache with this run — same contract as ``collect``.
+
+    With ``auditor=`` (a ``GuaranteeAuditor``) the run executes under that
+    auditor's sampling hooks, the queue is drained before reporting, and
+    each node shows the audited precision/recall CI for its predicate
+    fingerprint next to the calibrated thresholds.
     """
     tracer = tracer if tracer is not None else Tracer()
     stats_store = stats_store if stats_store is not None else StatsStore()
@@ -162,7 +194,7 @@ def explain_analyze(frame, *, optimize: bool = True, tolerance: float = 0.5,
         executor = PlanExecutor(frame.session, stats_log=frame.stats_log)
     prev_store, executor.stats_store = executor.stats_store, stats_store
     try:
-        with _trace.activate(tracer):
+        with _trace.activate(tracer), _audit.activate_ctx(auditor):
             if optimizer is not None:
                 with _trace.span("explain_analyze", kind="session"):
                     with accounting.track("plan_optimize") as st:
@@ -178,11 +210,14 @@ def explain_analyze(frame, *, optimize: bool = True, tolerance: float = 0.5,
                     records = executor.run(plan)
     finally:
         executor.stats_store = prev_store
+    if auditor is not None:
+        auditor.drain()   # settle queued gold re-judgments before reporting
     by_node = {}
     for sp in tracer.spans(kind="plan_stage"):
         by_node.setdefault(sp.attrs.get("node_id"), sp)
     nodes: list[NodeReport] = []
-    _walk(plan, 0, by_node, tracer.children_index(), tolerance, nodes)
+    _walk(plan, 0, by_node, tracer.children_index(), tolerance, nodes,
+          auditor)
     return ExplainAnalyzeReport(records=records, plan=plan, nodes=nodes,
                                 tracer=tracer, stats_store=stats_store,
                                 tolerance=tolerance)

@@ -30,8 +30,11 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import logging
 import os
 import threading
+
+log = logging.getLogger(__name__)
 
 
 def predicate_fingerprint(operator: str, *parts) -> str:
@@ -128,6 +131,7 @@ class StatsStore:
         self._stats: dict[tuple[str, str], ObservedStats] = {}
         self.decay = decay
         self.path = path
+        self.poisoned = 0     # entries dropped by guarantee-audit violations
         if path and os.path.exists(path):
             self.load(path, discount=load_discount)
 
@@ -214,6 +218,24 @@ class StatsStore:
                     return obs
         return None
 
+    def poison(self, fingerprint: str) -> int:
+        """Drop every entry with this fingerprint (all operators).
+
+        Called by the GuaranteeAuditor when a CI violation shows the
+        predicate's history was earned under a drifted proxy/oracle — the
+        adaptive executor and feedback costing must stop trusting its
+        selectivities; fresh observations rebuild the entry from zero."""
+        with self._lock:
+            victims = [k for k in self._stats if k[1] == fingerprint]
+            for k in victims:
+                del self._stats[k]
+            self.poisoned += len(victims)
+        if victims:
+            log.warning("stats-store poisoned %d entr%s for fingerprint %s",
+                        len(victims), "y" if len(victims) == 1 else "ies",
+                        fingerprint)
+        return len(victims)
+
     def snapshot(self) -> list[dict]:
         with self._lock:
             entries = list(self._stats.values())
@@ -236,35 +258,65 @@ class StatsStore:
         os.replace(tmp, path)
         return path
 
-    def load(self, path: str, *, discount: float = 1.0) -> int:
+    def load(self, path: str, *, discount: float = 1.0,
+             strict: bool = False) -> int:
         """Merge a saved store into this one.  ``discount`` scales every
         incoming accumulator (1.0 = the original additive merge): a
         down-weighted load makes cross-process history a shrinkage prior
         that fresh observations quickly outvote, instead of a month of
-        stale sessions outvoting the last five minutes."""
+        stale sessions outvoting the last five minutes.
+
+        A missing, truncated, or corrupt file (crashed writer, torn disk,
+        wrong schema) is log-and-continue with whatever state already loaded
+        — persisted stats are advisory history, and a bad file must never
+        block gateway startup.  ``strict=True`` restores the raising
+        behavior for callers that want the error."""
         if not 0.0 <= discount <= 1.0:
             raise ValueError(f"discount={discount} (expected 0 <= d <= 1)")
-        with open(path) as f:
-            doc = json.load(f)
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+            entries = doc.get("entries", ())
+            if not isinstance(entries, (list, tuple)):
+                raise ValueError(f"entries is {type(entries).__name__}, "
+                                 "expected a list")
+        except (OSError, json.JSONDecodeError, UnicodeDecodeError,
+                ValueError, AttributeError) as exc:
+            if strict:
+                raise
+            log.warning("stats store load failed (%s: %s) — continuing "
+                        "with fresh state", path, exc)
+            return 0
         scale = (lambda v: v) if discount == 1.0 else (lambda v: v * discount)
-        n = 0
-        for e in doc.get("entries", ()):
-            counts = {f: e.get(f, 0) for f in _SUM_FIELDS
-                      if f not in ("rows_in", "rows_out")}
-            with self._lock:
+        n = skipped = 0
+        for e in entries:
+            try:
                 key = (e["operator"], e["fingerprint"])
+                counts = {f: float(e.get(f, 0) or 0) for f in _SUM_FIELDS
+                          if f not in ("rows_in", "rows_out")}
+                runs = float(e.get("runs", 0) or 0)
+                rows_in = float(e.get("rows_in", 0) or 0)
+                rows_out = float(e.get("rows_out", 0) or 0)
+                wall_s = float(e.get("wall_s", 0.0) or 0.0)
+                details = e.get("details") or {}
+            except (TypeError, KeyError, ValueError, AttributeError):
+                skipped += 1   # malformed entry: drop it, keep the rest
+                continue
+            with self._lock:
                 obs = self._stats.get(key)
                 if obs is None:
-                    obs = self._stats[key] = ObservedStats(
-                        e["operator"], e["fingerprint"])
-                obs.runs += scale(e.get("runs", 0))
-                obs.rows_in += scale(e.get("rows_in", 0))
-                obs.rows_out += scale(e.get("rows_out", 0))
-                obs.wall_s += scale(e.get("wall_s", 0.0))
+                    obs = self._stats[key] = ObservedStats(key[0], key[1])
+                obs.runs += scale(runs)
+                obs.rows_in += scale(rows_in)
+                obs.rows_out += scale(rows_out)
+                obs.wall_s += scale(wall_s)
                 for f, v in counts.items():
                     setattr(obs, f, getattr(obs, f) + scale(v))
-                for k, v in (e.get("details") or {}).items():
+                for k, v in details.items():
                     if isinstance(v, (int, float)) and not isinstance(v, bool):
                         obs.details[k] = obs.details.get(k, 0) + scale(v)
             n += 1
+        if skipped:
+            log.warning("stats store load: skipped %d malformed entr%s in %s",
+                        skipped, "y" if skipped == 1 else "ies", path)
         return n

@@ -53,6 +53,7 @@ class MicroBatchDispatcher:
     def __init__(self, *, oracle, proxy=None, embedder=None, store=None,
                  window_s: float = 0.002, max_batch: int = 64, tracer=None):
         self._backends = {"oracle": oracle, "proxy": proxy, "embed": embedder}
+        self._background: set[str] = set()   # roles flushed lazily (audit)
         self._store = store
         # fused batches run on the dispatcher thread, outside any session's
         # trace context: batch spans root on the tracer handle directly
@@ -73,9 +74,27 @@ class MicroBatchDispatcher:
                                            # embeds never do a counted store
                                            # consult, so mixing them into the
                                            # LM hit-rate would break the rate)
+        # background (audit) traffic is counted apart so query-path fusion
+        # rates are identical with auditing on or off
+        self.audit_batches = 0
+        self.audit_backend_prompts = 0
+        self.audit_requested_prompts = 0
         self._thread = threading.Thread(target=self._loop, daemon=True,
                                         name="microbatch-dispatcher")
         self._thread.start()
+
+    def add_backend(self, role: str, backend, *,
+                    background: bool = False) -> None:
+        """Register an extra role (the gateway adds ``audit``).
+        ``background=True`` gives the role a stretched flush window
+        (``window_s * 8``) so its buckets yield the dispatch thread to
+        latency-sensitive query traffic and fuse into wider batches."""
+        with self._cv:
+            self._backends[role] = backend
+            if background:
+                self._background.add(role)
+            else:
+                self._background.discard(role)
 
     # -- caller side -------------------------------------------------------
     def submit(self, role: str, kind: str, prompts: Sequence[str], *,
@@ -99,6 +118,10 @@ class MicroBatchDispatcher:
         return call
 
     # -- dispatcher thread -------------------------------------------------
+    def _window_for(self, key: tuple) -> float:
+        return self.window_s * (8 if key[0] in self._background
+                                else 1)
+
     def _ready_key(self) -> tuple | None:
         """A bucket whose window elapsed or whose unique count hit max_batch
         (caller must hold the lock)."""
@@ -106,7 +129,7 @@ class MicroBatchDispatcher:
         for key, bucket in self._buckets.items():
             if not bucket:
                 continue
-            if now - self._bucket_t0[key] >= self.window_s:
+            if now - self._bucket_t0[key] >= self._window_for(key):
                 return key
             uniq = len({p for c in bucket for p in c.prompts})
             if uniq >= self.max_batch:
@@ -116,7 +139,7 @@ class MicroBatchDispatcher:
     def _next_deadline(self) -> float | None:
         if not any(self._buckets.values()):
             return None
-        return min(self._bucket_t0[k] + self.window_s
+        return min(self._bucket_t0[k] + self._window_for(k)
                    for k, b in self._buckets.items() if b)
 
     def _loop(self) -> None:
@@ -174,7 +197,12 @@ class MicroBatchDispatcher:
                         order.append(p)
             rows: dict[str, object] = {}
             todo = order
-            if self._store is not None:
+            # background (audit) roles bypass the store entirely: a cached
+            # gold answer would mask exactly the drift the audit exists to
+            # detect, and audit answers must never warm query-visible state
+            use_store = self._store is not None \
+                and role not in self._background
+            if use_store:
                 keys = [(role, kind, *extra, p) for p in order]
                 # second-chance lookup (uncounted): the session-side caches
                 # already did the counted consult before parking the call
@@ -190,7 +218,7 @@ class MicroBatchDispatcher:
                 answered = self._invoke(role, kind, extra, todo)
                 for p, row in zip(todo, answered):
                     rows[p] = row
-                if self._store is not None:
+                if use_store:
                     self._store.put_many(
                         [(role, kind, *extra, p) for p in todo], answered,
                         owners=[owner_of[p].tag for p in todo])
@@ -201,10 +229,17 @@ class MicroBatchDispatcher:
                    sessions=len({c.tag for c in calls}))
             prompt_sets = [set(c.prompts) for c in calls]
             with self._cv:
-                self.fused_batches += 1
-                self.fused_calls += len(calls)
-                self.backend_prompts += len(todo)
-                self.requested_prompts += sum(len(c.prompts) for c in calls)
+                if role in self._background:
+                    self.audit_batches += 1
+                    self.audit_backend_prompts += len(todo)
+                    self.audit_requested_prompts += sum(
+                        len(c.prompts) for c in calls)
+                else:
+                    self.fused_batches += 1
+                    self.fused_calls += len(calls)
+                    self.backend_prompts += len(todo)
+                    self.requested_prompts += sum(
+                        len(c.prompts) for c in calls)
                 if len({c.tag for c in calls}) > 1:
                     for p in order:
                         sharers = {c.tag for c, ps in zip(calls, prompt_sets)
@@ -242,6 +277,9 @@ class MicroBatchDispatcher:
                 "cross_shared_embed": self.cross_shared_embed,
                 "coalesce_ratio": (self.fused_calls / self.fused_batches
                                    if self.fused_batches else 0.0),
+                "audit_batches": self.audit_batches,
+                "audit_backend_prompts": self.audit_backend_prompts,
+                "audit_requested_prompts": self.audit_requested_prompts,
             }
 
 

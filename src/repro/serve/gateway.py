@@ -34,6 +34,7 @@ into the right ``session_scope``, and per-session fragment counts feed
 from __future__ import annotations
 
 import dataclasses
+import os
 import threading
 import time
 import uuid
@@ -44,6 +45,7 @@ from repro.core import accounting
 from repro.core.plan.adaptive import AdaptivePlanExecutor, AdaptivePolicy
 from repro.core.plan.cache import BatchedModelCache
 from repro.obs import StatsStore
+from repro.obs import audit as _audit
 from repro.obs import trace as _trace
 from repro.core.plan.execute import PartitionedExecutor
 from repro.core.plan.nodes import LogicalNode
@@ -87,7 +89,8 @@ class Gateway:
                  stats_load_discount: float = 1.0,
                  adaptive: "bool | AdaptivePolicy" = False,
                  matview: "bool | MatViewRegistry" = False,
-                 matview_capacity: int = 64):
+                 matview_capacity: int = 64,
+                 audit: "bool | _audit.AuditPolicy | None" = None):
         self.session = session
         # trace=True builds a gateway-lifetime tracer (or pass your own);
         # spans from every layer — session, plan stage, operator, fragment,
@@ -134,6 +137,28 @@ class Gateway:
             store=self.store, window_s=window_s, max_batch=max_batch,
             tracer=self.tracer)
         self.metrics = GatewayMetrics()
+        # audit=True / an AuditPolicy turns on continuous guarantee auditing
+        # (default: the REPRO_AUDIT env var).  The auditor's gold oracle is a
+        # dispatcher handle on a dedicated background-priority `audit` role:
+        # its traffic fuses into wide batches, never consults or warms the
+        # query-visible cache, and bills to the `audit` accounting kind —
+        # query results and oracle bills stay bit-identical with it on/off.
+        if audit is None:
+            audit = bool(os.environ.get("REPRO_AUDIT"))
+        self._audit_path = f"{persist_path}.audit.json" if persist_path \
+            else None
+        if audit:
+            policy = audit if isinstance(audit, _audit.AuditPolicy) \
+                else _audit.AuditPolicy()
+            self.dispatcher.add_backend("audit", _raw(session.oracle),
+                                        background=True)
+            self.auditor: _audit.GuaranteeAuditor | None = \
+                _audit.GuaranteeAuditor(
+                    DispatchedModel(self.dispatcher, "audit", tag="audit"),
+                    policy=policy, stats_store=self.stats_store,
+                    on_violation=self._on_violation, path=self._audit_path)
+        else:
+            self.auditor = None
         self.max_pending = max_pending
         self.optimizer_kw = dict(optimizer_kw or {})
         if n_partitions is not None:
@@ -182,7 +207,7 @@ class Gateway:
                 raise RuntimeError("gateway is closed")
             pending = sum(len(q) for q in self._queues.values())
             if pending >= self.max_pending:
-                self.metrics.on_reject()
+                self.metrics.on_reject(tenant=tenant)
                 raise AdmissionError(
                     f"gateway queue full ({pending}/{self.max_pending} pending)")
             self._counter += 1
@@ -194,7 +219,7 @@ class Gateway:
                 self._tenants.append(tenant)
             self.sessions.append(sess)
             self._unresolved[sess.sid] = sess
-            self.metrics.on_submit()
+            self.metrics.on_submit(tenant=tenant)
             self._cv.notify()
         return sess
 
@@ -253,6 +278,20 @@ class Gateway:
                     return
             self._run(sess)
 
+    # -- guarantee auditing ------------------------------------------------
+    def _on_violation(self, event) -> None:
+        """Runs on the auditor's worker thread when a CI lower bound crosses
+        its declared target: raise the alert counter and — when the policy
+        asks for recalibration — purge the predicate's cached oracle/proxy
+        answers, so the next query touching it re-scores, re-labels, and
+        re-learns its cascade thresholds against current model behavior.
+        (The auditor itself already poisoned the StatsStore fingerprint.)"""
+        self.metrics.on_violation(event.kind)
+        aud = self.auditor
+        if aud is not None and aud.policy.recalibrate and event.match_token:
+            self.store.invalidate(namespaces=("oracle", "proxy"),
+                                  contains=event.match_token)
+
     # -- execution ---------------------------------------------------------
     def _handles(self, sid: str):
         oracle = BatchedModelCache(
@@ -273,7 +312,8 @@ class Gateway:
                  error: BaseException | None = None) -> None:
         sess.finish(status, records=records, error=error)
         self.metrics.on_finish(status, sess.latency_s,
-                               len(records) if records is not None else None)
+                               len(records) if records is not None else None,
+                               tenant=sess.tenant)
         with self._cv:
             self._unresolved.pop(sess.sid, None)
 
@@ -308,7 +348,11 @@ class Gateway:
             # the tracer (when on) wraps the whole session in one root span;
             # fragment/dispatcher threads parent into it via the captured
             # accounting context / the dispatcher's tracer handle
+            # the auditor context rides the worker thread (and fragment
+            # threads, via accounting.capture) so every cascade/search this
+            # session runs emits its auto-decisions for sampling
             with _trace.activate(self.tracer), \
+                    _audit.activate_ctx(self.auditor), \
                     _trace.span_in(self.tracer, sess.sid, "session",
                                    sid=sess.sid, tenant=sess.tenant) as sp, \
                     accounting.session_scope(sess.sid) as st:
@@ -373,7 +417,35 @@ class Gateway:
         snap.update(self.index_registry.metrics())
         if self.matviews is not None:
             snap.update(self.matviews.metrics())
+        if self.auditor is not None:
+            snap["audit"] = self.auditor.report()
         return snap
+
+    def metrics_registry(self):
+        """Build a fresh ``MetricsRegistry`` and collect every subsystem's
+        series into it: gateway throughput + per-tenant SLOs, cache,
+        dispatcher, index/matview registries, and (when auditing is on) the
+        guarantee CIs and violation counters."""
+        from repro.obs.metrics import MetricsRegistry
+        reg = MetricsRegistry()
+        self.metrics.collect(reg, store=self.store,
+                             dispatcher=self.dispatcher)
+        for prefix, counters in (("index", self.index_registry.metrics()),
+                                 ("matview", self.matviews.metrics()
+                                  if self.matviews is not None else {})):
+            if not counters:
+                continue
+            g = reg.gauge(f"repro_{prefix}_registry",
+                          f"{prefix} registry counters", ("counter",))
+            for k, v in counters.items():
+                g.set(v, counter=k)
+        if self.auditor is not None:
+            self.auditor.collect(reg)
+        return reg
+
+    def metrics_text(self) -> str:
+        """The Prometheus text exposition of :meth:`metrics_registry`."""
+        return self.metrics_registry().render()
 
     # -- trace / stats export ---------------------------------------------
     def export_trace(self, path: str, *, fmt: str = "jsonl") -> int:
@@ -418,6 +490,11 @@ class Gateway:
             w.join(timeout=10.0)
         if self._fragment_pool is not None:
             self._fragment_pool.shutdown(wait=True)
+        if self.auditor is not None:
+            # drain pending audit judgments through the still-open
+            # dispatcher (its close() flushes remaining buckets), then
+            # persist the audit accumulators next to the stats store
+            self.auditor.close()
         self.dispatcher.close()
         if self._stats_path:
             # observed operator statistics persist next to the semantic

@@ -57,6 +57,7 @@ class SharedSemanticCache:
         self.expirations = 0
         self.loaded = 0
         self.compactions = 0
+        self.invalidations = 0   # entries purged by guarantee recalibration
         self._file_lines = 0      # lines in the log, live + dead
         self._fh = None
         if persist_path:
@@ -208,6 +209,32 @@ class SharedSemanticCache:
                     self._data.popitem(last=False)
                     self.evictions += 1
 
+    def invalidate(self, *, namespaces: Iterable[str] | None = None,
+                   contains: str | None = None) -> int:
+        """Drop cached answers matching a namespace set and/or a prompt
+        substring.  The guarantee auditor's recalibration path: when a
+        violation shows a predicate's cached oracle/proxy answers were
+        earned under drifted model behavior, purging them forces the next
+        query touching that predicate to re-score, re-label, and re-learn
+        its cascade thresholds fresh.
+
+        ``contains`` matches against the prompt (the last key element) —
+        callers pass the predicate template's longest literal segment, which
+        appears verbatim in every rendered prompt.  In-memory only: a
+        persisted log still replays the stale rows in the *next* process
+        (each entry is one overwrite away from correct there, and the purge
+        is re-applied on the next violation); returns entries dropped."""
+        ns = None if namespaces is None else frozenset(namespaces)
+        with self._lock:
+            victims = [
+                k for k in self._data
+                if (ns is None or k[0] in ns)
+                and (contains is None or contains in str(k[-1]))]
+            for k in victims:
+                del self._data[k]
+            self.invalidations += len(victims)
+        return len(victims)
+
     def get(self, key: tuple, *, requester: str | None = None) -> tuple:
         return self.get_many([key], requester=requester)[0]
 
@@ -236,4 +263,5 @@ class SharedSemanticCache:
                 "evictions": self.evictions, "expirations": self.expirations,
                 "loaded": self.loaded, "persist_lines": self._file_lines,
                 "compactions": self.compactions,
+                "invalidations": self.invalidations,
             }

@@ -235,6 +235,12 @@ class Subscription:
         self._emissions.put(em)
         self.emitted += 1
         self.gateway.metrics.on_emit(error=em.error is not None)
+        aud = getattr(self.gateway, "auditor", None)
+        if aud is not None:
+            aud.observe_emission(
+                tenant=self.tenant,
+                rows=len(em.records) if em.records is not None else 0,
+                added=len(em.added), error=em.error is not None)
 
     # -- consumer side -------------------------------------------------------
     def poll(self, timeout: float | None = None) -> Emission | None:

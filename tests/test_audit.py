@@ -1,0 +1,566 @@
+"""Online guarantee auditing and the metrics plane.
+
+Covers the PR-9 tentpole and satellites: binomial interval edge cases and
+monotonicity, budgeter hard caps (property-based), bill identity with
+auditing on vs off, drift detection end to end (violation event + stats
+poison + cache recalibration), IVF exact-rescan recall audits, corrupt
+state-file tolerance, Prometheus exposition validity, and the
+``explain_analyze`` audit columns.
+"""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+try:                                       # property tests prefer hypothesis,
+    from hypothesis import given, settings # but the budget invariant is still
+    from hypothesis import strategies as st  # fuzzed without it
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import accounting
+from repro.core.backends import synth
+from repro.core.frame import SemFrame, Session
+from repro.core.operators.filter import sem_filter_cascade
+from repro.index import IVFIndex, VectorIndex
+from repro.index.backend import exact_topk
+from repro.obs import audit as A
+from repro.obs.analyze import explain_analyze
+from repro.obs.metrics import MetricsRegistry, parse_exposition
+from repro.obs.stats_store import StatsStore, predicate_fingerprint
+from repro.serve import Gateway
+
+
+# ---------------------------------------------------------------------------
+# interval math
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fn", [A.wilson_interval, A.clopper_pearson])
+def test_interval_edges(fn):
+    assert fn(0, 0) == (0.0, 1.0)            # no evidence: vacuous interval
+    lo, hi = fn(0, 10)
+    assert lo == 0.0 and 0.0 < hi < 1.0      # zero successes pins the floor
+    lo, hi = fn(10, 10)
+    assert 0.0 < lo < 1.0 and hi == 1.0      # all successes pins the ceiling
+    lo, hi = fn(1, 2)                        # tiny n: wide but proper
+    assert 0.0 <= lo < 0.5 < hi <= 1.0
+    # bounds always bracket the point estimate and stay in [0, 1]
+    for s, n in [(0, 1), (1, 1), (3, 7), (50, 100), (999, 1000)]:
+        lo, hi = fn(s, n)
+        assert 0.0 <= lo <= s / n <= hi <= 1.0
+
+
+@pytest.mark.parametrize("fn", [A.wilson_interval, A.clopper_pearson])
+def test_interval_narrows_with_n(fn):
+    """At a fixed success ratio, more samples must never widen the CI."""
+    widths = [hi - lo for hi, lo in
+              ((b, a) for a, b in (fn(n // 2, n)
+                                   for n in (4, 16, 64, 256, 1024)))]
+    assert all(w1 <= w0 + 1e-12 for w0, w1 in zip(widths, widths[1:]))
+    assert widths[-1] < widths[0] / 3
+
+
+def test_clopper_pearson_contains_wilson():
+    """CP is exact-conservative: it should cover at least what Wilson does
+    away from the boundary."""
+    for s, n in [(3, 10), (30, 100), (70, 100)]:
+        wlo, whi = A.wilson_interval(s, n, delta=0.05)
+        clo, chi = A.clopper_pearson(s, n, delta=0.05)
+        assert clo <= wlo + 1e-9 and chi >= whi - 1e-9
+
+
+def test_clopper_pearson_known_value():
+    # Beta quantile cross-check: CP upper for s=0 is 1-(delta/2)^(1/n)
+    _, hi = A.clopper_pearson(0, 20, delta=0.05)
+    assert hi == pytest.approx(1.0 - (0.025) ** (1 / 20), abs=1e-9)
+
+
+def test_binomial_interval_dispatch():
+    assert A.binomial_interval(5, 10, method="wilson") == \
+        A.wilson_interval(5, 10)
+    assert A.binomial_interval(5, 10, method="clopper-pearson") == \
+        A.clopper_pearson(5, 10)
+    with pytest.raises(ValueError):
+        A.binomial_interval(5, 10, method="laplace")
+
+
+def test_template_match_token():
+    assert A.template_match_token("the {abstract} is checkable") == \
+        "is checkable"
+    assert A.template_match_token("{claim} holds") == "holds"
+    assert A.template_match_token("plain text") == "plain text"
+
+
+# ---------------------------------------------------------------------------
+# budgeter: the per-window cap is hard
+# ---------------------------------------------------------------------------
+
+
+def _check_budget_invariant(steps, budget):
+    """Property: grants within any single budgeter window never exceed the
+    budget, grants never exceed asks, and grant+deny conserves the asks."""
+    clock = [0.0]
+    b = A.AuditBudgeter(budget, window_s=10.0, now_fn=lambda: clock[0])
+    window_spent = 0
+    window_start = None
+    for dt, n in steps:
+        clock[0] += dt
+        if window_start is None or clock[0] - window_start >= 10.0:
+            window_start, window_spent = clock[0], 0   # mirror the lazy roll
+        got = b.take(n)
+        assert 0 <= got <= n
+        window_spent += got
+        assert window_spent <= budget      # the hard per-window cap
+    assert b.granted_total + b.denied_total == sum(n for _, n in steps)
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.lists(st.tuples(st.floats(0.0, 5.0), st.integers(0, 40)),
+                    min_size=1, max_size=60),
+           st.integers(0, 25))
+    @settings(max_examples=60, deadline=None)
+    def test_budgeter_never_exceeds_window_budget(steps, budget):
+        _check_budget_invariant(steps, budget)
+else:
+    @pytest.mark.parametrize("seed", range(40))
+    def test_budgeter_never_exceeds_window_budget(seed):
+        rng = np.random.default_rng(seed)
+        steps = [(float(rng.uniform(0.0, 5.0)), int(rng.integers(0, 41)))
+                 for _ in range(int(rng.integers(1, 61)))]
+        _check_budget_invariant(steps, int(rng.integers(0, 26)))
+
+
+def test_budgeter_window_roll_and_remaining():
+    clock = [0.0]
+    b = A.AuditBudgeter(5, window_s=1.0, now_fn=lambda: clock[0])
+    assert b.take(3) == 3 and b.remaining() == 2
+    assert b.take(10) == 2          # cap hit within the window
+    assert b.take(1) == 0
+    clock[0] += 1.0                 # window rolls: full budget again
+    assert b.remaining() == 5 and b.take(7) == 5
+
+
+def test_budgeter_exact_cap_under_threads():
+    b = A.AuditBudgeter(100, window_s=3600.0)
+    got = []
+
+    def taker():
+        for _ in range(50):
+            got.append(b.take(3))
+
+    threads = [threading.Thread(target=taker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert sum(got) == 100          # hard cap, no over-grant under racing
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: drift detection, recalibration, bill identity
+# ---------------------------------------------------------------------------
+
+
+def _filter_worlds(n=400, seed=7):
+    """(records, live world, drifted world): same corpus, inverted truth."""
+    records, world, oracle, proxy, _ = synth.make_filter_world(
+        n, proxy_alpha=2.5, seed=seed)
+    _, drifted, *_ = synth.make_filter_world(n, proxy_alpha=2.5, seed=seed)
+    for rid in drifted.filter_truth:
+        drifted.filter_truth[rid] = not drifted.filter_truth[rid]
+    return records, world, drifted, oracle, proxy
+
+
+def test_audit_confirms_healthy_cascade():
+    records, world, _, oracle, proxy = _filter_worlds()
+    aud = A.GuaranteeAuditor(
+        synth.SimulatedModel(world, "oracle"),
+        policy=A.AuditPolicy(sample_fraction=1.0, min_samples=8, seed=1))
+    with A.activate_ctx(aud):
+        sem_filter_cascade(records, "{claim} holds", oracle, proxy,
+                           recall_target=0.9, precision_target=0.9,
+                           delta=0.2, sample_size=100, seed=3)
+    assert aud.drain()
+    est = aud.report()["cascades"][0]
+    assert est["precision"] is not None and est["precision"]["lo"] > 0.9
+    assert est["violations"] == 0
+    assert aud.report()["audit_calls"] == aud.report()["budget"]["granted"]
+    aud.close()
+
+
+def test_drift_fires_violation_and_poisons_stats():
+    records, world, drifted, oracle, proxy = _filter_worlds()
+    store = StatsStore()
+    fp = predicate_fingerprint("Filter", "{claim} holds")
+    store.observe("Filter", fp, rows_in=400, rows_out=150, wall_s=0.5,
+                  stats={"oracle_calls": 100})
+    assert store.get("Filter", fp) is not None
+    events = []
+    # the audit oracle reads the *drifted* world: gold truth moved after the
+    # cascade's thresholds were calibrated
+    aud = A.GuaranteeAuditor(
+        synth.SimulatedModel(drifted, "oracle"),
+        policy=A.AuditPolicy(sample_fraction=1.0, min_samples=8, seed=1),
+        stats_store=store, on_violation=events.append)
+    with A.activate_ctx(aud):
+        mask, _ = sem_filter_cascade(records, "{claim} holds", oracle, proxy,
+                                     recall_target=0.9, precision_target=0.9,
+                                     delta=0.2, sample_size=100, seed=3)
+    assert aud.drain()
+    kinds = {e.kind for e in events}
+    assert "precision" in kinds
+    ev = next(e for e in events if e.kind == "precision")
+    assert ev.lower < 0.9 and ev.fingerprint == fp
+    assert ev.match_token == "holds"
+    assert ev.n >= 8
+    # the stale selectivity entry is gone and the alert counters are up
+    assert store.get("Filter", fp) is None and store.poisoned >= 1
+    assert aud.violation_counts["precision"] >= 1
+    # violation events serialize (structured alerting surface)
+    assert json.loads(json.dumps(ev.as_dict()))["kind"] == "precision"
+    aud.close()
+
+
+def test_bill_identity_with_auditing_on_vs_off():
+    """The query's own bill and records must be bit-identical whether the
+    auditor is observing or not — audit traffic lives on its own role."""
+    records, world, drifted, oracle, proxy = _filter_worlds()
+
+    def run(auditor):
+        with accounting.track("query") as st:
+            with A.activate_ctx(auditor):
+                mask, _ = sem_filter_cascade(
+                    records, "{claim} holds", oracle, proxy,
+                    recall_target=0.9, precision_target=0.9,
+                    delta=0.2, sample_size=100, seed=3)
+        return mask, st.as_dict()
+
+    mask_off, bill_off = run(None)
+    aud = A.GuaranteeAuditor(
+        synth.SimulatedModel(drifted, "oracle"),
+        policy=A.AuditPolicy(sample_fraction=1.0, min_samples=8, seed=1))
+    mask_on, bill_on = run(aud)
+    assert aud.drain()
+    np.testing.assert_array_equal(mask_off, mask_on)
+    bill_off.pop("wall_s"), bill_on.pop("wall_s")  # wall time is not a bill
+    assert bill_off == bill_on                     # byte-identical OpStats
+    assert bill_on["audit_calls"] == 0             # query bill: no audit kind
+    # the audit calls all landed on the auditor's own ledger instead
+    assert aud.stats.audit_calls == aud.report()["budget"]["granted"] > 0
+    aud.close()
+
+
+def test_violation_resets_estimation_window():
+    """After a violation the accumulators restart: post-recalibration
+    evidence is not averaged with the drifted rule's."""
+    records, world, drifted, oracle, proxy = _filter_worlds()
+    aud = A.GuaranteeAuditor(
+        synth.SimulatedModel(drifted, "oracle"),
+        policy=A.AuditPolicy(sample_fraction=1.0, min_samples=8, seed=1))
+    with A.activate_ctx(aud):
+        sem_filter_cascade(records, "{claim} holds", oracle, proxy,
+                           recall_target=0.9, precision_target=0.9,
+                           delta=0.2, sample_size=100, seed=3)
+    assert aud.drain()
+    est = aud.report()["cascades"][0]
+    assert est["violations"] >= 1
+    assert est["audited_accepts"] == 0 and est["precision"] is None
+    aud.close()
+
+
+# ---------------------------------------------------------------------------
+# gateway integration: recalibration + metrics plane + bill identity
+# ---------------------------------------------------------------------------
+
+
+def _gw_session(world):
+    return Session(oracle=synth.SimulatedModel(world, "oracle"),
+                   proxy=synth.SimulatedModel(world, "proxy", alpha=2.5),
+                   embedder=synth.SimulatedEmbedder(world), sample_size=100)
+
+
+def _cascade_pipeline(records, session):
+    return (SemFrame(records, session).lazy()
+            .sem_filter("{claim} holds", recall_target=0.9,
+                        precision_target=0.9))
+
+
+def test_gateway_bill_identity_and_recalibration():
+    records, world, drifted, *_ = _filter_worlds()
+
+    def run(audit):
+        gw = Gateway(_gw_session(world), max_inflight=2, window_s=0.005,
+                     audit=audit)
+        if audit and gw.auditor is not None:
+            # point the audit role's gold oracle at the drifted world
+            from repro.core.backends.base import CountedModel
+            gw.auditor._oracle = CountedModel(
+                synth.SimulatedModel(drifted, "oracle"), "audit")
+        h = gw.submit(_cascade_pipeline(records, gw.session),
+                      tenant="acme")
+        recs = h.result(timeout=30.0)
+        bill = dict(h.summary()["stats"])
+        if gw.auditor is not None:
+            gw.auditor.drain()
+        snap = gw.snapshot()
+        inval = gw.store.stats()["invalidations"]
+        text = gw.metrics_text()
+        gw.close()
+        return recs, bill, snap, inval, text
+
+    recs_off, bill_off, _, _, _ = run(False)
+    recs_on, bill_on, snap, inval, text = run(
+        A.AuditPolicy(sample_fraction=1.0, min_samples=8, seed=1))
+    assert recs_off == recs_on
+    for b in (bill_off, bill_on):          # sid and wall differ run to run
+        b.pop("wall_s"), b.pop("operator")
+    assert bill_off == bill_on              # satellite 1: identical bills
+    # drifted gold => violation => gateway purged the predicate's cache rows
+    assert snap["audit"]["violations"].get("precision", 0) >= 1
+    assert snap["violations"] >= 1
+    assert inval > 0
+    # per-tenant SLO series reached the exposition
+    samples = parse_exposition(text)
+    assert samples[
+        'repro_tenant_sessions_total{tenant="acme",status="completed"}'] == 1
+    assert samples['repro_guarantee_violations_total{kind="precision"}'] >= 1
+
+
+def test_gateway_metrics_text_is_valid_exposition():
+    records, world, *_ = _filter_worlds(n=120)
+    gw = Gateway(_gw_session(world), max_inflight=2, window_s=0.005,
+                 audit=A.AuditPolicy(sample_fraction=0.5, seed=0))
+    h = gw.submit(_cascade_pipeline(records, gw.session), tenant="t0")
+    h.result(timeout=30.0)
+    gw.auditor.drain()
+    text = gw.metrics_text()
+    gw.close()
+    samples = parse_exposition(text)       # raises on malformed exposition
+    for name in ("repro_gateway_sessions_total", "repro_gateway_latency_seconds",
+                 "repro_dispatch_prompts_total", "repro_cache_events_total",
+                 "repro_audit_oracle_calls_total", "repro_tenant_latency_seconds",
+                 "repro_tenant_latency_quantile_seconds"):
+        assert any(k == name or k.startswith(name + "{")
+                   or k.startswith(name + "_") for k in samples), \
+            f"missing family {name}"
+    # histogram invariants: cumulative buckets end at +Inf == _count
+    buckets = [(k, v) for k, v in samples.items()
+               if k.startswith("repro_gateway_latency_seconds_bucket")]
+    assert buckets and buckets[-1][0].endswith('le="+Inf"}')
+    vals = [v for _, v in buckets]
+    assert all(a <= b for a, b in zip(vals, vals[1:]))
+    assert vals[-1] == samples["repro_gateway_latency_seconds_count"] == 1
+
+
+# ---------------------------------------------------------------------------
+# metrics registry unit behavior
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_registry_render_and_parse_roundtrip():
+    reg = MetricsRegistry()
+    c = reg.counter("jobs_total", "jobs processed", ("status",))
+    c.inc(status="ok")
+    c.inc(2, status="err")
+    g = reg.gauge("queue_depth", "pending jobs")
+    g.set(7)
+    hst = reg.histogram("latency_seconds", "op latency",
+                        buckets=(0.1, 1.0, 10.0))
+    for v in (0.05, 0.5, 5.0, 50.0):
+        hst.observe(v)
+    text = reg.render()
+    assert "# TYPE jobs_total counter" in text
+    samples = parse_exposition(text)
+    assert samples['jobs_total{status="err"}'] == 2.0
+    assert samples['jobs_total{status="ok"}'] == 1.0
+    assert samples["queue_depth"] == 7.0
+    assert samples['latency_seconds_bucket{le="0.1"}'] == 1.0
+    assert samples['latency_seconds_bucket{le="+Inf"}'] == 4.0
+    assert samples["latency_seconds_count"] == 4.0
+    assert samples["latency_seconds_sum"] == pytest.approx(55.55)
+
+
+def test_metrics_registry_label_isolation_and_thread_safety():
+    reg = MetricsRegistry()
+    c = reg.counter("hits_total", "hits", ("shard",))
+
+    def worker(shard):
+        for _ in range(500):
+            c.inc(shard=shard)
+
+    threads = [threading.Thread(target=worker, args=(f"s{i}",))
+               for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    for i in range(4):
+        assert c.value(shard=f"s{i}") == 500
+    # re-registering the same family returns the same collector
+    assert reg.counter("hits_total", "hits", ("shard",)) is c
+
+
+def test_parse_exposition_rejects_garbage():
+    with pytest.raises(ValueError):
+        parse_exposition("this is not prometheus\n")
+    with pytest.raises(ValueError):
+        parse_exposition("# TYPE x bogus_kind\nx 1\n")
+
+
+# ---------------------------------------------------------------------------
+# ANN retrieval: sampled exact re-scans
+# ---------------------------------------------------------------------------
+
+
+def _vectors(n=600, d=24, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+def test_exact_topk_matches_flat_index():
+    x = _vectors()
+    q = x[:5] + 0.01
+    es, ei = VectorIndex(x).search(q, 8)
+    s2, i2 = exact_topk(x, q, 8)
+    np.testing.assert_allclose(np.sort(s2, axis=1), np.sort(es, axis=1),
+                               atol=1e-5)
+
+
+def test_ivf_search_audit_estimates_recall():
+    x = _vectors()
+    q = _vectors(40, seed=9)
+    policy = A.AuditPolicy(search_sample_fraction=1.0, min_search_samples=16,
+                           seed=2)
+    events = []
+    aud = A.GuaranteeAuditor(None, policy=policy, on_violation=events.append)
+    # well-probed index: high recall, no violation
+    good = IVFIndex(x, n_clusters=16, recall_target=0.5, seed=1)
+    with A.activate_ctx(aud):
+        good.search(q, 10, nprobe=16)
+    assert aud.drain()
+    est = {e["key"]: e for e in aud.report()["searches"]}
+    ci = est["ivf"]["recall_at_k"]
+    assert ci is not None and ci["point"] > 0.95 and not events
+    aud.close()
+
+
+def test_ivf_starved_probe_fires_recall_violation():
+    x = _vectors()
+    q = _vectors(60, seed=11)
+    events = []
+    aud = A.GuaranteeAuditor(
+        None, policy=A.AuditPolicy(search_sample_fraction=1.0,
+                                   min_search_samples=16, seed=2),
+        on_violation=events.append)
+    starved = IVFIndex(x, n_clusters=50, nprobe=1, recall_target=0.95, seed=3)
+    with A.activate_ctx(aud):
+        starved.search(q, 20)
+    assert aud.drain()
+    assert any(e.kind == "recall_at_k" for e in events)
+    ev = next(e for e in events if e.kind == "recall_at_k")
+    assert ev.lower < 0.95 and ev.operator == "Search"
+    aud.close()
+
+
+def test_ivf_delta_and_int8_paths_are_audited():
+    x = _vectors()
+    q = _vectors(30, seed=13)
+    aud = A.GuaranteeAuditor(
+        None, policy=A.AuditPolicy(search_sample_fraction=1.0, seed=2))
+    idx = IVFIndex(x[:500], n_clusters=12, recall_target=0.5, seed=4,
+                   quantize="int8")
+    idx.add(x[500:])                       # rows land in the delta buffer
+    with A.activate_ctx(aud):
+        idx.search(q, 10, nprobe=12)
+    assert aud.drain()
+    est = {e["key"]: e for e in aud.report()["searches"]}
+    assert "ivf/int8" in est               # quantized path keyed separately
+    assert est["ivf/int8"]["queries_audited"] == 30
+    aud.close()
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: corrupt/truncated state files are log-and-continue
+# ---------------------------------------------------------------------------
+
+
+def test_stats_store_load_corrupt_files(tmp_path):
+    s = StatsStore()
+    # missing file
+    assert s.load(tmp_path / "nope.json") == 0
+    # empty + truncated + garbage
+    for name, payload in [("empty.json", b""),
+                          ("garbage.json", b"\x00\xffnot json"),
+                          ("truncated.json", b'{"entries": [{"fingerprint"')]:
+        p = tmp_path / name
+        p.write_bytes(payload)
+        assert s.load(p) == 0
+        with pytest.raises(Exception):
+            s.load(p, strict=True)
+    # malformed entries inside a valid document are skipped, good ones kept
+    doc = {"entries": [
+        {"fingerprint": "good", "operator": "Filter", "runs": 3,
+         "rows_in": 10.0, "rows_out": 4.0, "oracle_calls": 5.0,
+         "wall_s": 0.1},
+        "not-a-dict",
+        {"operator": "Filter"},            # no fingerprint
+    ]}
+    p = tmp_path / "mixed.json"
+    p.write_text(json.dumps(doc))
+    loaded = s.load(p)
+    assert loaded == 1 and s.get("Filter", "good") is not None
+    assert s.get("Filter", "good").oracle_calls == 5
+
+
+def test_auditor_state_roundtrip_and_corrupt_load(tmp_path):
+    records, world, drifted, oracle, proxy = _filter_worlds()
+    path = str(tmp_path / "audit.json")
+    aud = A.GuaranteeAuditor(
+        synth.SimulatedModel(world, "oracle"), path=path,
+        policy=A.AuditPolicy(sample_fraction=1.0, min_samples=8, seed=1))
+    with A.activate_ctx(aud):
+        sem_filter_cascade(records, "{claim} holds", oracle, proxy,
+                           recall_target=0.9, precision_target=0.9,
+                           delta=0.2, sample_size=100, seed=3)
+    aud.close()                            # drains and persists
+    audited = aud.report()["cascades"][0]["audited"]
+    assert audited > 0
+    # a fresh auditor resumes the accumulators from disk
+    aud2 = A.GuaranteeAuditor(synth.SimulatedModel(world, "oracle"),
+                              path=path)
+    assert aud2.report()["cascades"][0]["audited"] == audited
+    aud2.close()
+    # corrupt state file: fresh start, no raise
+    with open(path, "w") as f:
+        f.write('{"cascades": [{"oper')
+    aud3 = A.GuaranteeAuditor(synth.SimulatedModel(world, "oracle"),
+                              path=path)
+    assert aud3.report()["cascades"] == []
+    with pytest.raises(Exception):
+        aud3.load(path, strict=True)
+    aud3.close()
+
+
+# ---------------------------------------------------------------------------
+# explain_analyze integration
+# ---------------------------------------------------------------------------
+
+
+def test_explain_analyze_shows_audited_ci_next_to_tau():
+    records, world, *_ = _filter_worlds(n=300)
+    sess = _gw_session(world)
+    aud = A.GuaranteeAuditor(
+        synth.SimulatedModel(world, "oracle"),
+        policy=A.AuditPolicy(sample_fraction=1.0, min_samples=8, seed=1))
+    frame = _cascade_pipeline(records, sess)
+    rep = explain_analyze(frame, auditor=aud)
+    text = rep.render()
+    filt = next(r for r in rep.nodes if type(r.node).__name__ == "Filter")
+    assert filt.audit is not None and filt.audit["precision"] is not None
+    assert filt.observed.get("tau_plus") is not None
+    assert "tau " in text and "audit P~" in text and "n=" in text
+    aud.close()
