@@ -1,0 +1,157 @@
+"""Fast-join benchmark: blocking + block prompts + transitivity inference.
+
+A 100k-pair entity-resolution join (500 mentions x 200 entity records, the
+equivalence regime where verdict inference pays).  Three paths over the
+same world:
+
+  * **gold** — the O(n1*n2) nested-loop judge (the reference truth);
+  * **cascade** — the historical pairwise cascade (proxy thresholds, every
+    mid-region pair judged one prompt per pair);
+  * **block** — IVF blocking -> multi-pair block prompts -> transitivity
+    pruning (``sem_join(strategy="block")``'s operator).
+
+Asserts the PR's two acceptance properties:
+
+  * the block path spends **>=10x fewer oracle prompts** than the pairwise
+    cascade while holding recall >= the 0.9 target against gold;
+  * ``strategy="cascade"`` through the frame API stays **record-identical**
+    to the historical default dispatch.
+
+Writes ``BENCH_join.json``.
+
+    PYTHONPATH=src python -m benchmarks.join_bench
+"""
+import json
+import time
+
+import numpy as np
+
+from benchmarks._util import emit, set_metrics
+from repro.core.backends import synth
+from repro.core.frame import SemFrame, Session
+from repro.core.operators.join import (sem_join_block, sem_join_cascade,
+                                       sem_join_gold)
+
+N_LEFT, N_RIGHT, N_CLASSES = 500, 200, 40
+RECALL_TARGET = 0.9
+MIN_SPEEDUP = 10.0
+JOIN_LX = "the {mention} refers to the same entity as {entity:right}"
+
+
+class _Counting:
+    """Counts every prompt a path sends to the oracle — the unit the >=10x
+    claim is stated in (one block prompt of B pairs = one prompt)."""
+
+    def __init__(self, model):
+        self._m = model
+        self.prompts = 0
+
+    def predicate(self, prompts):
+        self.prompts += len(prompts)
+        return self._m.predicate(prompts)
+
+    def generate(self, prompts):
+        self.prompts += len(prompts)
+        return self._m.generate(prompts)
+
+
+def _pairs(mask):
+    return {(int(i), int(j)) for i, j in zip(*np.nonzero(mask))}
+
+
+def run() -> None:
+    left, right, world, oracle, _, emb = synth.make_entity_world(
+        N_LEFT, N_RIGHT, N_CLASSES, sim_correlation=0.75, seed=11)
+    n_pairs = N_LEFT * N_RIGHT
+    assert n_pairs >= 100_000
+
+    # -- gold reference (bill == n_pairs by construction) -------------------
+    gold_oracle = _Counting(oracle)
+    t0 = time.monotonic()
+    gold_mask, _ = sem_join_gold(left, right, JOIN_LX, gold_oracle)
+    t_gold = time.monotonic() - t0
+    want = _pairs(gold_mask)
+    emit("join/gold", 1e6 * t_gold / n_pairs, pairs=n_pairs,
+         oracle_prompts=gold_oracle.prompts, matches=len(want))
+
+    # -- pairwise cascade ---------------------------------------------------
+    cas_oracle = _Counting(oracle)
+    t0 = time.monotonic()
+    cas_mask, cas_st = sem_join_cascade(
+        left, right, JOIN_LX, cas_oracle, emb,
+        recall_target=RECALL_TARGET, precision_target=0.9,
+        sample_size=400, seed=7)
+    t_cas = time.monotonic() - t0
+    r_cas, p_cas = set_metrics(_pairs(cas_mask), want)
+    emit("join/cascade", 1e6 * t_cas / n_pairs,
+         oracle_prompts=cas_oracle.prompts, recall=round(r_cas, 3),
+         precision=round(p_cas, 3), plan=cas_st["plan"])
+
+    # -- block path ---------------------------------------------------------
+    blk_oracle = _Counting(oracle)
+    t0 = time.monotonic()
+    blk_mask, blk_st = sem_join_block(
+        left, right, JOIN_LX, blk_oracle, emb,
+        recall_target=RECALL_TARGET, precision_target=0.9,
+        sample_size=400, probe_size=64, seed=7)
+    t_blk = time.monotonic() - t0
+    r_blk, p_blk = set_metrics(_pairs(blk_mask), want)
+    speedup = cas_oracle.prompts / max(blk_oracle.prompts, 1)
+    emit("join/block", 1e6 * t_blk / n_pairs,
+         oracle_prompts=blk_oracle.prompts, recall=round(r_blk, 3),
+         precision=round(p_blk, 3), prompt_speedup=round(speedup, 1),
+         candidate_pairs=blk_st["candidate_pairs"],
+         block_prompts=blk_st["block_prompts"],
+         pruned=blk_st["pairs_pruned_by_inference"],
+         match_classes=blk_st["match_classes"])
+
+    # -- record identity: strategy="cascade" == historical dispatch ---------
+    il, ir, iworld, *_ = synth.make_entity_world(40, 24, 8, seed=3)
+    outs = []
+    for strategy in (None, "cascade"):
+        sess = Session(oracle=synth.SimulatedModel(iworld, "oracle"),
+                       embedder=synth.SimulatedEmbedder(iworld),
+                       sample_size=60, seed=0)
+        out = SemFrame(il, sess).sem_join(
+            ir, JOIN_LX, recall_target=RECALL_TARGET, precision_target=0.9,
+            strategy=strategy)
+        outs.append(out.records)
+    identical = outs[0] == outs[1]
+    emit("join/cascade_identity", 0.0, identical_records=identical)
+
+    with open("BENCH_join.json", "w") as fh:
+        json.dump({
+            "pairs": n_pairs, "matches": len(want),
+            "recall_target": RECALL_TARGET,
+            "gold_prompts": gold_oracle.prompts,
+            "cascade": {"prompts": cas_oracle.prompts,
+                        "recall": round(r_cas, 4),
+                        "precision": round(p_cas, 4),
+                        "wall_s": round(t_cas, 3), "plan": cas_st["plan"]},
+            "block": {"prompts": blk_oracle.prompts,
+                      "recall": round(r_blk, 4),
+                      "precision": round(p_blk, 4),
+                      "wall_s": round(t_blk, 3),
+                      "candidate_pairs": blk_st["candidate_pairs"],
+                      "coverage_est": blk_st["coverage_est"],
+                      "block_prompts": blk_st["block_prompts"],
+                      "block_fallbacks": blk_st["block_fallbacks"],
+                      "pairs_pruned_by_inference":
+                          blk_st["pairs_pruned_by_inference"],
+                      "match_classes": blk_st["match_classes"],
+                      "block_agreement": blk_st["block_agreement"]},
+            "prompt_speedup_vs_cascade": round(speedup, 2),
+            "cascade_identity": identical,
+        }, fh, indent=2)
+
+    assert r_blk >= RECALL_TARGET, (
+        f"block join recall {r_blk:.3f} below target {RECALL_TARGET}")
+    assert speedup >= MIN_SPEEDUP, (
+        f"block join spent {blk_oracle.prompts} prompts vs cascade "
+        f"{cas_oracle.prompts}: {speedup:.1f}x < {MIN_SPEEDUP}x")
+    assert identical, (
+        "strategy='cascade' changed records vs the default dispatch")
+
+
+if __name__ == "__main__":
+    run()

@@ -10,10 +10,11 @@ import time
 
 from benchmarks import (adapt_bench, audit_bench, engine_bench,
                         fig6_filter_tradeoff, fig8_groupby, fig9_guarantees,
-                        index_bench, kernels_bench, pipeline_bench,
-                        quant_bench, serve_bench, shard_bench, stream_bench,
-                        table2_factcheck, table3_biodex, table5_join_plans,
-                        table6_7_ranking, trace_bench)
+                        index_bench, join_bench, kernels_bench,
+                        pipeline_bench, quant_bench, serve_bench,
+                        shard_bench, stream_bench, table2_factcheck,
+                        table3_biodex, table5_join_plans, table6_7_ranking,
+                        trace_bench)
 
 MODULES = {
     "table2": table2_factcheck,
@@ -34,6 +35,7 @@ MODULES = {
     "trace": trace_bench,
     "adapt": adapt_bench,
     "audit": audit_bench,
+    "join": join_bench,
 }
 
 

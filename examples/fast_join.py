@@ -1,0 +1,67 @@
+"""Fast semantic joins: blocking -> block prompts -> transitivity pruning.
+
+An entity-resolution join ("which mention refers to which entity record?")
+is an *equivalence* predicate, the regime where the block-join path shines:
+each left row retrieves only a top-k candidate block from the retrieval
+layer, candidates are judged 16 pairs per structured prompt, and confirmed
+verdicts propagate through a union-find transitivity closure so implied
+pairs never reach the oracle at all.  The per-stage ledger below shows
+where the prompt budget actually goes.
+
+    PYTHONPATH=src python examples/fast_join.py
+"""
+from repro.core.backends import synth
+from repro.core.frame import SemFrame, Session
+
+N_LEFT, N_RIGHT, N_CLASSES = 120, 80, 16
+LX = "the {mention} refers to the same entity as {entity:right}"
+
+left, right, world, oracle, proxy, embedder = synth.make_entity_world(
+    N_LEFT, N_RIGHT, N_CLASSES, seed=4)
+sess = Session(oracle=oracle, embedder=embedder, sample_size=150)
+mentions = SemFrame(left, sess)
+
+matched = mentions.sem_join(right, LX, recall_target=0.9,
+                            precision_target=0.9, strategy="block")
+st = mentions.last_stats()
+
+grid = N_LEFT * N_RIGHT
+print(f"matched rows:  {len(matched)}  (pair grid {grid})")
+print()
+print("stage 1 - blocking (retrieval layer)")
+print(f"  candidate pairs: {st['candidate_pairs']}  "
+      f"(k={st['candidate_k']} per left row, "
+      f"{grid - st['candidate_pairs']} pairs never considered)")
+print(f"  coverage est:    {st['coverage_est']}  (index: {st['index']})")
+print()
+print("stage 2 - block prompts (16 pairs per oracle prompt)")
+print(f"  block prompts:   {st['block_prompts']}  "
+      f"({st['pairs_block_judged']} pairs judged, "
+      f"{st['block_retries']} strict retries, "
+      f"{st['block_fallbacks']} pairwise fallbacks)")
+print(f"  block agreement: {st['block_agreement']}  "
+      f"(calibration blocks re-judged: {st['blocks_rejudged']})")
+print()
+print("stage 3 - transitivity inference")
+print(f"  equivalence:     {st['equivalence']}  "
+      f"({st['match_classes']} match classes)")
+print(f"  pruned:          {st['pairs_pruned_by_inference']} candidate "
+      f"verdicts implied without prompting")
+print(f"  recovered:       {st['pairs_recovered_by_inference']} blocking "
+      f"misses restored by the closure")
+print()
+
+truth = {(i, j) for i in range(N_LEFT) for j in range(N_RIGHT)
+         if world.join_truth.get((left[i]["id"], right[j]["id"]))}
+have = {(rec["id"], rec["right_id"]) for rec in matched.records}
+hits = sum(1 for (i, j) in truth
+           if (left[i]["id"], right[j]["id"]) in have)
+recall = hits / max(len(truth), 1)
+precision = sum(1 for pair in have
+                if world.join_truth.get(pair)) / max(len(have), 1)
+
+print("ledger")
+print(f"  oracle prompts:  {st['lm_calls']}  vs gold {grid}  "
+      f"-> {grid / max(st['lm_calls'], 1):.0f}x fewer")
+print(f"  recall vs gold:  {recall:.3f}  (target 0.9, "
+      f"precision {precision:.3f})")

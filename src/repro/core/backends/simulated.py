@@ -146,13 +146,37 @@ class SimulatedModel:
             out.append(rng.random() < pa)
         return np.asarray(out, bool)
 
+    def _block_verdicts(self, prompt: str) -> str:
+        """Answer a numbered multi-pair join block prompt: one
+        '<number>: YES/NO' line per numbered candidate-pair line, judged
+        from join_truth with per-line flip noise."""
+        lines_out = []
+        for line in prompt.splitlines():
+            m = re.match(r"\s*(\d+)\.\s", line)
+            if not m:
+                continue
+            ids = ID_RE.findall(line)
+            t = False
+            for a in range(len(ids) - 1):
+                if self.w.join_truth.get((ids[a], ids[a + 1])) or \
+                   self.w.join_truth.get((ids[a + 1], ids[a])):
+                    t = True
+                    break
+            rng = _hash_rng("blk", self.role, self.seed, line)
+            if self.flip and rng.random() < self.flip:
+                t = not t
+            lines_out.append(f"{m.group(1)}: {'YES' if t else 'NO'}")
+        return "\n".join(lines_out)
+
     # -- generation ---------------------------------------------------------
     def generate(self, prompts):
         out = []
         for p in prompts:
             ids = self._ids(p)
             rng = _hash_rng("gen", self.seed, p)
-            if "category label" in p and ids:
+            if "numbered candidate pair" in p:
+                out.append(self._block_verdicts(p))
+            elif "category label" in p and ids:
                 cls = [self._class_of(i) for i in ids]
                 cls = [c for c in cls if c is not None]
                 c = int(np.bincount(cls).argmax()) if cls else 0

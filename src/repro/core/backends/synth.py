@@ -73,6 +73,41 @@ def make_join_world(n_left: int, n_right: int, *, labels_per_left: int = 2,
     return left, right, world, oracle, proxy, SimulatedEmbedder(world)
 
 
+def make_entity_world(n_left: int, n_right: int, n_classes: int, *,
+                      sim_correlation: float = 0.85, seed: int = 0,
+                      cfg: SimConfig | None = None):
+    """Entity-resolution-like join with *equivalence* structure: every left
+    and right record belongs to one of ``n_classes`` latent entities, and
+    the join predicate is "same entity" — so matches are complete bipartite
+    within a class and transitivity holds exactly (the regime where
+    block-join verdict inference pays).  Embeddings correlate with the
+    entity via ``sim_correlation``.  Returns
+    (left, right, world, oracle, proxy, embedder)."""
+    cfg = cfg or SimConfig(sim_correlation=sim_correlation)
+    world = SimulatedWorld(cfg, seed=seed)
+    rng = np.random.default_rng(seed)
+    right = []
+    r_class = rng.integers(0, n_classes, size=n_right)
+    for j in range(n_right):
+        rid = f"ent{j}"
+        world.class_of[rid] = int(r_class[j])
+        right.append({"id": rid, "entity": f"entity record {j} {tag(rid)}"})
+    left = []
+    for i in range(n_left):
+        lid = f"mention{i}"
+        c = int(rng.integers(0, n_classes))
+        world.class_of[lid] = c
+        mates = [j for j in range(n_right) if int(r_class[j]) == c]
+        for j in mates:
+            world.join_truth[(lid, f"ent{j}")] = True
+        if mates:
+            world.right_key_of[lid] = f"ent{mates[0]}"
+        left.append({"id": lid, "mention": f"mention {i} {tag(lid)}"})
+    oracle = SimulatedModel(world, "oracle")
+    proxy = SimulatedModel(world, "proxy")
+    return left, right, world, oracle, proxy, SimulatedEmbedder(world)
+
+
 def make_rank_world(n: int, *, compare_noise: float = 0.08, seed: int = 0,
                     topic_for_query: bool = True):
     """HellaSwag-bench-like: items with scalar ground-truth values; noisy

@@ -108,14 +108,16 @@ class SemFrame:
                  recall_target: float | None = None,
                  precision_target: float | None = None,
                  delta: float | None = None, project_fn: Callable | None = None,
-                 force_plan: str | None = None) -> "SemFrame":
+                 force_plan: str | None = None,
+                 strategy: str | None = None) -> "SemFrame":
         right = other.records if isinstance(other, SemFrame) else list(other)
         lx = as_langex(langex)
         lx.validate(self.columns, set(right[0].keys()) if right else set())
         node = PN.Join(self._scan(), PN.Scan(right), langex,
                        recall_target=recall_target,
                        precision_target=precision_target, delta=delta,
-                       project_fn=project_fn, force_plan=force_plan)
+                       project_fn=project_fn, force_plan=force_plan,
+                       strategy=strategy)
         return self._child(self._execute(node))
 
     # -- sem_topk ---------------------------------------------------------
@@ -235,14 +237,16 @@ class LazySemFrame:
     def sem_join(self, other, langex, *, recall_target: float | None = None,
                  precision_target: float | None = None,
                  delta: float | None = None, project_fn: Callable | None = None,
-                 force_plan: str | None = None) -> "LazySemFrame":
+                 force_plan: str | None = None,
+                 strategy: str | None = None) -> "LazySemFrame":
         right = self._right_plan(other)
         as_langex(langex).validate(self.columns, right.columns())
         return self._child(PN.Join(self.plan, right, langex,
                                    recall_target=recall_target,
                                    precision_target=precision_target,
                                    delta=delta, project_fn=project_fn,
-                                   force_plan=force_plan))
+                                   force_plan=force_plan,
+                                   strategy=strategy))
 
     def sem_topk(self, langex, k: int, *, algorithm: str = "quickselect",
                  pivot_query: str | None = None,

@@ -27,6 +27,12 @@ class Field:
 @dataclasses.dataclass(frozen=True)
 class Langex:
     template: str
+    # declared predicate structure: an equivalence predicate ("same entity",
+    # "refer to the same X") is symmetric + transitive, so the block-join
+    # path may propagate verdicts through transitivity without prompting.
+    # Default False: undeclared predicates are only trusted after the
+    # calibration-sample structure test (optimizer.blocks.detect_equivalence)
+    equivalence: bool = False
 
     @property
     def fields(self) -> list[Field]:

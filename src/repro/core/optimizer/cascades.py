@@ -114,6 +114,58 @@ def estimate_plan(name: str, scores: np.ndarray, sample: stats.Sample,
                         scores=scores, sample=sample, label_of=label_of)
 
 
+@dataclasses.dataclass
+class BlockCalibration:
+    """Outcome of block-judging a calibration sample with a pairwise-gold
+    agreement check (the guarantee machinery's bridge to block verdicts:
+    thresholds are only calibrated on block labels that demonstrably track
+    the pairwise oracle on this predicate)."""
+
+    labels: np.ndarray         # bool [S] — final labels (block or pairwise)
+    agreement: float           # block-vs-pairwise agreement on checked pairs
+    checked: int               # pairs re-judged pairwise for the check
+    blocks_rejudged: int       # calibration blocks whose agreement fell
+                               # below the floor (all labels replaced)
+    block_prompts: int
+    block_fallbacks: int
+
+
+def block_labeled_sample(pairs, block_judge, pairwise_fn, *, rng,
+                         check_fraction: float = 0.25,
+                         agreement_floor: float = 0.9) -> BlockCalibration:
+    """Label a calibration sample of candidate ``pairs`` with block prompts,
+    verifying each calibration block against pairwise gold.
+
+    Every block contributes ``ceil(check_fraction * |block|)`` uniformly
+    sampled pairs that are re-judged pairwise; a block whose checked labels
+    agree below ``agreement_floor`` has *all* its labels replaced by
+    pairwise judgments (the block oracle is not trusted for thresholds on
+    that region).  ``pairwise_fn(pairs) -> bool array`` is the gold pairwise
+    judge (it may serve cached labels)."""
+    pairs = [(int(i), int(j)) for i, j in pairs]
+    labels = np.asarray(block_judge.judge_pairs(pairs), bool).copy()
+    bs = block_judge.block_size
+    agree = checked = rejudged = 0
+    for s in range(0, len(pairs), bs):
+        blk = pairs[s:s + bs]
+        n_check = min(len(blk), max(1, int(np.ceil(check_fraction * len(blk)))))
+        pick = rng.choice(len(blk), size=n_check, replace=False)
+        gold = np.asarray(pairwise_fn([blk[int(p)] for p in pick]), bool)
+        ok = int((labels[s + pick] == gold).sum())
+        agree += ok
+        checked += n_check
+        if ok / n_check < agreement_floor:
+            # the block oracle disagrees with pairwise gold here: replace
+            # the whole calibration block with pairwise labels
+            labels[s:s + len(blk)] = np.asarray(pairwise_fn(blk), bool)
+            rejudged += 1
+    return BlockCalibration(
+        labels=labels, agreement=(agree / checked if checked else 1.0),
+        checked=checked, blocks_rejudged=rejudged,
+        block_prompts=block_judge.stats.block_prompts,
+        block_fallbacks=block_judge.stats.block_fallbacks)
+
+
 def execute_plan(plan: PlanEstimate, oracle_fn: Callable[[np.ndarray], np.ndarray]) -> CascadeResult:
     """Run the cascade decision rule of an already-estimated plan."""
     a = plan.scores

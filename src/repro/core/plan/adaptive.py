@@ -82,7 +82,8 @@ class AdaptivePolicy:
 class ReplanEvent:
     """One mid-query decision, for metrics and ``explain_analyze``."""
 
-    kind: str    # "reorder_filters" | "switch_retrieval" | "resize_fragments" | "drift"
+    kind: str    # "reorder_filters" | "switch_retrieval" | "resize_fragments"
+                 # | "switch_join_strategy" | "drift"
     node: str    # label of the node the decision was about
     reason: str
 
@@ -263,6 +264,30 @@ class AdaptivePlanExecutor(PartitionedExecutor):
                     f"{len(records)} observed rows")
                 part = dataclasses.replace(part, n_partitions=P)
         return super()._split(records, part, fanout=fanout)
+
+    # -- join strategy re-choice on observed cardinalities -----------------
+    def _join_dispatch(self, node: N.Join, left, right):
+        """Re-resolve an optimizer-chosen join strategy when the observed
+        pair grid drifts past the threshold from what rule 4b priced.  Only
+        ``strategy_auto`` nodes re-choose — a user pin stays fixed — and the
+        switch is the same class of change the optimizer makes at plan time
+        (both sides honor the node's (recall, precision, delta) targets)."""
+        if (node.strategy_auto and node.strategy in ("block", "cascade")
+                and len(left) >= self.policy.min_rows):
+            from repro.core.plan.optimize import resolve_join_strategy
+            n1_est = estimate_cardinality(N.plain(node.left))
+            n2_est = estimate_cardinality(N.plain(node.right))
+            pairs_est = max(n1_est * n2_est, 1.0)
+            pairs_obs = max(len(left) * len(right), 1)
+            if drift_ratio(pairs_est, pairs_obs) > self.policy.drift_threshold:
+                chosen = resolve_join_strategy(len(left), len(right))
+                if chosen != node.strategy:
+                    self._replan(
+                        "switch_join_strategy", node,
+                        f"pair grid est ~{pairs_est:.0f} vs {pairs_obs} "
+                        f"observed: {node.strategy} -> {chosen}")
+                    node = dataclasses.replace(node, strategy=chosen)
+        return super()._join_dispatch(node, left, right)
 
     # -- retrieval switching on observed corpus size -----------------------
     def _corpus_index(self, child, texts, column, *, kind="auto", nprobe=None,

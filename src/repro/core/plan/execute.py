@@ -297,20 +297,41 @@ class PlanExecutor:
         return out
 
     # -- join --------------------------------------------------------------
-    def _run_join(self, node: N.Join) -> list[dict]:
-        left = self.run(node.left)
-        right = self.run(node.right)
-        if node.is_cascade:
+    def _join_dispatch(self, node: N.Join, left, right):
+        """Strategy dispatch shared by this executor and the adaptive
+        subclass: ``strategy=None`` reproduces the historical dispatch
+        bit-identically (cascade iff targets are set, else prefilter/gold);
+        ``"cascade"`` forces the pairwise cascade; ``"block"`` runs the
+        three-stage fast path; ``"auto"`` resolves through the optimizer's
+        cost model at observed cardinalities."""
+        strategy = node.strategy
+        if strategy == "auto":
+            from repro.core.plan.optimize import resolve_join_strategy
+            strategy = resolve_join_strategy(len(left), len(right))
+        if strategy == "block":
+            if self.embedder is None:
+                raise ValueError("block sem_join needs an embedder in the Session")
+            return _join.sem_join_block(
+                left, right, node.langex, self.oracle, self.embedder,
+                equivalence=node.langex.equivalence or None,
+                index_builder=lambda texts, nq: self._build_index(
+                    texts, n_queries=nq),
+                **self._targets(node))
+        if strategy == "cascade" or (strategy is None and node.is_cascade):
             if self.embedder is None:
                 raise ValueError("optimized sem_join needs an embedder in the Session")
-            mask, stats = _join.sem_join_cascade(
+            return _join.sem_join_cascade(
                 left, right, node.langex, self.oracle, self.embedder,
                 project_fn=node.project_fn, force_plan=node.force_plan,
                 **self._targets(node))
-        elif node.prefilter_k:
-            mask, stats = self._join_prefiltered(node, left, right)
-        else:
-            mask, stats = _join.sem_join_gold(left, right, node.langex, self.oracle)
+        if node.prefilter_k:
+            return self._join_prefiltered(node, left, right)
+        return _join.sem_join_gold(left, right, node.langex, self.oracle)
+
+    def _run_join(self, node: N.Join) -> list[dict]:
+        left = self.run(node.left)
+        right = self.run(node.right)
+        mask, stats = self._join_dispatch(node, left, right)
         out = []
         n1, n2 = mask.shape
         for i in range(n1):

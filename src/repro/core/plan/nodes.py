@@ -183,6 +183,13 @@ class Join(LogicalNode):
     force_plan: str | None = None
     prefilter_k: int | None = None  # sim-join candidate prefilter (optimizer)
     selectivity: float | None = None  # pair-grid match rate (stats feedback)
+    # fast-join strategy: None = today's dispatch (cascade iff targets set),
+    # "cascade" = force the pairwise cascade, "block" = IVF blocking +
+    # block prompts + transitivity inference, "auto" = let the optimizer's
+    # cost model pick ("block" vs "cascade")
+    strategy: str | None = None
+    strategy_auto: bool = False  # strategy chosen by the optimizer, so the
+                                 # adaptive executor may re-choose at run time
 
     def __post_init__(self):
         self.langex = _lx(self.langex)
@@ -195,7 +202,7 @@ class Join(LogicalNode):
         return self.left.columns() | {f"right_{c}" for c in self.right.columns()}
 
     def label(self) -> str:
-        mode = "cascade" if self.is_cascade else "gold"
+        mode = self.strategy or ("cascade" if self.is_cascade else "gold")
         pf = f", prefilter_k={self.prefilter_k}" if self.prefilter_k else ""
         sel = f", sel~{self.selectivity:.3f}" if self.selectivity is not None else ""
         return f"Join[{mode}{pf}{sel}] {self.langex.template!r}"

@@ -24,6 +24,12 @@ smaller bill and only fire when the cost model says so):
                                 sem_sim_join candidate prefilter (top
                                 ``prefilter_frac`` of right rows per left
                                 row) when the session has an embedder.
+  4b. ``choose_join_strategy`` — a ``strategy="auto"`` join is priced both
+                                ways — IVF blocking + B-pair block prompts
+                                + transitivity inference vs the pairwise
+                                cascade — and the winner is installed on the
+                                node (``strategy_auto`` marks it
+                                re-choosable by the adaptive executor).
   5. ``choose_retrieval``     — every Search/SimJoin node with
                                 ``index_kind="auto"`` gets an exact or IVF
                                 retrieval backend by byte-aware cost (build
@@ -146,6 +152,27 @@ def estimate_cardinality(node: N.LogicalNode) -> float:
     return estimate_cardinality(node.children()[0]) if node.children() else 0.0
 
 
+def block_join_cost(n1: float, n2: float) -> float:
+    """Oracle-equivalent cost of the block-join path: the mid region of an
+    O(n1*k) candidate set amortized over B-pair block prompts, plus the
+    pairwise coverage probes / agreement checks and the calibration bill."""
+    from repro.core.optimizer.blocks import DEFAULT_BLOCK_SIZE, blocking_k
+    k = min(blocking_k(int(n2)), max(int(n2), 1))
+    n_cand = n1 * k
+    return 0.1 * n_cand / DEFAULT_BLOCK_SIZE + 0.02 * n1 + 48.0
+
+
+def cascade_join_cost(n1: float, n2: float) -> float:
+    return 0.1 * n1 * n2 + n1  # sample + mid region + projection
+
+
+def resolve_join_strategy(n1: float, n2: float) -> str:
+    """The cost model's pick for ``strategy="auto"`` joins: blocking +
+    block prompts when they beat the pairwise cascade on the pair grid."""
+    return "block" if block_join_cost(n1, n2) < cascade_join_cost(n1, n2) \
+        else "cascade"
+
+
 def estimate_cost(node: N.LogicalNode) -> float:
     """Estimated oracle-equivalent LM calls for this node alone."""
     if isinstance(node, N.Scan) or isinstance(node, N.SimJoin):
@@ -156,8 +183,13 @@ def estimate_cost(node: N.LogicalNode) -> float:
     if isinstance(node, N.Join):
         n1 = estimate_cardinality(node.left)
         n2 = estimate_cardinality(node.right)
-        if node.is_cascade:
-            return 0.1 * n1 * n2 + n1  # sample + mid region + projection
+        strat = node.strategy
+        if strat == "auto":
+            strat = resolve_join_strategy(n1, n2)
+        if strat == "block":
+            return block_join_cost(n1, n2)
+        if strat == "cascade" or (strat is None and node.is_cascade):
+            return cascade_join_cost(n1, n2)
         if node.prefilter_k:
             return n1 * min(node.prefilter_k, n2)
         return n1 * n2
@@ -323,6 +355,7 @@ class PlanOptimizer:
                 break
         plan = self._reorder_filters(plan)
         plan = self._transform(plan, self._inject_sim_prefilter)
+        plan = self._transform(plan, self._choose_join_strategy)
         plan = self._transform(plan, self._choose_retrieval)
         plan = self._transform(plan, self._plan_partitions)
         return plan
@@ -506,6 +539,23 @@ class PlanOptimizer:
                 f"(sel={', '.join(f'{s:.2f}' for s in sels)})"))
         return rebuilt
 
+    # -- rule 4b: block-join vs pairwise-cascade strategy ------------------
+    def _choose_join_strategy(self, node):
+        """Price IVF blocking + block prompts against the pairwise cascade
+        for ``strategy="auto"`` joins and install the winner (visible in
+        ``explain_plan`` via the node label and the rewrite list)."""
+        if not isinstance(node, N.Join) or node.strategy != "auto":
+            return None
+        n1 = estimate_cardinality(node.left)
+        n2 = estimate_cardinality(node.right)
+        chosen = resolve_join_strategy(n1, n2)
+        self.applied.append(AppliedRewrite(
+            "choose_join_strategy",
+            f"join over ~{n1 * n2:.0f} pairs -> {chosen} (block "
+            f"~{block_join_cost(n1, n2):.0f} oracle units vs pairwise "
+            f"cascade ~{cascade_join_cost(n1, n2):.0f})"))
+        return dataclasses.replace(node, strategy=chosen, strategy_auto=True)
+
     # -- rule 5: cost-based exact vs IVF retrieval -------------------------
     def _choose_retrieval(self, node):
         if isinstance(node, N.Search):
@@ -672,8 +722,11 @@ class PlanOptimizer:
                               "gather", P)
 
         if isinstance(node, N.Join):
-            if node.is_cascade:  # cascade joins calibrate on a global
-                return None      # pair sample: keep them single-fragment
+            if node.is_cascade or node.strategy:
+                # cascade joins calibrate on a global pair sample, and the
+                # block path owns its own O(n1*k) candidate layout: both
+                # stay single-fragment
+                return None
             P = self._partition_count(estimate_cardinality(node.left))
             if P < 2:
                 return None
@@ -705,7 +758,8 @@ class PlanOptimizer:
 
     # -- rule 4: sim-join prefilter ----------------------------------------
     def _inject_sim_prefilter(self, node):
-        if not isinstance(node, N.Join) or node.is_cascade or node.prefilter_k:
+        if not isinstance(node, N.Join) or node.is_cascade \
+                or node.prefilter_k or node.strategy:
             return None
         if self.session.embedder is None or not node.langex.is_binary:
             return None

@@ -25,7 +25,9 @@ from repro.obs.stats_store import StatsStore, node_fingerprint
 from repro.obs.trace import Span, Tracer
 
 _OBS_COUNTERS = ("oracle_calls", "proxy_calls", "embed_calls", "cache_hits",
-                 "scanned_bytes")
+                 "scanned_bytes", "candidate_pairs",
+                 "pairs_pruned_by_inference", "block_prompts",
+                 "block_fallbacks")
 
 
 @dataclasses.dataclass
@@ -59,6 +61,15 @@ class NodeReport:
             cols.append(f"bytes {obs['scanned_bytes']}")
         if obs.get("tau_plus") is not None:
             cols.append(f"tau {obs['tau_plus']:.2f}/{obs['tau_minus']:.2f}")
+        if obs.get("candidate_pairs"):
+            cols.append(f"cand {obs['candidate_pairs']}")
+        if obs.get("block_prompts"):
+            blk = f"blocks {obs['block_prompts']}"
+            if obs.get("block_fallbacks"):
+                blk += f"(-{obs['block_fallbacks']} fb)"
+            cols.append(blk)
+        if obs.get("pairs_pruned_by_inference"):
+            cols.append(f"pruned {obs['pairs_pruned_by_inference']}")
         if self.audit is not None:
             # the audited guarantee next to the calibrated thresholds: CI
             # bounds on live precision/recall from gold re-judgments

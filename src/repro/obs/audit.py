@@ -260,6 +260,7 @@ class ViolationEvent:
     """A CI lower bound fell below its declared target."""
 
     kind: str                  # "precision" | "recall" | "recall_at_k"
+                               # | "block_agreement"
     operator: str
     fingerprint: str
     template: str | None
@@ -342,6 +343,44 @@ class _CascadeAccount:
                     "hi": min((j + a * p_hi)
                               / max(j + a * p_hi + r * m_lo, 1e-12), 1.0),
                     "n": self.rej_n}
+        return out
+
+
+@dataclasses.dataclass
+class _BlockAccount:
+    """Agreement of block-prompt verdicts with the pairwise gold oracle.
+
+    The block-join path decides most pairs through multi-pair structured
+    prompts; its guarantee rests on block verdicts tracking what the same
+    oracle would answer pairwise.  Sampled block verdicts are re-judged
+    pairwise and the agreement rate gets a CI against the operator's
+    declared agreement target."""
+
+    operator: str
+    fingerprint: str
+    template: str
+    match_token: str
+    agreement_target: float
+    n: int = 0                 # block verdicts re-judged pairwise
+    agree: int = 0             # ... matching the pairwise gold verdict
+    pairs_seen: int = 0        # block-judged pairs observed (population)
+    audited: int = 0
+    violations: int = 0
+
+    def reset_window(self) -> None:
+        self.n = self.agree = 0
+
+    def estimates(self, policy: AuditPolicy) -> dict:
+        out: dict = {"operator": self.operator,
+                     "fingerprint": self.fingerprint,
+                     "template": self.template,
+                     "agreement_target": self.agreement_target,
+                     "pairs_seen": self.pairs_seen, "audited": self.audited,
+                     "violations": self.violations, "agreement": None}
+        if self.n > 0:
+            lo, hi = policy.interval(self.agree, self.n)
+            out["agreement"] = {"point": self.agree / self.n,
+                                "lo": lo, "hi": hi, "n": self.n}
         return out
 
 
@@ -429,6 +468,26 @@ def emit_search(index, queries, scores, ids, k, *, vectors, n_cut,
         return 0
 
 
+def emit_block_join(operator: str, template, pairs, verdicts, prompt_fn, *,
+                    agreement_target: float) -> int:
+    """Called by the block-join path with the pairs it decided through block
+    prompts (``pairs``/``verdicts`` aligned); the auditor re-judges a
+    budgeted sample of them *pairwise* asynchronously and tracks the
+    block-vs-pairwise agreement CI against ``agreement_target``.
+    ``prompt_fn(indices) -> prompts`` renders the pairwise prompts for the
+    sampled positions only."""
+    aud = current_auditor()
+    if aud is None or not len(pairs):
+        return 0
+    try:
+        return aud.observe_block_join(operator, template, pairs, verdicts,
+                                      prompt_fn,
+                                      agreement_target=agreement_target)
+    except Exception:
+        log.warning("audit emit_block_join failed", exc_info=True)
+        return 0
+
+
 # ---------------------------------------------------------------------------
 # The auditor
 # ---------------------------------------------------------------------------
@@ -466,6 +525,7 @@ class GuaranteeAuditor:
         self._rng = np.random.default_rng(self.policy.seed)
         self._cascades: dict[str, _CascadeAccount] = {}
         self._searches: dict[str, _SearchAccount] = {}
+        self._blocks: dict[str, _BlockAccount] = {}
         self._emissions: dict[str, dict] = {}   # per-tenant continuous-query
         self.violations: deque[ViolationEvent] = deque(maxlen=256)
         self.violation_counts: dict[str, int] = {}
@@ -547,6 +607,35 @@ class GuaranteeAuditor:
         self._enqueue(job)
         return len(rows)
 
+    def observe_block_join(self, operator: str, template, pairs, verdicts,
+                           prompt_fn, *, agreement_target: float) -> int:
+        template = str(getattr(template, "template", template))
+        verdicts = np.asarray(verdicts, bool).ravel()
+        n_pairs = len(verdicts)
+        if n_pairs == 0:
+            return 0
+        fp = predicate_fingerprint(operator, template)
+        want = math.ceil(self.policy.sample_fraction * n_pairs)
+        with self._lock:
+            acct = self._blocks.get(fp)
+            if acct is None:
+                acct = self._blocks[fp] = _BlockAccount(
+                    operator=operator, fingerprint=fp, template=template,
+                    match_token=template_match_token(template),
+                    agreement_target=agreement_target)
+            acct.agreement_target = agreement_target
+            acct.pairs_seen += n_pairs
+            granted = self.budgeter.take(want)
+            if granted <= 0:
+                return 0
+            sel = self._rng.choice(n_pairs, size=min(granted, n_pairs),
+                                   replace=False)
+        prompts = list(prompt_fn(sel))
+        if not prompts:
+            return 0
+        self._enqueue(("block_join", fp, prompts, verdicts[sel].tolist()))
+        return len(prompts)
+
     def observe_emission(self, *, tenant: str, rows: int, added: int,
                          error: bool = False) -> None:
         """Continuous-query emission accounting (per-tenant audit series);
@@ -615,6 +704,22 @@ class GuaranteeAuditor:
                 events = self._check_cascade(acct)
             for ev in events:
                 self._fire(ev)
+        elif job[0] == "block_join":
+            _, fp, prompts, block_v = job
+            labels, _ = self._oracle.predicate(prompts)
+            labels = np.asarray(labels, bool)
+            agree = int((labels == np.asarray(block_v, bool)).sum())
+            event = None
+            with self._lock:
+                acct = self._blocks.get(fp)
+                if acct is None:
+                    return
+                acct.n += len(prompts)
+                acct.agree += agree
+                acct.audited += len(prompts)
+                event = self._check_block(acct)
+            if event is not None:
+                self._fire(event)
         elif job[0] == "search":
             (_, key, recall_target, vectors, q, scores, ids, k, n_cut) = job
             n, hits = self._exact_rescan(vectors, q, scores, ids, k, n_cut)
@@ -696,6 +801,24 @@ class GuaranteeAuditor:
             acct.reset_window()
         return events
 
+    def _check_block(self, acct: _BlockAccount) -> ViolationEvent | None:
+        """Lock held.  Fires when the CI lower bound of block-vs-pairwise
+        agreement drops below the operator's agreement target."""
+        if acct.n < self.policy.min_samples:
+            return None
+        lo, _ = self.policy.interval(acct.agree, acct.n)
+        if lo >= acct.agreement_target:
+            return None
+        ev = ViolationEvent(
+            kind="block_agreement", operator=acct.operator,
+            fingerprint=acct.fingerprint, template=acct.template,
+            match_token=acct.match_token, observed=acct.agree / acct.n,
+            lower=lo, target=acct.agreement_target, n=acct.n,
+            details={"pairs_seen": acct.pairs_seen, "audited": acct.audited})
+        acct.violations += 1
+        acct.reset_window()
+        return ev
+
     def _check_search(self, acct: _SearchAccount) -> ViolationEvent | None:
         if acct.n < self.policy.min_search_samples:
             return None
@@ -740,8 +863,13 @@ class GuaranteeAuditor:
                         if fingerprint is None or a.fingerprint == fingerprint]
             searches = [a.estimates(self.policy)
                         for a in self._searches.values()]
+            block_joins = [a.estimates(self.policy)
+                           for a in self._blocks.values()
+                           if fingerprint is None
+                           or a.fingerprint == fingerprint]
             return {
                 "cascades": cascades, "searches": searches,
+                "block_joins": block_joins,
                 "emissions": {t: dict(e) for t, e in self._emissions.items()},
                 "violations": dict(self.violation_counts),
                 "audit_calls": self.stats.audit_calls,
@@ -772,7 +900,7 @@ class GuaranteeAuditor:
         granted.set_total(rep["budget"]["denied"], outcome="denied")
         viol = registry.counter("repro_guarantee_violations_total",
                                 "guarantee CI violations", ("kind",))
-        for kind in ("precision", "recall", "recall_at_k"):
+        for kind in ("precision", "recall", "recall_at_k", "block_agreement"):
             viol.set_total(rep["violations"].get(kind, 0), kind=kind)
         bound = registry.gauge("repro_audit_ci_lower_bound",
                                "CI lower bound of the audited guarantee",
@@ -802,6 +930,15 @@ class GuaranteeAuditor:
             bound.set(ci["lo"], **labels)
             point.set(ci["point"], **labels)
             nsamp.set(ci["n"], **labels)
+        for est in rep["block_joins"]:
+            ci = est["agreement"]
+            if ci is None:
+                continue
+            labels = {"kind": "block_agreement", "operator": est["operator"],
+                      "fingerprint": est["fingerprint"]}
+            bound.set(ci["lo"], **labels)
+            point.set(ci["point"], **labels)
+            nsamp.set(ci["n"], **labels)
         if rep["emissions"]:
             em = registry.counter("repro_audit_emissions_total",
                                   "continuous-query emissions observed",
@@ -820,6 +957,8 @@ class GuaranteeAuditor:
                                 for a in self._cascades.values()],
                    "searches": [dataclasses.asdict(a)
                                 for a in self._searches.values()],
+                   "block_joins": [dataclasses.asdict(a)
+                                   for a in self._blocks.values()],
                    "violation_counts": dict(self.violation_counts)}
         tmp = f"{path}.tmp"
         with open(tmp, "w") as f:
@@ -847,6 +986,14 @@ class GuaranteeAuditor:
                             "rej_true", "judged_accepted", "auto_accepted",
                             "auto_rejected", "audited", "violations")})
                     self._cascades[acct.fingerprint] = acct
+                    n += 1
+                for e in doc.get("block_joins", ()):
+                    acct = _BlockAccount(**{
+                        k: e[k] for k in (
+                            "operator", "fingerprint", "template",
+                            "match_token", "agreement_target", "n", "agree",
+                            "pairs_seen", "audited", "violations")})
+                    self._blocks[acct.fingerprint] = acct
                     n += 1
                 for e in doc.get("searches", ()):
                     acct = _SearchAccount(**{

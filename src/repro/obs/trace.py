@@ -108,7 +108,9 @@ _NOOP_CM = _NoopCM()
 # attribute keys whose values are summed when aggregating spans
 _COUNTER_KEYS = ("oracle_calls", "proxy_calls", "embed_calls",
                  "compare_calls", "generate_calls", "cache_hits",
-                 "scanned_bytes")
+                 "scanned_bytes", "candidate_pairs",
+                 "pairs_pruned_by_inference", "block_prompts",
+                 "block_fallbacks")
 
 
 class Tracer:

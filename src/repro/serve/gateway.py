@@ -392,6 +392,9 @@ class Gateway:
             # ran single-partition)
             self.metrics.on_fragments(executor.fragments_run,
                                       executor.partitioned_ops)
+            for entry in sess.stats_log:
+                if isinstance(entry, dict) and "candidate_pairs" in entry:
+                    self.metrics.on_join_stats(entry)
             replans = getattr(executor, "replans", ())
             if replans:
                 self.metrics.on_replans(len(replans))

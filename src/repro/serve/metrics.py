@@ -101,6 +101,11 @@ class GatewayMetrics:
         self.fragments_run = 0    # partition fragments executed
         self.partitioned_ops = 0  # operators that ran fragment-parallel
         self.replans = 0          # mid-query re-plan decisions (adaptive)
+        # fast-join accounting (block-prompted sem_join path)
+        self.join_candidate_pairs = 0   # pairs surviving IVF blocking
+        self.join_pairs_pruned = 0      # verdicts inferred via transitivity
+        self.join_block_prompts = 0     # multi-pair block prompts issued
+        self.join_block_fallbacks = 0   # blocks that fell back pairwise
         self.violations = 0       # guarantee-audit CI violations (alerts)
         self.violations_by_kind: dict[str, int] = {}
         # O(1)-memory, unbiased over the gateway's whole life (see module
@@ -155,6 +160,18 @@ class GatewayMetrics:
             return
         with self._lock:
             self.replans += n
+
+    def on_join_stats(self, details: dict) -> None:
+        """Per-join roll-up from a session's stats-log entry (the worker
+        scans entries carrying ``candidate_pairs`` after the session
+        resolves — the same collect-on-demand treatment the search and
+        fragment counters get)."""
+        with self._lock:
+            self.join_candidate_pairs += int(details.get("candidate_pairs", 0))
+            self.join_pairs_pruned += \
+                int(details.get("pairs_pruned_by_inference", 0))
+            self.join_block_prompts += int(details.get("block_prompts", 0))
+            self.join_block_fallbacks += int(details.get("block_fallbacks", 0))
 
     def on_fragments(self, n_fragments: int, n_ops: int) -> None:
         """Per-session partition-fragment roll-up (reported by the worker
@@ -230,6 +247,19 @@ class GatewayMetrics:
             registry.counter("repro_gateway_fragments_total",
                              "partition fragments executed"
                              ).set_total(self.fragments_run)
+            registry.counter("repro_join_candidate_pairs_total",
+                             "join pairs surviving the blocking stage"
+                             ).set_total(self.join_candidate_pairs)
+            registry.counter("repro_join_pairs_pruned_total",
+                             "join verdicts inferred via transitivity"
+                             ).set_total(self.join_pairs_pruned)
+            blocks = registry.counter(
+                "repro_join_block_prompts_total",
+                "multi-pair block prompts by outcome", ("outcome",))
+            blocks.set_total(
+                self.join_block_prompts - self.join_block_fallbacks,
+                outcome="ok")
+            blocks.set_total(self.join_block_fallbacks, outcome="fallback")
             stream = registry.counter(
                 "repro_gateway_emissions_total",
                 "continuous-query emissions", ("outcome",))
@@ -316,6 +346,10 @@ class GatewayMetrics:
                 "fragments_run": self.fragments_run,
                 "partitioned_ops": self.partitioned_ops,
                 "replans": self.replans,
+                "join_candidate_pairs": self.join_candidate_pairs,
+                "join_pairs_pruned": self.join_pairs_pruned,
+                "join_block_prompts": self.join_block_prompts,
+                "join_block_fallbacks": self.join_block_fallbacks,
                 "violations": self.violations,
                 "elapsed_s": round(elapsed, 4),
                 "throughput_rps": round(self.completed / elapsed, 4),

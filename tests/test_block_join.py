@@ -1,0 +1,548 @@
+"""Block-prompted semantic joins: blocking, multi-pair oracle prompts, and
+transitivity-based verdict inference.
+
+Covers the contract that verdicts are never silently dropped or misaligned:
+``parse_block_response`` rejects every truncated / miscounted / duplicated
+response outright, ``BlockJudge`` retries then falls back pairwise so each
+pair gets exactly one verdict, and the calibration sample agreement-checks
+block labels against pairwise gold.  End-to-end, ``sem_join_block`` on the
+equivalence entity world must reach the recall target with a fraction of
+the gold bill, ``strategy="cascade"`` must stay bit-identical to the
+historical dispatch, and rule 4b / the adaptive executor / the auditor /
+the metrics plane must all see the new strategy.
+"""
+import dataclasses
+
+import numpy as np
+
+from repro.core.backends import synth
+from repro.core.frame import Session
+from repro.core.langex import Langex, as_langex
+from repro.core.operators.join import sem_join_block
+from repro.core.optimizer import blocks, cascades
+from repro.core.plan import nodes as N
+from repro.core.plan.adaptive import AdaptivePlanExecutor
+from repro.core.plan.optimize import (PlanOptimizer, block_join_cost,
+                                      cascade_join_cost,
+                                      resolve_join_strategy)
+from repro.obs import audit as A
+from repro.serve.metrics import GatewayMetrics
+
+JOIN_LX = "the {mention} refers to the same entity as {entity:right}"
+
+
+def _count_truth(got: np.ndarray, world, left, right):
+    want = {(i, j) for i in range(len(left)) for j in range(len(right))
+            if world.join_truth.get((left[i]["id"], right[j]["id"]))}
+    have = {(i, j) for i, j in zip(*np.nonzero(got))}
+    inter = len(want & have)
+    recall = inter / max(len(want), 1)
+    precision = inter / max(len(have), 1)
+    return recall, precision
+
+
+class _Counting:
+    """Wraps a backend model counting every prompt sent to it."""
+
+    def __init__(self, model):
+        self._m = model
+        self.prompts = 0
+
+    def predicate(self, prompts):
+        self.prompts += len(prompts)
+        return self._m.predicate(prompts)
+
+    def generate(self, prompts):
+        self.prompts += len(prompts)
+        return self._m.generate(prompts)
+
+
+# ---------------------------------------------------------------------------
+# parse_block_response: partial parses are never trusted
+# ---------------------------------------------------------------------------
+
+
+def test_parse_valid_block_response_ordered():
+    got = blocks.parse_block_response("1: YES\n2: NO\n3: YES", 3)
+    assert got == [True, False, True]
+
+
+def test_parse_tolerates_chatter_and_verdict_synonyms():
+    text = ("Sure, here are my verdicts:\n"
+            "1. yes\n2) no match\n3 - TRUE\nHope that helps!")
+    assert blocks.parse_block_response(text, 3) == [True, False, True]
+
+
+def test_parse_rejects_truncated_response():
+    assert blocks.parse_block_response("1: YES\n2: NO", 4) is None
+    assert blocks.parse_block_response("", 2) is None
+    assert blocks.parse_block_response(None, 2) is None
+
+
+def test_parse_rejects_wrong_verdict_count():
+    # over-produced: a verdict for a pair id past the block size
+    assert blocks.parse_block_response("1: YES\n2: NO\n3: NO", 2) is None
+
+
+def test_parse_rejects_duplicate_pair_ids():
+    assert blocks.parse_block_response("1: YES\n1: NO\n2: YES", 3) is None
+
+
+def test_parse_rejects_out_of_range_pair_id():
+    assert blocks.parse_block_response("0: YES\n1: NO", 2) is None
+    assert blocks.parse_block_response("1: YES\n7: NO", 2) is None
+
+
+def test_parse_unparseable_verdict_lines_mean_miscount():
+    # the verdict line itself is garbage -> treated as missing -> None
+    assert blocks.parse_block_response("1: MAYBE\n2: NO", 2) is None
+
+
+# ---------------------------------------------------------------------------
+# BlockJudge: validate-retry-fallback, verdicts never dropped or misaligned
+# ---------------------------------------------------------------------------
+
+
+class _StubOracle:
+    """Pairwise truth from a function; block responses from a script
+    (one entry per generate() *wave*, each applied to all prompts)."""
+
+    def __init__(self, truth_fn, block_script):
+        self.truth = truth_fn
+        self.script = list(block_script)
+        self.generate_prompts = 0
+        self.predicate_prompts = 0
+
+    def generate(self, prompts):
+        self.generate_prompts += len(prompts)
+        mode = self.script.pop(0) if self.script else "garbage"
+        out = []
+        for p in prompts:
+            n = sum(1 for ln in p.splitlines()
+                    if ln.strip() and ln.strip()[0].isdigit()
+                    and "." in ln.split()[0])
+            if mode == "garbage":
+                out.append("I cannot answer that.")
+            elif mode == "truncated":
+                out.append("\n".join(f"{k}: YES" for k in range(1, n)))
+            else:  # "valid": all YES
+                out.append("\n".join(f"{k}: YES" for k in range(1, n + 1)))
+        return out
+
+    def predicate(self, prompts):
+        self.predicate_prompts += len(prompts)
+        v = np.asarray([self.truth(p) for p in prompts], bool)
+        return v, v.astype(float)
+
+
+def _mk_judge(oracle, n=10, block_size=4):
+    left = [{"a": f"L{i}"} for i in range(n)]
+    right = [{"b": f"R{j}"} for j in range(n)]
+    lx = as_langex("{a} matches {b:right}")
+    return blocks.BlockJudge(
+        oracle, lx, left, right,
+        lambda prs: [f"pair:{i},{j}" for i, j in prs], block_size=block_size)
+
+
+def test_block_judge_fallback_judges_every_pair_pairwise():
+    truth = lambda p: int(p.split(":")[1].split(",")[0]) % 2 == 0
+    oracle = _StubOracle(truth, ["garbage", "garbage"])
+    judge = _mk_judge(oracle)
+    pairs = [(i, i) for i in range(10)]
+    got = judge.judge_pairs(pairs)
+    want = np.asarray([i % 2 == 0 for i in range(10)])
+    assert np.array_equal(got, want)       # aligned, none dropped
+    assert judge.stats.block_fallbacks == 3          # ceil(10/4) blocks
+    assert judge.stats.pairs_fallback_judged == 10
+    assert judge.stats.pairs_block_judged == 0
+    assert judge.stats.block_retries == 3  # one strict retry wave
+    assert oracle.predicate_prompts == 10
+
+
+def test_block_judge_strict_retry_recovers_without_fallback():
+    oracle = _StubOracle(lambda p: False, ["truncated", "valid"])
+    judge = _mk_judge(oracle, n=8, block_size=4)
+    got = judge.judge_pairs([(i, i) for i in range(8)])
+    assert got.all()                       # the retried block verdicts land
+    assert judge.stats.block_retries == 2
+    assert judge.stats.block_fallbacks == 0
+    assert judge.stats.pairs_block_judged == 8
+    assert oracle.predicate_prompts == 0
+
+
+def test_block_judge_clean_parse_single_wave():
+    oracle = _StubOracle(lambda p: True, ["valid"])
+    judge = _mk_judge(oracle, n=8, block_size=4)
+    got = judge.judge_pairs([(i, i) for i in range(8)])
+    assert got.all()
+    assert judge.stats.block_prompts == 2
+    assert judge.stats.block_retries == 0
+    assert judge.stats.pairs_block_judged == 8
+
+
+# ---------------------------------------------------------------------------
+# MatchInference: transitivity closure with enemy propagation
+# ---------------------------------------------------------------------------
+
+
+def test_match_inference_positive_transitivity():
+    inf = blocks.MatchInference(3, 2)
+    inf.observe(0, 0, True)       # left0 ~ right0
+    inf.observe(1, 0, True)       # left1 ~ right0  => left0 ~ left1
+    assert inf.implied(0, 0) is True
+    assert inf.implied(1, 0) is True
+    assert inf.implied(2, 0) is None     # never observed
+    assert inf.implied(0, 1) is None
+
+
+def test_match_inference_negative_propagates_through_classes():
+    inf = blocks.MatchInference(3, 2)
+    inf.observe(0, 0, True)
+    inf.observe(1, 0, True)
+    inf.observe(0, 1, False)      # class{l0,l1,r0} disjoint from r1
+    assert inf.implied(1, 1) is False    # inferred through the class
+    assert inf.resolve(1, 1) is False
+    assert inf.inferred == 1
+    assert inf.n_classes() >= 1
+
+
+def test_detect_equivalence_accepts_consistent_classes():
+    pairs = [(0, 0), (1, 0), (0, 1), (1, 1), (2, 0), (2, 1)]
+    labels = [True, True, True, True, False, False]
+    assert blocks.detect_equivalence(pairs, labels) is True
+
+
+def test_detect_equivalence_rejects_transitivity_violation():
+    # positives say l0~r0 and l1~r0 (so l0~l1), but (l1, r1) is negative
+    # while (l0, r1) is positive: the closure implies True for a labeled
+    # negative -> not an equivalence
+    pairs = [(0, 0), (1, 0), (0, 1), (1, 1)]
+    labels = [True, True, True, False]
+    assert blocks.detect_equivalence(pairs, labels) is False
+
+
+def test_detect_equivalence_needs_overlapping_evidence():
+    # disjoint pairs: nothing overlaps, no structure to test
+    pairs = [(0, 0), (1, 1), (2, 2), (3, 3), (4, 4)]
+    labels = [True, True, True, True, True]
+    assert blocks.detect_equivalence(pairs, labels) is False
+
+
+# ---------------------------------------------------------------------------
+# block-labeled calibration with pairwise agreement checks
+# ---------------------------------------------------------------------------
+
+
+def test_block_labeled_sample_rejudges_disagreeing_blocks():
+    truth = lambda p: "pair:0," in p or p.startswith("pair:2")
+
+    class _Inverted(_StubOracle):
+        def generate(self, prompts):
+            self.generate_prompts += len(prompts)
+            out = []
+            for p in prompts:
+                lines = [ln for ln in p.splitlines()
+                         if ln.strip() and ln.strip()[0].isdigit()
+                         and "." in ln.split()[0]]
+                # valid format, inverted verdicts: all NO where truth varies
+                out.append("\n".join(f"{k}: NO"
+                                     for k in range(1, len(lines) + 1)))
+            return out
+
+    oracle = _Inverted(truth, [])
+    judge = _mk_judge(oracle, n=8, block_size=4)
+    pairs = [(0, j) for j in range(4)] + [(1, j) for j in range(4)]
+    gold = lambda prs: np.asarray([truth(f"pair:{i},{j}") for i, j in prs],
+                                  bool)
+    cal = cascades.block_labeled_sample(pairs, judge, gold,
+                                        rng=np.random.default_rng(0),
+                                        agreement_floor=0.95)
+    # the first block (left row 0: all true) disagrees with the inverted
+    # block oracle and is fully re-judged pairwise
+    assert cal.blocks_rejudged >= 1
+    want = np.asarray([truth(f"pair:{i},{j}") for i, j in pairs], bool)
+    assert np.array_equal(np.asarray(cal.labels, bool), want)
+    assert cal.checked > 0 and cal.agreement < 1.0
+
+
+def test_block_labeled_sample_trusts_agreeing_blocks():
+    oracle = _StubOracle(lambda p: True, ["valid", "valid"])
+    judge = _mk_judge(oracle, n=8, block_size=4)
+    pairs = [(i, i) for i in range(8)]
+    cal = cascades.block_labeled_sample(
+        pairs, judge, lambda prs: np.ones(len(prs), bool),
+        rng=np.random.default_rng(0))
+    assert cal.blocks_rejudged == 0
+    assert cal.agreement == 1.0
+    assert np.asarray(cal.labels, bool).all()
+
+
+# ---------------------------------------------------------------------------
+# sem_join_block end-to-end on the equivalence entity world
+# ---------------------------------------------------------------------------
+
+
+def test_sem_join_block_recall_with_fraction_of_gold_bill():
+    left, right, world, oracle, _, emb = synth.make_entity_world(
+        48, 30, 10, seed=5)
+    counted = _Counting(oracle)
+    mask, st = sem_join_block(left, right, JOIN_LX, counted, emb,
+                              recall_target=0.9, precision_target=0.9,
+                              sample_size=80, seed=3)
+    recall, precision = _count_truth(mask, world, left, right)
+    assert recall >= 0.8, f"recall {recall:.3f} vs target 0.9 (delta 0.2)"
+    assert precision >= 0.7, f"precision {precision:.3f}"
+    assert counted.prompts < 48 * 30 / 2, \
+        f"{counted.prompts} prompts is no win over gold {48 * 30}"
+    assert st["strategy"] == "block"
+    assert st["candidate_pairs"] < 48 * 30
+    assert st["equivalence"] is True     # detected from the calibration set
+    assert st["block_prompts"] >= 1
+    assert "pairs_pruned_by_inference" in st
+
+
+def test_sem_join_block_empty_sides():
+    left, right, world, oracle, _, emb = synth.make_entity_world(
+        4, 4, 2, seed=1)
+    mask, st = sem_join_block([], right, JOIN_LX, oracle, emb)
+    assert mask.shape == (0, 4) and st["candidate_pairs"] == 0
+    mask, st = sem_join_block(left, [], JOIN_LX, oracle, emb)
+    assert mask.shape == (4, 0) and st["candidate_pairs"] == 0
+
+
+def test_sem_join_block_respects_declared_equivalence():
+    left, right, world, oracle, _, emb = synth.make_entity_world(
+        24, 16, 6, seed=7)
+    lx = Langex(JOIN_LX, equivalence=True)
+    mask, st = sem_join_block(left, right, lx, oracle, emb,
+                              sample_size=60, seed=2)
+    assert st["equivalence"] is True
+
+
+# ---------------------------------------------------------------------------
+# dispatch: strategy="cascade" bit-identical to the historical path
+# ---------------------------------------------------------------------------
+
+
+def _entity_session(world, seed=0):
+    return Session(oracle=synth.SimulatedModel(world, "oracle"),
+                   embedder=synth.SimulatedEmbedder(world),
+                   sample_size=60, seed=seed)
+
+
+def test_strategy_cascade_identical_to_default_dispatch():
+    from repro.core.frame import SemFrame
+    left, right, world, *_ = synth.make_entity_world(20, 12, 5, seed=9)
+    strip = lambda st: {k: v for k, v in st.items() if k != "wall_s"}
+    outs, logs = [], []
+    for strategy in (None, "cascade"):
+        log = []
+        sf = SemFrame(left, _entity_session(world), log)
+        out = sf.sem_join(right, JOIN_LX, recall_target=0.9,
+                          precision_target=0.9, strategy=strategy)
+        outs.append(out.records)
+        logs.append([strip(s) for s in log])
+    assert outs[0] == outs[1]
+    assert logs[0] == logs[1]
+
+
+def test_strategy_block_through_frame_and_plan_label():
+    from repro.core.frame import SemFrame
+    left, right, world, *_ = synth.make_entity_world(32, 20, 8, seed=4)
+    log = []
+    sf = SemFrame(left, _entity_session(world), log)
+    out = sf.sem_join(right, JOIN_LX, recall_target=0.9, strategy="block")
+    assert out.records                    # matches survive
+    st = next(s for s in log if s.get("operator") == "sem_join_block")
+    assert st["strategy"] == "block" and st["candidate_pairs"] > 0
+    node = N.Join(N.Scan(left), N.Scan(right), JOIN_LX, strategy="block")
+    assert "Join[block]" in node.label()
+
+
+# ---------------------------------------------------------------------------
+# optimizer rule 4b + the adaptive re-choice
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_join_strategy_cost_crossover():
+    assert resolve_join_strategy(200, 200) == "block"
+    assert resolve_join_strategy(5, 5) == "cascade"
+    assert block_join_cost(200, 200) < cascade_join_cost(200, 200)
+    assert cascade_join_cost(5, 5) < block_join_cost(5, 5)
+
+
+def test_optimizer_chooses_join_strategy_for_auto():
+    left, right, world, *_ = synth.make_entity_world(120, 80, 10, seed=2)
+    sess = _entity_session(world)
+    plan = N.Join(N.Scan(left), N.Scan(right), JOIN_LX,
+                  recall_target=0.9, strategy="auto")
+    opt = PlanOptimizer(sess)
+    out = opt.optimize(plan)
+    join = next(n for n in _iter_nodes(out) if isinstance(n, N.Join))
+    assert join.strategy == "block"       # 9600 pairs: blocking wins
+    assert join.strategy_auto is True
+    assert any(r.rule == "choose_join_strategy" for r in opt.applied)
+
+
+def test_optimizer_leaves_pinned_strategy_alone():
+    left, right, world, *_ = synth.make_entity_world(120, 80, 10, seed=2)
+    plan = N.Join(N.Scan(left), N.Scan(right), JOIN_LX,
+                  recall_target=0.9, strategy="cascade")
+    opt = PlanOptimizer(_entity_session(world))
+    out = opt.optimize(plan)
+    join = next(n for n in _iter_nodes(out) if isinstance(n, N.Join))
+    assert join.strategy == "cascade" and join.strategy_auto is False
+    assert not any(r.rule == "choose_join_strategy" for r in opt.applied)
+
+
+def _iter_nodes(node):
+    yield node
+    for c in node.children():
+        yield from _iter_nodes(c)
+
+
+def test_adaptive_executor_switches_join_strategy_on_drift():
+    big_l, big_r, world, *_ = synth.make_entity_world(200, 150, 12, seed=6)
+    sess = _entity_session(world)
+    log = []
+    ex = AdaptivePlanExecutor(sess, stats_log=log, oracle=sess.oracle,
+                              embedder=sess.embedder)
+    # the optimizer priced the full scans (200x150 -> block), but upstream
+    # filtering left a tiny grid at runtime: the adaptive executor re-prices
+    # and switches back to the cascade before judging
+    node = N.Join(N.Scan(big_l), N.Scan(big_r), JOIN_LX,
+                  recall_target=0.9, strategy="block", strategy_auto=True)
+    mask, st = ex._join_dispatch(node, big_l[:10], big_r[:8])
+    assert any(e.kind == "switch_join_strategy" for e in ex.replans)
+    assert st["operator"] == "sem_join"   # the cascade path ran
+    # a user-pinned strategy never switches
+    ex2 = AdaptivePlanExecutor(sess, stats_log=[], oracle=sess.oracle,
+                               embedder=sess.embedder)
+    pinned = dataclasses.replace(node, strategy_auto=False)
+    _, st2 = ex2._join_dispatch(pinned, big_l[:10], big_r[:8])
+    assert not ex2.replans and st2["operator"] == "sem_join_block"
+
+
+# ---------------------------------------------------------------------------
+# guarantee auditing: block verdicts re-judged pairwise
+# ---------------------------------------------------------------------------
+
+
+def test_auditor_checks_block_verdicts_and_fires_on_disagreement():
+    left, right, world, oracle, *_ = synth.make_entity_world(24, 16, 6,
+                                                             seed=8)
+    from repro.core.operators.join import _pair_prompts
+    lx = as_langex(JOIN_LX)
+    pairs = [(i, j) for i in range(24) for j in range(16)][:64]
+    truth = np.asarray([bool(world.join_truth.get(
+        (left[i]["id"], right[j]["id"]))) for i, j in pairs])
+    events = []
+    aud = A.GuaranteeAuditor(
+        oracle, policy=A.AuditPolicy(sample_fraction=1.0, min_samples=8,
+                                     budget_per_window=512, seed=1),
+        on_violation=events.append)
+    try:
+        with A.activate_ctx(aud):
+            # inverted block verdicts: agreement collapses, the CI must fire
+            n = A.emit_block_join(
+                "Join", lx.template, pairs, (~truth).tolist(),
+                lambda sel: _pair_prompts(lx, left, right,
+                                          [pairs[int(f)] for f in sel]),
+                agreement_target=0.9)
+        assert n > 0
+        aud.drain()
+        rep = aud.report()
+        blk = next(b for b in rep["block_joins"])
+        assert blk["pairs_seen"] == 64 and blk["audited"] > 0
+        assert blk["violations"] >= 1
+        assert any(e.kind == "block_agreement" for e in events)
+    finally:
+        aud.close()
+
+
+def test_auditor_block_join_passes_on_agreement():
+    left, right, world, oracle, *_ = synth.make_entity_world(24, 16, 6,
+                                                             seed=8)
+    from repro.core.operators.join import _pair_prompts
+    lx = as_langex(JOIN_LX)
+    pairs = [(i, j) for i in range(24) for j in range(16)][:64]
+    truth = np.asarray([bool(world.join_truth.get(
+        (left[i]["id"], right[j]["id"]))) for i, j in pairs])
+    events = []
+    aud = A.GuaranteeAuditor(
+        oracle, policy=A.AuditPolicy(sample_fraction=1.0, min_samples=8,
+                                     budget_per_window=512, seed=1),
+        on_violation=events.append)
+    try:
+        with A.activate_ctx(aud):
+            A.emit_block_join(
+                "Join", lx.template, pairs, truth.tolist(),
+                lambda sel: _pair_prompts(lx, left, right,
+                                          [pairs[int(f)] for f in sel]),
+                agreement_target=0.9)
+        aud.drain()
+        blk = aud.report()["block_joins"][0]
+        assert blk["violations"] == 0
+        assert blk["agreement"]["point"] == 1.0
+        assert not events
+    finally:
+        aud.close()
+
+
+def test_emit_block_join_noop_without_auditor():
+    assert A.emit_block_join("Join", "t", [(0, 0)], [True],
+                             lambda s: ["p"], agreement_target=0.9) == 0
+
+
+# ---------------------------------------------------------------------------
+# metrics + observability plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_gateway_metrics_join_series():
+    from repro.obs.metrics import MetricsRegistry
+    m = GatewayMetrics()
+    m.on_join_stats({"candidate_pairs": 120, "pairs_pruned_by_inference": 30,
+                     "block_prompts": 12, "block_fallbacks": 2})
+    m.on_join_stats({"candidate_pairs": 80, "block_prompts": 5})
+    reg = MetricsRegistry()
+    m.collect(reg)
+    text = reg.render()
+    assert "repro_join_candidate_pairs_total 200" in text
+    assert "repro_join_pairs_pruned_total 30" in text
+    assert 'repro_join_block_prompts_total{outcome="ok"} 15' in text
+    assert 'repro_join_block_prompts_total{outcome="fallback"} 2' in text
+    snap = m.snapshot()
+    assert snap["join_candidate_pairs"] == 200
+    assert snap["join_block_prompts"] == 17
+
+
+def test_trace_and_analyze_aggregate_join_counters():
+    from repro.obs.analyze import _OBS_COUNTERS
+    from repro.obs.trace import _COUNTER_KEYS
+    for k in ("candidate_pairs", "pairs_pruned_by_inference",
+              "block_prompts", "block_fallbacks"):
+        assert k in _COUNTER_KEYS
+        assert k in _OBS_COUNTERS
+
+
+def test_lazy_gold_join_batches_are_row_major():
+    """The lazy pair generator must preserve the eager row-major prompt
+    order (bit-identical gold joins across the refactor)."""
+    from repro.core.operators.join import sem_join_gold
+    left, right, world, oracle, *_ = synth.make_entity_world(7, 5, 3, seed=3)
+    seen = []
+
+    class _Spy(_Counting):
+        def predicate(self, prompts):
+            seen.extend(prompts)
+            return super().predicate(prompts)
+
+    mask, _ = sem_join_gold(left, right, JOIN_LX, _Spy(oracle), batch=11)
+    lx = as_langex(JOIN_LX)
+    from repro.core.operators.filter import predicate_prompt
+    want = [predicate_prompt(lx, left[i], right[j])
+            for i in range(7) for j in range(5)]
+    assert seen == want
+    recall, precision = _count_truth(mask, world, left, right)
+    assert recall == 1.0 and precision == 1.0
